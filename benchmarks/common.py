@@ -1,0 +1,106 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Scaled-down experiment grid (graphs ~100-1000x smaller than the paper,
+time model documented in repro.gnn.train.TimeModel); every module
+reports the paper's metric for its figure/table and a one-line check
+against the paper's qualitative claim.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import LLMAgent, make_backend, make_classifier
+from repro.gnn import DistributedTrainer
+from repro.gnn.train import collect_traces
+from repro.graph import generate, partition_graph
+
+SCALE = 0.12
+EPOCHS = 10
+BATCH = 16
+
+
+@functools.lru_cache(maxsize=None)
+def parts_for(dataset: str, num_parts: int = 4, seed: int = 0):
+    g = generate(dataset, seed=seed, scale=SCALE)
+    return partition_graph(g, num_parts)
+
+
+def agents_for(backend: str, n: int):
+    return [LLMAgent(make_backend(backend), None) for _ in range(n)]
+
+
+def run_variant(
+    dataset: str,
+    variant: str,
+    *,
+    backend: str = "gemma3-4b",
+    classifier=None,
+    buffer_frac: float = 0.25,
+    num_parts: int = 4,
+    batch_size: int = BATCH,
+    epochs: int = EPOCHS,
+    mode: str = "async",
+    interval: int = 32,
+    warm_start: bool = True,
+    seed: int = 0,
+):
+    parts = parts_for(dataset, num_parts, seed)
+    deciders = None
+    if variant == "rudder":
+        deciders = (
+            [classifier] if classifier is not None else agents_for(backend, num_parts)
+        )
+    tr = DistributedTrainer(
+        parts,
+        variant=variant,
+        deciders=deciders,
+        buffer_frac=buffer_frac,
+        batch_size=batch_size,
+        epochs=epochs,
+        mode=mode,
+        interval=interval,
+        warm_start=warm_start,
+        train_model=False,
+        seed=seed,
+    )
+    result = tr.run()
+    return tr, result
+
+
+@functools.lru_cache(maxsize=None)
+def _trace_bank(datasets: tuple = ("products", "papers", "orkut")):
+    """Offline trace collection across datasets, buffer sizes and seeds
+    (§4.4: 'across several datasets, partition configurations, and
+    buffer sizes'). This is the expensive offline component of Eq. (1).
+    yelp/arxiv are deliberately EXCLUDED — they are the paper's unseen
+    test sets (Fig. 18/19)."""
+    Xs, ys = [], []
+    for dataset in datasets:
+        for frac in (0.05, 0.25):
+            for seed in (0, 1):
+                parts = parts_for(dataset, 4, seed)
+                X, y = collect_traces(
+                    parts, buffer_frac=frac, epochs=3, batch_size=BATCH, seed=seed
+                )
+                Xs.append(X)
+                ys.append(y)
+    return np.concatenate(Xs), np.concatenate(ys)
+
+
+def trained_classifier(name: str, seed: int = 1, **kw):
+    X, y = _trace_bank()
+    return make_classifier(name, seed=seed, **kw).fit(X, y)
+
+
+def emit(rows: list[dict], name: str) -> None:
+    for r in rows:
+        cells = " ".join(f"{k}={v}" for k, v in r.items())
+        print(f"[{name}] {cells}")
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

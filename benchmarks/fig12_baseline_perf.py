@@ -1,0 +1,53 @@
+"""Fig. 12 — mean epoch time (lower better) and %-Hits (higher better)
+across datasets, trainer counts, and 5%/25% persistent buffers.
+
+Paper claims: baseline DistDGL is ~10-50% slower than prefetching
+variants; DistDGL+Rudder matches or beats DistDGL+fixed; small-medium
+graphs gain ~30% hits with 25% buffers vs 5%.
+"""
+
+import numpy as np
+
+from .common import csv_line, emit, run_variant
+
+
+def run(datasets=("products", "reddit", "orkut"), trainer_counts=(4, 8)):
+    rows = []
+    for ds in datasets:
+        for p in trainer_counts:
+            for frac in (0.05, 0.25):
+                _, base = run_variant(ds, "distdgl", num_parts=p, buffer_frac=frac)
+                _, fixed = run_variant(ds, "fixed", num_parts=p, buffer_frac=frac)
+                _, rud = run_variant(ds, "rudder", num_parts=p, buffer_frac=frac)
+                rows.append(
+                    {
+                        "dataset": ds,
+                        "trainers": p,
+                        "buffer": frac,
+                        "t_distdgl": round(base.mean_epoch_time, 3),
+                        "t_fixed": round(fixed.mean_epoch_time, 3),
+                        "t_rudder": round(rud.mean_epoch_time, 3),
+                        "hits_fixed": round(fixed.mean_pct_hits, 1),
+                        "hits_rudder": round(rud.mean_pct_hits, 1),
+                    }
+                )
+    emit(rows, "fig12")
+    imp_base = [
+        100 * (r["t_distdgl"] - r["t_rudder"]) / r["t_distdgl"] for r in rows
+    ]
+    imp_fixed = [
+        100 * (r["t_fixed"] - r["t_rudder"]) / r["t_fixed"] for r in rows
+    ]
+    print(
+        csv_line(
+            "fig12_baseline_perf",
+            float(np.mean([r["t_rudder"] for r in rows]) * 1e6),
+            f"median_improvement_vs_base={np.median(imp_base):.0f}%;"
+            f"vs_fixed={np.median(imp_fixed):.0f}%",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 14 — 99th-percentile communication volume per minibatch for
+5%/25% buffers (lower is better).
+
+Paper claim: 5% buffers fetch up to ~50% of sampled nodes; larger
+buffers cut the p99 fetch volume substantially.
+"""
+
+import numpy as np
+
+from .common import csv_line, run_variant
+
+
+def run():
+    out = {}
+    for frac in (0.05, 0.25):
+        tr, r = run_variant("products", "rudder", buffer_frac=frac)
+        warm = tr.mb_per_epoch  # exclude the cold-start epoch
+        remote = np.array(
+            [u for log in r.logs for u in log.unique_remote[warm:]], dtype=float
+        )
+        comm = np.array(
+            [c for log in r.logs for c in log.comm_missed[warm:]], dtype=float
+        )
+        pct = 100 * comm / np.maximum(remote, 1)
+        out[frac] = float(np.percentile(pct, 99))
+    print(
+        csv_line(
+            "fig14_comm_volume",
+            0.0,
+            f"p99_pct_comm_5={out[0.05]:.0f}%;p99_pct_comm_25={out[0.25]:.0f}%",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Fig. 16 — performance/persistence trade-off across buffer capacities
+(5-25%) on products.
+
+Paper claim: smaller buffers trade %-Hits for 2-4x lower epoch time
+potential (communication-dominant regime); Rudder beats fixed at every
+capacity.
+"""
+
+import numpy as np
+
+from .common import csv_line, emit, run_variant
+
+
+def run():
+    rows = []
+    for frac in (0.05, 0.10, 0.15, 0.20, 0.25):
+        _, fixed = run_variant("products", "fixed", buffer_frac=frac)
+        _, rud = run_variant("products", "rudder", buffer_frac=frac)
+        rows.append(
+            {
+                "buffer": frac,
+                "t_fixed": round(fixed.mean_epoch_time, 3),
+                "t_rudder": round(rud.mean_epoch_time, 3),
+                "comm_rudder": rud.comm_per_minibatch,
+                "hits_rudder": round(rud.mean_pct_hits, 1),
+                "imp_vs_fixed_pct": round(
+                    100 * (fixed.mean_epoch_time - rud.mean_epoch_time)
+                    / fixed.mean_epoch_time,
+                    1,
+                ),
+            }
+        )
+    emit(rows, "fig16")
+    wins = sum(r["t_rudder"] <= r["t_fixed"] * 1.02 for r in rows)
+    print(
+        csv_line(
+            "fig16_tradeoff",
+            float(np.mean([r["t_rudder"] for r in rows]) * 1e6),
+            f"rudder_wins={wins}/{len(rows)};"
+            f"hits_range={rows[0]['hits_rudder']}-{rows[-1]['hits_rudder']}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Fig. 18/19 — performance on *unseen* datasets (yelp, arxiv) and batch
+sizes: ICL agent vs classifiers pretrained on other datasets (with and
+without online fine-tuning).
+
+Paper claims (Corollary 2.2 / Remark 3): classifiers degrade under the
+distribution shift (smaller batches, unseen graphs) while the zero-shot
+agent holds; periodic fine-tuning recovers some accuracy at extra cost.
+"""
+
+import numpy as np
+
+from .common import csv_line, emit, run_variant, trained_classifier
+
+
+def run():
+    # Classifiers pretrained on products traces at batch 16 ...
+    mlp = trained_classifier("mlp")
+    mlp_ft = trained_classifier("mlp", finetune_every=16)
+    rows = []
+    for ds in ("yelp", "arxiv"):
+        for batch in (8, 32):  # ... evaluated at shifted batch sizes
+            _, base = run_variant(ds, "distdgl", batch_size=batch)
+            _, llm = run_variant(ds, "rudder", batch_size=batch)
+            _, ml = run_variant(ds, "rudder", classifier=mlp, batch_size=batch)
+            _, mlft = run_variant(ds, "rudder", classifier=mlp_ft, batch_size=batch)
+            rows.append(
+                {
+                    "dataset": ds,
+                    "batch": batch,
+                    "hits_llm": round(llm.mean_pct_hits, 1),
+                    "hits_mlp": round(ml.mean_pct_hits, 1),
+                    "hits_mlp_ft": round(mlft.mean_pct_hits, 1),
+                    "t_base": round(base.mean_epoch_time, 2),
+                    "t_llm": round(llm.mean_epoch_time, 2),
+                    "t_mlp": round(ml.mean_epoch_time, 2),
+                }
+            )
+    emit(rows, "fig18")
+    llm_mean = np.mean([r["hits_llm"] for r in rows])
+    mlp_mean = np.mean([r["hits_mlp"] for r in rows])
+    print(
+        csv_line(
+            "fig18_unseen",
+            0.0,
+            f"unseen_hits_llm={llm_mean:.1f};mlp={mlp_mean:.1f};"
+            f"llm_robust={llm_mean >= mlp_mean}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

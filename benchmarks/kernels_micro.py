@@ -1,0 +1,57 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU — the
+numbers are correctness-path timings, not TPU performance; real-TPU
+blocks are sized in the kernel files)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import csv_line
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    table = jax.random.normal(jax.random.PRNGKey(0), (4096, 512), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (256,), 0, 4096)
+    us = _time(lambda: ops.gather_rows(table, idx))
+    print(csv_line("kernel_gather_rows_4096x512_g256", us, "interpret=True"))
+
+    idx2 = jax.random.randint(jax.random.PRNGKey(2), (64, 10), 0, 4096)
+    us = _time(lambda: ops.gather_mean(table, idx2))
+    print(csv_line("kernel_gather_mean_b64_k10", us, "interpret=True"))
+
+    data = jax.random.normal(jax.random.PRNGKey(3), (64 * 25, 256), jnp.float32)
+    us = _time(lambda: ops.segment_sum_equal(data, 25))
+    print(csv_line("kernel_segment_sum_s64_k25", us, "interpret=True"))
+
+    scores = jax.random.uniform(jax.random.PRNGKey(4), (65536,), maxval=3.0)
+    acc = jax.random.bernoulli(jax.random.PRNGKey(5), 0.4, (65536,))
+    us = _time(lambda: ops.score_update(scores, acc))
+    print(csv_line("kernel_score_update_64k", us, "interpret=True"))
+
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q_lat = jax.random.normal(ks[0], (2, 16, 128)) * 0.3
+    q_rope = jax.random.normal(ks[1], (2, 16, 64)) * 0.3
+    c = jax.random.normal(ks[2], (2, 1024, 128)) * 0.3
+    kr = jax.random.normal(ks[3], (2, 1024, 64)) * 0.3
+    us = _time(
+        lambda: ops.mla_flash_decode(
+            q_lat, q_rope, c, kr, jnp.int32(1023), scale=1 / 13.86
+        )
+    )
+    print(csv_line("kernel_mla_flash_decode_s1024", us, "interpret=True"))
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Roofline table — renders the dry-run sweep results
+(results_dryrun_single.jsonl / results_dryrun_multi.jsonl at repo root)
+as the EXPERIMENTS.md §Roofline markdown table."""
+
+import json
+import os
+
+from .common import csv_line
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(path):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    return rows
+
+
+def render(rows, title):
+    lines = [f"### {title}", ""]
+    lines.append(
+        "| arch | shape | bottleneck | t_compute (s) | t_memory (s) |"
+        " t_collective (s) | useful FLOPs ratio |"
+    )
+    lines.append("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | **{r['bottleneck']}** |"
+                f" {r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} |"
+                f" {r['t_collective_s']:.3g} | {r['useful_ratio']:.2f} |"
+            )
+        elif r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | n/a (skip) | - | - | - | - |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | FAILED | - | - | - | - |"
+            )
+    return "\n".join(lines)
+
+
+def run():
+    single = load(os.path.join(ROOT, "results_dryrun_single.jsonl"))
+    multi = load(os.path.join(ROOT, "results_dryrun_multi.jsonl"))
+    if single:
+        print(render(single, "Single-pod (data=16, model=16) — 256 chips"))
+    if multi:
+        ok = sum(r["status"] == "ok" for r in multi)
+        print(f"\nMulti-pod: {ok} pairs lower+compile on (2,16,16)=512 chips.")
+    n_ok = sum(r["status"] == "ok" for r in single)
+    n_skip = sum(r["status"] == "skipped" for r in single)
+    n_fail = sum(r["status"] not in ("ok", "skipped") for r in single)
+    print(csv_line("roofline_table", 0.0, f"ok={n_ok};skip={n_skip};fail={n_fail}"))
+    return single, multi
+
+
+if __name__ == "__main__":
+    run()

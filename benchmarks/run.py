@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus per-row [figNN]
+detail lines). Usage::
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run fig03 tab04
+"""
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig01_unique_remotes",
+    "fig03_hits_strategies",
+    "fig12_baseline_perf",
+    "fig13_improvement",
+    "fig14_comm_volume",
+    "fig15_massivegnn",
+    "fig16_tradeoff",
+    "tab02_sync_async",
+    "tab04_pass1",
+    "fig18_unseen",
+    "fig20_trajectory",
+    "tab05_moe_agents",
+    "kernels_micro",
+    "roofline_table",
+]
+
+
+def main() -> int:
+    selected = sys.argv[1:]
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if selected and not any(s in name for s in selected):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep the suite running
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+            failures += 1
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

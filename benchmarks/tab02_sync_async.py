@@ -1,0 +1,84 @@
+"""Table 2 / Fig. 17 — asynchronous vs synchronous evaluations: Pass@1
+%-Hits (agents) / accuracy (classifiers), replacement interval r,
+valid/invalid responses, +ve/-ve decision splits.
+
+Paper claims: sync stalls trainers (up to 25x T_DDP for slow agents) for
+<5% hits gain; Gemma3-4B-class agents give the best Pass@1 with ~100%
+valid JSON; Qwen-persona has long r and low validity; classifiers decide
+every 1-2 minibatches.
+"""
+
+import numpy as np
+
+from repro.core import agent_report
+from repro.core.evaluate import classifier_accuracy
+
+from .common import csv_line, emit, run_variant, trained_classifier
+
+AGENTS = ("gemma3-4b", "gemma3-1b", "llama3.2-3b", "smollm2-360m", "qwen-1.5b")
+CLASSIFIERS = ("mlp", "tabnet", "lr", "rf", "svm", "xgb")
+
+
+def run(dataset="products"):
+    rows = []
+    for mode in ("async", "sync"):
+        for backend in AGENTS:
+            tr, res = run_variant(dataset, "rudder", backend=backend, mode=mode)
+            ctrl = tr.controllers[0]
+            rep = agent_report(ctrl.agent)
+            rows.append(
+                {
+                    "mode": mode,
+                    "model": backend,
+                    "pass@1": round(rep["pass@1"]),
+                    "r": round(ctrl.replacement_interval, 1),
+                    "valid": round(rep["valid_pct"]),
+                    "pos": round(rep["positive_pct"]),
+                    "epoch_t": round(res.mean_epoch_time, 2),
+                }
+            )
+        for name in CLASSIFIERS:
+            clf = trained_classifier(name)
+            tr, res = run_variant(dataset, "rudder", classifier=clf, mode=mode)
+            ctrl = tr.controllers[0]
+            # accuracy vs S'-labels over the run
+            log = res.logs[0]
+            import numpy as np
+            from repro.core.classifiers import label_traces
+
+            labels = label_traces(
+                np.array(log.pct_hits), np.array(log.comm_volume, float),
+                np.array(log.replaced, float),
+            )
+            acc = classifier_accuracy(log.decisions, list(labels.astype(bool)))
+            rows.append(
+                {
+                    "mode": mode,
+                    "model": name,
+                    "pass@1": round(acc.pass_rate),
+                    "r": round(ctrl.replacement_interval, 1),
+                    "valid": "-",
+                    "pos": round(100 * np.mean(log.decisions)),
+                    "epoch_t": round(res.mean_epoch_time, 2),
+                }
+            )
+    emit(rows, "tab02")
+    async_best = max(
+        (r for r in rows if r["mode"] == "async" and r["model"] in AGENTS),
+        key=lambda r: r["pass@1"],
+    )
+    sync_t = np.mean([r["epoch_t"] for r in rows if r["mode"] == "sync"])
+    async_t = np.mean([r["epoch_t"] for r in rows if r["mode"] == "async"])
+    print(
+        csv_line(
+            "tab02_sync_async",
+            async_t * 1e6,
+            f"best_async_agent={async_best['model']}@{async_best['pass@1']};"
+            f"sync_slowdown={sync_t/async_t:.1f}x",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Table 4 — Pass@1 %-Hits (+95% CI) per model per dataset, async mode.
+
+Paper claim: the Gemma3-4B-class agent scores highest and most stably
+across datasets; small/noisy models trail badly.
+"""
+
+from repro.core import agent_report
+
+from .common import csv_line, emit, run_variant
+
+MODELS = ("gemma3-4b", "gemma3-1b", "llama3.2-3b", "smollm2-360m", "qwen-1.5b")
+DATASETS = ("products", "reddit", "orkut", "friendster")
+
+
+def run():
+    rows = []
+    for ds in DATASETS:
+        for model in MODELS:
+            tr, res = run_variant(ds, "rudder", backend=model)
+            rep = agent_report(tr.controllers[0].agent)
+            lo, hi = rep["pass@1_ci"]
+            rows.append(
+                {
+                    "dataset": ds,
+                    "model": model,
+                    "pass@1": f"{rep['pass@1']:.0f} (-{lo:.0f}/+{hi:.0f})",
+                }
+            )
+    emit(rows, "tab04")
+    # winner count for gemma3-4b
+    wins = 0
+    for ds in DATASETS:
+        best = max(
+            (r for r in rows if r["dataset"] == ds),
+            key=lambda r: float(r["pass@1"].split()[0]),
+        )
+        wins += best["model"] == "gemma3-4b"
+    print(
+        csv_line(
+            "tab04_pass1", 0.0, f"gemma3-4b_best_on={wins}/{len(DATASETS)}_datasets"
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

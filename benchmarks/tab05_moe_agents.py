@@ -1,0 +1,48 @@
+"""Table 5 / Fig. 21 — Mixture-of-Experts LLMs as agents on products.
+
+Paper claim: MoE agents (Mixtral/Granite class) are valid but slow
+(long replacement intervals, replace-biased) and do NOT beat the small
+dense agent — bigger is not better for latency-sensitive control.
+"""
+
+from repro.core import agent_report
+
+from .common import csv_line, emit, run_variant
+
+
+def run():
+    rows = []
+    for backend in ("gemma3-4b", "mixtral-8x7b"):
+        for frac in (0.05, 0.15, 0.25):
+            tr, res = run_variant("products", "rudder", backend=backend,
+                                  buffer_frac=frac)
+            rep = agent_report(tr.controllers[0].agent)
+            rows.append(
+                {
+                    "model": backend,
+                    "buffer": frac,
+                    "pass@1": round(rep["pass@1"]),
+                    "r": round(tr.controllers[0].replacement_interval, 1),
+                    "pos": round(rep["positive_pct"]),
+                    "epoch_t": round(res.mean_epoch_time, 2),
+                }
+            )
+    emit(rows, "tab05")
+    g = [r for r in rows if r["model"] == "gemma3-4b"]
+    m = [r for r in rows if r["model"] == "mixtral-8x7b"]
+    moe_not_better = all(
+        mm["pass@1"] <= gg["pass@1"] + 5 for gg, mm in zip(g, m)
+    )
+    print(
+        csv_line(
+            "tab05_moe_agents",
+            0.0,
+            f"moe_r={m[0]['r']};dense_r={g[0]['r']};"
+            f"moe_does_not_beat_dense={moe_not_better}",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Agent zoo: run every decision backend (the paper's Table 2 lineup)
+through the same workload and print the comparison.
+
+    PYTHONPATH=src python examples/compare_agents.py
+"""
+
+from repro.core import LLMAgent, agent_report, make_backend
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+
+BACKENDS = (
+    "gemma3-4b",
+    "gemma3-1b",
+    "llama3.2-3b",
+    "smollm2-360m",
+    "qwen-1.5b",
+    "mixtral-8x7b",
+)
+
+
+def main():
+    graph = generate("products", seed=0, scale=0.12)
+    parts = partition_graph(graph, 4)
+    print(f"{'backend':16s} {'Pass@1':>7s} {'r':>5s} {'valid%':>7s} "
+          f"{'+ve%':>6s} {'hits':>6s} {'epoch(s)':>9s}")
+    for backend in BACKENDS:
+        agents = [LLMAgent(make_backend(backend), None) for _ in range(4)]
+        tr = DistributedTrainer(
+            parts,
+            variant="rudder",
+            deciders=agents,
+            epochs=8,
+            batch_size=16,
+            buffer_frac=0.25,
+            train_model=False,
+        )
+        res = tr.run()
+        rep = agent_report(agents[0])
+        print(
+            f"{backend:16s} {rep['pass@1']:7.0f} "
+            f"{tr.controllers[0].replacement_interval:5.1f} "
+            f"{rep['valid_pct']:7.0f} {rep['positive_pct']:6.0f} "
+            f"{res.steady_pct_hits:6.1f} {res.mean_epoch_time:9.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

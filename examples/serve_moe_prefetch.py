@@ -1,0 +1,101 @@
+"""Beyond-paper transfer: Rudder's adaptive buffer steering applied to
+MoE *expert prefetching* in LM serving (DESIGN.md §4).
+
+A reduced Phi-3.5-MoE serves batched requests; expert routing statistics
+per decode step stream through the SAME Rudder stack (PersistentBuffer +
+scoring policy + LLM-agent controller) that steers GNN node prefetching.
+The buffer models a local HBM working set of expert shards; hits avoid
+remote expert-weight pulls (all-to-all traffic at full scale).
+
+    PYTHONPATH=src python examples/serve_moe_prefetch.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import LLMAgent, agent_report, make_backend
+from repro.core.buffer import PersistentBuffer
+from repro.core.metrics import GraphMeta, Metrics
+from repro.models import model as M
+from repro.models.moe import _route
+
+
+def main():
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b").with_overrides(
+        moe=get_smoke_config("phi3.5-moe-42b-a6.6b").moe.__class__(
+            num_experts=4, experts_per_token=2, d_ff_expert=128
+        )
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, steps = 8, 60
+    cache = M.init_cache(cfg, B, steps + 4)
+
+    # Rudder stack, re-used verbatim: buffer of (layer, expert) shard ids.
+    n_layers = cfg.num_layers
+    total_shards = n_layers * cfg.moe.num_experts
+    buf = PersistentBuffer(capacity=max(total_shards // 2, 1))
+    agent = LLMAgent(
+        make_backend("gemma3-4b"),
+        GraphMeta("moe-shards", total_shards, 0, total_shards, 0, 1),
+    )
+
+    tok = jnp.ones((B, 1), jnp.int32)
+    hits_hist, fetched_total = [], 0
+    moe_params = params["groups"][-1]  # scanned moe layers
+    for t in range(steps):
+        logits, cache = M.decode_step(cfg, params, cache, tok, jnp.int32(t))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+        # Which experts did this step touch? (per layer, from the router)
+        touched = []
+        x = jnp.ones((B, cfg.d_model)) * 0.01  # routing proxy input
+        for layer in range(n_layers):
+            router = moe_params[f"b{0}"]["ffn"]["router"]
+            router = jax.tree_util.tree_map(lambda r: r, router)[layer % router.shape[0]] if router.ndim == 3 else router
+            _, idx, _ = _route(cfg, router, x)
+            for e in np.unique(np.asarray(idx)):
+                touched.append(layer * cfg.moe.num_experts + int(e))
+        touched = np.unique(np.array(touched, dtype=np.int64))
+
+        hit, _ = buf.lookup(touched)
+        missed = touched[~hit]
+        fetched_total += len(missed)
+        pct = 100.0 * hit.mean() if len(touched) else 100.0
+        hits_hist.append(pct)
+
+        metrics = Metrics(
+            minibatch=t,
+            total_minibatches=steps,
+            epoch=0,
+            total_epochs=1,
+            pct_hits=pct,
+            comm_volume=len(missed),
+            replaced_pct=0.0,
+            buffer_occupancy=buf.occupancy,
+            buffer_capacity=buf.capacity,
+        )
+        decision = agent.step(metrics)
+        buf.end_round()
+        if decision.replace:
+            buf.replace(missed)
+
+    print(
+        f"served {steps} decode steps x {B} requests on "
+        f"{cfg.name} (reduced: {cfg.moe.num_experts} experts/layer)"
+    )
+    print(
+        f"expert-shard hit rate: first10={np.mean(hits_hist[:10]):.0f}% "
+        f"last10={np.mean(hits_hist[-10:]):.0f}% "
+        f"(total shard fetches {fetched_total})"
+    )
+    rep = agent_report(agent)
+    print(
+        f"agent: Pass@1={rep['pass@1']:.0f}, replace/skip "
+        f"{rep['positive_pct']:.0f}/{rep['negative_pct']:.0f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver: real distributed GraphSAGE training with Rudder.
+
+Trains the 2-layer GraphSAGE (fanout {10,25}) with actual JAX
+forward/backward and data-parallel gradient averaging across 4 trainer
+PEs for several hundred steps, with the Rudder agent steering the
+persistent buffer the whole way. Verifies the paper's invariant that
+prefetching never changes the training math (loss identical to the
+no-prefetch baseline under the same seeds).
+
+    PYTHONPATH=src python examples/train_gnn_rudder.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+
+
+def main():
+    graph = generate("arxiv", seed=1, scale=0.25)
+    parts = partition_graph(graph, num_parts=4)
+    print(f"arxiv-like graph: |V|={graph.num_nodes} |E|={graph.num_edges}")
+
+    kw = dict(
+        epochs=12,              # ~300 real train steps across trainers
+        batch_size=24,
+        buffer_frac=0.25,
+        train_model=True,
+        lr=2e-2,
+        seed=3,
+    )
+    t0 = time.time()
+    rudder = DistributedTrainer(
+        parts, variant="rudder", deciders=["gemma3-4b"], **kw
+    ).run()
+    print(
+        f"rudder: {len(rudder.losses)} steps in {time.time()-t0:.1f}s | "
+        f"loss {rudder.losses[0]:.3f} -> {rudder.losses[-1]:.3f} | "
+        f"train-batch acc {rudder.accuracy:.2f} | "
+        f"steady %-Hits {rudder.steady_pct_hits:.1f}"
+    )
+
+    base = DistributedTrainer(parts, variant="distdgl", **kw).run()
+    drift = max(
+        abs(a - b) for a, b in zip(rudder.losses, base.losses)
+    )
+    print(
+        f"no-prefetch baseline loss {base.losses[-1]:.3f}; "
+        f"max per-step |loss diff| vs rudder = {drift:.2e} "
+        f"(prefetching must not alter training math)"
+    )
+    assert drift < 1e-3
+    print(
+        f"communication: rudder {rudder.total_comm} vs baseline "
+        f"{base.total_comm} nodes fetched "
+        f"({100*(base.total_comm-rudder.total_comm)/base.total_comm:.0f}% saved)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Minimal msgpack checkpointing for JAX pytrees.
+
+Leaves are stored as (dtype, shape, bytes); the tree structure is
+reconstructed against a template (same API shape as flax's
+``from_bytes``). Atomic rename so a crashed write never corrupts the
+latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.view(np.uint16).tobytes(),
+        }
+    return {
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _unpack_leaf(d: dict):
+    shape = tuple(d["shape"])
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(shape)
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["data"], d["dtype"]).reshape(shape))
+
+
+def save_checkpoint(path: str, tree) -> None:
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    payload = msgpack.packb([_pack_leaf(l) for l in leaves], use_bin_type=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, template):
+    with open(path, "rb") as f:
+        packed = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(packed) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(packed)} leaves, template has {len(leaves)}"
+        )
+    return treedef.unflatten([_unpack_leaf(d) for d in packed])

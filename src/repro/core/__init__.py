@@ -1,0 +1,36 @@
+"""Rudder core: adaptive prefetching/replacement for distributed GNN training.
+
+The paper's contribution, as a composable module:
+
+* :mod:`repro.core.scoring`     — the what-to-replace scoring policy
+* :mod:`repro.core.buffer`      — the per-trainer persistent buffer
+* :mod:`repro.core.metrics`     — runtime observations shared with agents
+* :mod:`repro.core.prompt`      — structured zero-shot ICL prompts
+* :mod:`repro.core.backends`    — pluggable LLM decision backends
+* :mod:`repro.core.agent`       — MetricsCollector/ContextBuilder/DecisionMaker
+* :mod:`repro.core.classifiers` — offline-trained ML classifier baselines
+* :mod:`repro.core.queues`      — async/sync request-response semantics
+* :mod:`repro.core.controller`  — the evaluation variants
+* :mod:`repro.core.evaluate`    — Pass@1 %-Hits and CI reporting
+"""
+
+from .agent import Decision, LLMAgent
+from .backends import make_backend
+from .buffer import PersistentBuffer
+from .classifiers import make_classifier
+from .controller import make_controller
+from .evaluate import agent_report, pass_at_1
+from .metrics import GraphMeta, Metrics
+
+__all__ = [
+    "Decision",
+    "LLMAgent",
+    "PersistentBuffer",
+    "GraphMeta",
+    "Metrics",
+    "make_backend",
+    "make_classifier",
+    "make_controller",
+    "agent_report",
+    "pass_at_1",
+]

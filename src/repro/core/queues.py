@@ -1,0 +1,116 @@
+"""Request/response queue semantics (paper §4.5, Fig. 11, Algorithm 1).
+
+The paper runs the prefetcher on CPU threads and the inference model in
+a daemon thread, coordinating through shared queues with a pause/notify
+protocol that avoids *stale requests* (a decision computed for obsolete
+metrics). JAX dispatch is synchronous, so we reproduce those semantics
+as a deterministic event-driven model over minibatch time:
+
+* the trainer advances one minibatch per tick;
+* the inference model takes ``latency`` ticks to answer;
+* **asynchronous** (default): the prefetcher polls the response queue
+  (non-blocking); when a decision arrives it is applied, the request
+  queue is cleared of backlog, and the inference thread is notified with
+  fresh metrics — minibatches processed while inference was busy get no
+  decision (the replacement interval r >= 1);
+* **synchronous**: the trainer blocks for every decision — r = 1 and the
+  agent latency lands on the critical path (T_A/C + T_COMM per step).
+
+The same model produces both the decision stream and the per-step time
+accounting used by the §4.5.3 performance model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .metrics import Metrics
+
+
+@dataclass
+class PendingRequest:
+    metrics: Metrics
+    submitted_at: int
+    ready_at: float
+
+
+@dataclass
+class StepOutcome:
+    """What the prefetcher learns at one minibatch tick."""
+
+    decision_available: bool
+    replace: bool
+    decision_for_minibatch: int | None
+    stalled_ticks: float        # trainer stall (sync mode only)
+
+
+class InferencePipe:
+    """Deterministic twin of the daemon-thread + queue protocol."""
+
+    def __init__(
+        self,
+        decide: Callable[[Metrics], bool],
+        latency: float,
+        mode: str = "async",
+    ):
+        if mode not in ("async", "sync"):
+            raise ValueError(f"mode must be 'async' or 'sync', got {mode!r}")
+        self.decide = decide
+        self.latency = float(latency)
+        self.mode = mode
+        self.busy_with: PendingRequest | None = None
+        self.response: tuple[int, bool] | None = None
+        self.decision_gaps: list[int] = []
+        self._last_decision_mb: int | None = None
+
+    def tick(self, now: int, metrics: Metrics) -> StepOutcome:
+        """One minibatch tick: push metrics, poll for a decision."""
+        if self.mode == "sync":
+            # Trainer blocks: request -> inference -> response, every tick.
+            replace = self.decide(metrics)
+            self._note_gap(now)
+            return StepOutcome(
+                decision_available=True,
+                replace=replace,
+                decision_for_minibatch=now,
+                stalled_ticks=self.latency,
+            )
+
+        # --- asynchronous ------------------------------------------------
+        outcome = StepOutcome(False, False, None, 0.0)
+        if self.busy_with is not None and now >= self.busy_with.ready_at:
+            # Decision arrives on the response queue.
+            replace = self.decide(self.busy_with.metrics)
+            outcome = StepOutcome(
+                decision_available=True,
+                replace=replace,
+                decision_for_minibatch=self.busy_with.submitted_at,
+                stalled_ticks=0.0,
+            )
+            self._note_gap(now)
+            self.busy_with = None
+
+        if self.busy_with is None:
+            # Queue cleared of backlog; notify with the *latest* metrics
+            # (minibatches processed while busy never reach the model —
+            # this is what bounds staleness).
+            self.busy_with = PendingRequest(
+                metrics=metrics,
+                submitted_at=now,
+                ready_at=now + max(self.latency, 1e-9),
+            )
+        return outcome
+
+    def _note_gap(self, now: int) -> None:
+        if self._last_decision_mb is not None:
+            self.decision_gaps.append(now - self._last_decision_mb)
+        self._last_decision_mb = now
+
+    @property
+    def replacement_interval(self) -> float:
+        """Mean gap r between consecutive decisions (paper Table 2)."""
+        if not self.decision_gaps:
+            return float("nan")
+        return sum(self.decision_gaps) / len(self.decision_gaps)

@@ -1,0 +1,59 @@
+"""Rudder's scoring policy (paper §2.1, Fig. 4).
+
+Frequency tracking, more aggressive than LFU:
+
+* when a buffered item is **accessed** during the current
+  minibatch-sampling round its score is incremented by ``+1``;
+* items **not accessed** during the round are penalised by ``×0.95``;
+* items whose score falls **below 0.95** are "stale" and are candidates
+  for replacement with recently sampled remote nodes;
+* if there are no stale items, replacement is skipped.
+
+The policy is a pure function over ``(scores, accessed_mask)`` so it has
+a numpy implementation (host control plane — this is how it runs inside
+the prefetcher thread in the paper) and a JAX/Pallas twin used by the
+``kernels/score_update`` hot path for very large buffers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Constants from the paper (§2.1).
+ACCESS_INCREMENT = 1.0
+DECAY_FACTOR = 0.95
+STALE_THRESHOLD = 0.95
+# Score given to a freshly inserted node (first access counts as one hit).
+INITIAL_SCORE = 1.0
+
+
+def update_scores(scores: np.ndarray, accessed: np.ndarray) -> np.ndarray:
+    """One scoring round: ``+1`` where accessed, ``×0.95`` elsewhere."""
+    scores = np.asarray(scores, dtype=np.float32)
+    accessed = np.asarray(accessed, dtype=bool)
+    return np.where(accessed, scores + ACCESS_INCREMENT, scores * DECAY_FACTOR)
+
+
+def stale_mask(scores: np.ndarray, valid: np.ndarray | None = None) -> np.ndarray:
+    """Boolean mask of stale items (score < 0.95)."""
+    mask = np.asarray(scores, dtype=np.float32) < STALE_THRESHOLD
+    if valid is not None:
+        mask = mask & np.asarray(valid, dtype=bool)
+    return mask
+
+
+def rounds_until_stale(score: float) -> int:
+    """How many unaccessed rounds until an item with ``score`` goes stale.
+
+    Useful for napkin math: a node accessed once (score 1.0) survives
+    exactly one idle round (1.0 * 0.95 = 0.95, not < 0.95 ... boundary),
+    then goes stale on the second. LFU would keep it indefinitely.
+    """
+    score = float(score)
+    n = 0
+    while score >= STALE_THRESHOLD:
+        score *= DECAY_FACTOR
+        n += 1
+        if n > 10_000:  # pragma: no cover - defensive
+            break
+    return n

@@ -1,0 +1,5 @@
+"""Deterministic synthetic LM data pipeline."""
+
+from .pipeline import TokenPipeline, make_batch_specs
+
+__all__ = ["TokenPipeline", "make_batch_specs"]

@@ -1,0 +1,14 @@
+"""GNN training substrate (GraphSAGE + distributed trainer)."""
+
+from .sage import SageParams, init_sage, sage_forward, sage_loss
+from .train import DistributedTrainer, RunResult, TimeModel
+
+__all__ = [
+    "SageParams",
+    "init_sage",
+    "sage_forward",
+    "sage_loss",
+    "DistributedTrainer",
+    "RunResult",
+    "TimeModel",
+]

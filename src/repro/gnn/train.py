@@ -1,0 +1,446 @@
+"""Distributed GNN training driver — the paper's evaluation harness.
+
+Runs the three variants of §5 on a partitioned graph:
+
+* ``distdgl``      — no prefetch: every sampled remote node is fetched;
+* ``fixed``        — static prefetch: replacement round every minibatch;
+* ``massivegnn``   — warm-started buffer, fixed replacement interval;
+* ``rudder``       — adaptive replacement via LLM agent / ML classifier
+                     behind the async/sync queue protocol.
+
+What is *exact*: partitioning, sampling, buffer membership/scoring,
+hit/miss sets, remote fetch counts (bytes), decision streams, GNN
+training math (JAX GraphSAGE with data-parallel gradient averaging —
+Rudder never alters sampling or training, so accuracy is unaffected by
+the variant, as the paper states).
+
+What is *modeled*: wall-clock epoch time, via the paper's own §4.5.3
+performance model driven by the exact byte counts:
+
+    async step time = max(T_DDP, T_COMM)          (inference hidden)
+    sync  step time = T_DDP + T_COMM + T_A/C      (inference exposed)
+
+with T_COMM = alpha + fetched_bytes / link_bw per trainer and the step
+synchronised across trainers by the gradient all-reduce (max over PEs).
+Constants are documented in :class:`TimeModel`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..core.agent import LLMAgent
+from ..core.buffer import PersistentBuffer
+from ..core.controller import Controller, make_controller
+from ..core.metrics import GraphMeta, Metrics
+from ..graph.generate import Graph
+from ..graph.partition import Partitioned
+from ..graph.sampler import MiniBatch, NeighborSampler, unique_remote
+from .sage import init_sage, sage_accuracy, sage_grads
+
+
+@dataclass
+class TimeModel:
+    """Calibrated constants for the §4.5.3 performance model.
+
+    ``t_ddp`` is the data-parallel compute time of one minibatch on one
+    trainer (forward+backward+allreduce). At paper scale (A100, batch
+    2000, fanout {10,25}) this is ~50 ms. ``link_bw`` is the per-trainer
+    effective bandwidth of the RPC fetch path: Slingshot gives ~2.5 GB/s
+    effective per trainer at full scale; our graphs (and therefore the
+    per-minibatch fetch sets) are scaled down ~100x, so the default
+    bandwidth is scaled by the same factor (~1 MB/s, i.e. ~100 MB/s
+    effective TCP RPC bandwidth at full scale) to keep
+    T_COMM / T_DDP in the paper's regime (baseline communication roughly
+    comparable to compute, §5.1). ``alpha`` is the per-round RPC latency.
+    """
+
+    t_ddp: float = 0.050
+    link_bw: float = 1e6
+    alpha: float = 5e-4
+    feature_bytes: int = 4
+
+    def t_comm(self, fetched_nodes: int, feature_dim: int) -> float:
+        if fetched_nodes == 0:
+            return 0.0
+        return self.alpha + fetched_nodes * feature_dim * self.feature_bytes / self.link_bw
+
+
+@dataclass
+class TrainerLog:
+    pct_hits: list[float] = field(default_factory=list)
+    comm_volume: list[int] = field(default_factory=list)
+    comm_missed: list[int] = field(default_factory=list)
+    occupancy: list[float] = field(default_factory=list)
+    unique_remote: list[int] = field(default_factory=list)
+    replaced: list[int] = field(default_factory=list)
+    decisions: list[bool] = field(default_factory=list)
+    step_time: list[float] = field(default_factory=list)
+
+
+@dataclass
+class RunResult:
+    variant: str
+    epoch_times: list[float]
+    losses: list[float]
+    accuracy: float
+    logs: list[TrainerLog]
+    controllers: list[Controller]
+    graph_meta: list[GraphMeta]
+
+    # ---- aggregates used across the benchmark suite ------------------- #
+    @property
+    def mean_epoch_time(self) -> float:
+        return float(np.mean(self.epoch_times))
+
+    @property
+    def mean_pct_hits(self) -> float:
+        vals = [h for log in self.logs for h in log.pct_hits]
+        return float(np.mean(vals)) if vals else 0.0
+
+    @property
+    def total_comm(self) -> int:
+        return int(sum(sum(log.comm_volume) for log in self.logs))
+
+    @property
+    def comm_per_minibatch(self) -> float:
+        n = sum(len(log.comm_volume) for log in self.logs)
+        return self.total_comm / n if n else 0.0
+
+    @property
+    def steady_pct_hits(self) -> float:
+        """Mean %-Hits over the last quarter of the run (post cold-start)."""
+        vals = []
+        for log in self.logs:
+            n = len(log.pct_hits)
+            vals.extend(log.pct_hits[max(n - n // 4, 1):])
+        return float(np.mean(vals)) if vals else 0.0
+
+    def comm_p99(self) -> float:
+        vals = [c for log in self.logs for c in log.comm_volume]
+        return float(np.percentile(vals, 99)) if vals else 0.0
+
+
+class DistributedTrainer:
+    """One experiment: (graph, partitioning, variant, controller, buffer)."""
+
+    def __init__(
+        self,
+        parts: Partitioned,
+        variant: str = "rudder",
+        deciders: list | None = None,
+        buffer_frac: float = 0.25,
+        batch_size: int = 256,
+        fanouts: tuple[int, ...] = (10, 25),
+        epochs: int = 5,
+        lr: float = 1e-2,
+        hidden_dim: int = 64,
+        mode: str = "async",
+        interval: int = 32,
+        warm_start: bool = True,
+        train_model: bool = True,
+        time_model: TimeModel | None = None,
+        seed: int = 0,
+    ):
+        self.parts = parts
+        self.graph: Graph = parts.graph
+        self.variant = variant
+        self.buffer_frac = buffer_frac
+        self.batch_size = batch_size
+        self.epochs = epochs
+        self.lr = lr
+        self.mode = mode
+        self.train_model = train_model
+        self.tm = time_model or TimeModel()
+        self.rng = np.random.default_rng(seed)
+        self.sampler = NeighborSampler(self.graph, fanouts)
+
+        P = parts.num_parts
+        self.graph_meta = [
+            GraphMeta(
+                name=self.graph.name,
+                num_nodes=self.graph.num_nodes,
+                num_edges=self.graph.num_edges,
+                part_nodes=len(parts.local_nodes[p]),
+                part_edges=parts.part_edges(p),
+                num_partitions=P,
+            )
+            for p in range(P)
+        ]
+
+        # Halo (total remote nodes per partition): distinct 1-hop
+        # neighbors homed elsewhere — the reference set for buffer sizing
+        # ("5%/25% of remote nodes relative to total remote nodes per
+        # partition", §5.1).
+        self.halos = []
+        for p in range(P):
+            nodes = parts.local_nodes[p]
+            nbrs = np.unique(
+                np.concatenate(
+                    [self.graph.neighbors(int(u)) for u in nodes]
+                    or [np.array([], dtype=np.int64)]
+                )
+            )
+            self.halos.append(nbrs[parts.part_of[nbrs] != p])
+
+        self.buffers = [
+            PersistentBuffer(capacity=max(int(len(self.halos[p]) * buffer_frac), 1))
+            for p in range(P)
+        ]
+
+        # Controllers (one per trainer, as in the paper: each trainer has
+        # its own prefetcher + daemon inference thread).
+        self.controllers: list[Controller] = []
+        for p in range(P):
+            decider = None
+            if variant == "rudder":
+                if deciders is None:
+                    raise ValueError("rudder variant needs deciders")
+                decider = deciders[p % len(deciders)]
+            self.controllers.append(
+                make_controller(
+                    variant,
+                    graph=self.graph_meta[p],
+                    decider=decider,
+                    mode=mode,
+                    interval=interval,
+                    warm_start=warm_start,
+                )
+            )
+
+        # MassiveGNN warm start: prefetch the highest-degree remote halo
+        # nodes before training (§5.1 "Comparison with MassiveGNN").
+        if variant == "massivegnn" and warm_start:
+            deg = self.graph.degree()
+            for p in range(P):
+                halo = self.halos[p]
+                top = halo[np.argsort(-deg[halo])][: self.buffers[p].capacity]
+                self.buffers[p].insert(top)
+
+        self.local_train = [parts.local_train_nodes(p) for p in range(P)]
+        self.mb_per_epoch = max(
+            1,
+            max(
+                (len(t) + batch_size - 1) // batch_size
+                for t in self.local_train
+                if len(t)
+            ),
+        )
+
+        if train_model:
+            key = jax.random.PRNGKey(seed)
+            self.params = init_sage(
+                key,
+                self.graph.features.shape[1],
+                hidden_dim,
+                self.graph.num_classes,
+            )
+
+    # ------------------------------------------------------------------ #
+    def _seed_batch(self, p: int, epoch: int, mb: int) -> np.ndarray:
+        t = self.local_train[p]
+        if len(t) == 0:
+            return self.graph.train_nodes[: self.batch_size]
+        perm = np.random.default_rng((epoch * 1000003 + p) ^ 0xC0FFEE).permutation(
+            len(t)
+        )
+        start = (mb * self.batch_size) % len(t)
+        idx = perm[start : start + self.batch_size]
+        if len(idx) < min(self.batch_size, len(t)):
+            idx = np.concatenate([idx, perm[: self.batch_size - len(idx)]])
+        return t[idx]
+
+    def _features_of(self, minibatch: MiniBatch):
+        f = self.graph.features
+        x_seed = f[minibatch.seeds]
+        x_n1 = f[minibatch.layer_nbrs[0]]
+        b, f1 = minibatch.layer_nbrs[0].shape
+        x_n2 = f[minibatch.layer_nbrs[1]].reshape(b, f1, -1, f.shape[1])
+        return x_seed, x_n1, x_n2
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> RunResult:
+        P = self.parts.num_parts
+        logs = [TrainerLog() for _ in range(P)]
+        epoch_times: list[float] = []
+        losses: list[float] = []
+        feature_dim = self.graph.features.shape[1]
+
+        # Pipeline staleness: ReplaceandFetch overlaps with training, so a
+        # replacement round admits the miss set of the *previous*
+        # minibatch (Algorithm 1 queues the next minibatch before the
+        # decision lands). Frequent replacement therefore keeps admitting
+        # one-round-old tail nodes — churn the adaptive controller avoids.
+        prev_missed = [np.array([], dtype=np.int64) for _ in range(P)]
+
+        for epoch in range(self.epochs):
+            epoch_time = 0.0
+            for mb in range(self.mb_per_epoch):
+                grads_acc = None
+                loss_acc = 0.0
+                step_times = []
+                for p in range(P):
+                    ctrl = self.controllers[p]
+                    buf = self.buffers[p]
+                    batch = self._seed_batch(p, epoch, mb)
+                    minibatch = self.sampler.sample(batch, self.rng)
+                    remote = unique_remote(
+                        minibatch, self.parts.part_of, p
+                    )
+                    n_remote = len(remote)
+
+                    if ctrl.uses_buffer and buf.capacity > 0:
+                        hit_mask, _ = buf.lookup(remote)
+                        missed = remote[~hit_mask]
+                        pct_hits = (
+                            100.0 * hit_mask.sum() / n_remote if n_remote else 100.0
+                        )
+                    else:
+                        missed = remote
+                        pct_hits = 0.0
+
+                    comm = len(missed)
+                    metrics = Metrics(
+                        minibatch=mb,
+                        total_minibatches=self.mb_per_epoch,
+                        epoch=epoch,
+                        total_epochs=self.epochs,
+                        pct_hits=pct_hits,
+                        comm_volume=comm,
+                        replaced_pct=(
+                            100.0 * logs[p].replaced[-1] / buf.capacity
+                            if logs[p].replaced and buf.capacity
+                            else 0.0
+                        ),
+                        buffer_occupancy=buf.occupancy,
+                        buffer_capacity=buf.capacity,
+                    )
+                    replace = ctrl.should_replace(metrics)
+                    if ctrl.uses_buffer:
+                        buf.end_round()
+                    replaced = 0
+                    if replace and ctrl.uses_buffer:
+                        replaced = buf.replace(prev_missed[p])
+                    prev_missed[p] = missed
+                    # Replacement traffic: ReplaceandFetch (Alg. 1 line 14)
+                    # issues a separate aggregated RPC for the nodes pulled
+                    # into the persistent buffer — counted as communication
+                    # (this is why over-replacement blows up comm, Fig. 20).
+                    comm += replaced
+
+                    logs[p].pct_hits.append(pct_hits)
+                    logs[p].comm_volume.append(comm)
+                    logs[p].comm_missed.append(len(missed))
+                    logs[p].occupancy.append(buf.occupancy)
+                    logs[p].unique_remote.append(n_remote)
+                    logs[p].replaced.append(replaced)
+                    logs[p].decisions.append(bool(replace))
+
+                    # §4.5.3 time model.
+                    t_comm = self.tm.t_comm(comm, feature_dim)
+                    if self.mode == "sync" and ctrl.inference_cost:
+                        t = self.tm.t_ddp + t_comm + ctrl.step_stall() * self.tm.t_ddp
+                    else:
+                        t = max(self.tm.t_ddp, t_comm)
+                    logs[p].step_time.append(t)
+                    step_times.append(t)
+
+                    if self.train_model:
+                        x_seed, x_n1, x_n2 = self._features_of(minibatch)
+                        loss, grads = sage_grads(
+                            self.params, x_seed, x_n1, x_n2, minibatch.labels
+                        )
+                        loss_acc += float(loss) / P
+                        grads_acc = (
+                            grads
+                            if grads_acc is None
+                            else jax.tree_util.tree_map(
+                                lambda a, b: a + b, grads_acc, grads
+                            )
+                        )
+
+                # Gradient sync across trainers (bulk-synchronous step).
+                epoch_time += max(step_times)
+                if self.train_model and grads_acc is not None:
+                    grads_mean = jax.tree_util.tree_map(
+                        lambda g: g / P, grads_acc
+                    )
+                    self.params = jax.tree_util.tree_map(
+                        lambda prm, g: prm - self.lr * g, self.params, grads_mean
+                    )
+                    losses.append(loss_acc)
+            epoch_times.append(epoch_time)
+
+        accuracy = 0.0
+        if self.train_model:
+            batch = self.graph.train_nodes[: min(512, len(self.graph.train_nodes))]
+            minibatch = self.sampler.sample(batch, self.rng)
+            x_seed, x_n1, x_n2 = self._features_of(minibatch)
+            accuracy = float(
+                sage_accuracy(self.params, x_seed, x_n1, x_n2, minibatch.labels)
+            )
+
+        return RunResult(
+            variant=self.variant,
+            epoch_times=epoch_times,
+            losses=losses,
+            accuracy=accuracy,
+            logs=logs,
+            controllers=self.controllers,
+            graph_meta=self.graph_meta,
+        )
+
+
+def collect_traces(
+    parts: Partitioned,
+    buffer_frac: float = 0.25,
+    batch_size: int = 256,
+    epochs: int = 3,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Trace-only mode (§4.4): run DistDGL+fixed with training disabled,
+    record per-minibatch features and S'-labels for offline classifier
+    training. Returns (X, y)."""
+    from ..core.classifiers import featurize, label_traces
+
+    trainer = DistributedTrainer(
+        parts,
+        variant="fixed",
+        buffer_frac=buffer_frac,
+        batch_size=batch_size,
+        epochs=epochs,
+        train_model=False,
+        seed=seed,
+    )
+    result = trainer.run()
+    X_rows, y_rows = [], []
+    for p, log in enumerate(result.logs):
+        hits = np.array(log.pct_hits)
+        comm = np.array(log.comm_volume, dtype=np.float64)
+        repl = np.array(log.replaced, dtype=np.float64)
+        labels = label_traces(hits, comm, repl)
+        cap = trainer.buffers[p].capacity
+        prev = None
+        recent: list[float] = []
+        recent_c: list[int] = []
+        for i in range(len(hits)):
+            m = Metrics(
+                minibatch=i % trainer.mb_per_epoch,
+                total_minibatches=trainer.mb_per_epoch,
+                epoch=i // trainer.mb_per_epoch,
+                total_epochs=epochs,
+                pct_hits=float(hits[i]),
+                comm_volume=int(comm[i]),
+                replaced_pct=100.0 * repl[i] / cap if cap else 0.0,
+                buffer_occupancy=float(log.occupancy[i]),
+                buffer_capacity=cap,
+            )
+            recent.append(float(hits[i]))
+            recent_c.append(int(comm[i]))
+            X_rows.append(featurize(m, prev, recent[-16:], recent_c[-16:]))
+            y_rows.append(labels[i])
+            prev = m
+    return np.stack(X_rows), np.array(y_rows, dtype=np.float32)

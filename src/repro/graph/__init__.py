@@ -1,0 +1,13 @@
+"""Graph substrate: generation, partitioning, neighbor sampling."""
+
+from .generate import Graph, generate, DATASET_PRESETS
+from .partition import partition_graph
+from .sampler import NeighborSampler
+
+__all__ = [
+    "Graph",
+    "generate",
+    "DATASET_PRESETS",
+    "partition_graph",
+    "NeighborSampler",
+]

@@ -1,0 +1,76 @@
+"""Neighbor sampling (GraphSAGE-style fanout sampling).
+
+Matches the paper's setup: 2-layer GraphSAGE with fanout {25, 10} —
+every seed samples up to 10 neighbors, each of which samples up to 25.
+Sampling is with replacement when a node has fewer neighbors than the
+fanout (isolated nodes fall back to self-loops), which yields dense
+``(batch, fanout)`` index blocks that JAX consumes without masking.
+
+The sampler also reports the **unique sampled nodes** of the minibatch —
+the set the prefetcher intersects with the persistent buffer to compute
+%-Hits and the remote fetch list (Algorithm 1, lines 10-11/17).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .generate import Graph
+
+
+@dataclass
+class MiniBatch:
+    seeds: np.ndarray            # (B,)
+    layer_nbrs: list[np.ndarray]  # [(B, f1), (B*f1, f2), ...]
+    unique_nodes: np.ndarray     # all distinct node ids touched
+    labels: np.ndarray           # (B,)
+
+
+class NeighborSampler:
+    def __init__(self, graph: Graph, fanouts: tuple[int, ...] = (10, 25)):
+        """``fanouts[0]`` applies to the seeds' hop, ``fanouts[1]`` to the
+        next hop (paper: fanout {10, 25})."""
+        self.graph = graph
+        self.fanouts = tuple(int(f) for f in fanouts)
+
+    def _sample_neighbors(
+        self, nodes: np.ndarray, fanout: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        g = self.graph
+        deg = g.indptr[nodes + 1] - g.indptr[nodes]
+        # Draw fanout offsets per node with replacement; degree-0 nodes
+        # self-loop.
+        offs = (rng.random((len(nodes), fanout)) * np.maximum(deg, 1)[:, None]).astype(
+            np.int64
+        )
+        starts = g.indptr[nodes][:, None]
+        idx = starts + offs
+        nbrs = g.indices[np.minimum(idx, len(g.indices) - 1)]
+        nbrs = np.where(deg[:, None] > 0, nbrs, nodes[:, None])
+        return nbrs
+
+    def sample(self, seeds: np.ndarray, rng: np.random.Generator) -> MiniBatch:
+        seeds = np.asarray(seeds, dtype=np.int64)
+        frontier = seeds
+        layer_nbrs: list[np.ndarray] = []
+        touched = [seeds]
+        for fanout in self.fanouts:
+            nbrs = self._sample_neighbors(frontier, fanout, rng)
+            layer_nbrs.append(nbrs)
+            frontier = nbrs.reshape(-1)
+            touched.append(frontier)
+        unique_nodes = np.unique(np.concatenate(touched))
+        return MiniBatch(
+            seeds=seeds,
+            layer_nbrs=layer_nbrs,
+            unique_nodes=unique_nodes,
+            labels=self.graph.labels[seeds],
+        )
+
+
+def unique_remote(minibatch: MiniBatch, part_of: np.ndarray, part: int) -> np.ndarray:
+    """Unique sampled nodes homed on other partitions (the fetch set)."""
+    nodes = minibatch.unique_nodes
+    return nodes[part_of[nodes] != part]

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU container); pass False on real TPU.
+Every op has a pure-jnp oracle in :mod:`repro.kernels.ref` and an
+allclose sweep in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gather_mean import gather_mean as _gather_mean
+from .gather_rows import gather_rows as _gather_rows
+from .mla_decode import mla_flash_decode as _mla_flash_decode
+from .score_update import score_update as _score_update
+from .segment_sum import segment_sum_equal as _segment_sum_equal
+
+__all__ = [
+    "gather_rows",
+    "gather_mean",
+    "segment_sum_equal",
+    "score_update",
+    "mla_flash_decode",
+    "ref",
+]
+
+
+def gather_rows(table, indices, *, interpret: bool = True):
+    return _gather_rows(table, indices, interpret=interpret)
+
+
+def gather_mean(table, indices, *, interpret: bool = True):
+    return _gather_mean(table, indices, interpret=interpret)
+
+
+def segment_sum_equal(data, k: int, *, interpret: bool = True):
+    return _segment_sum_equal(data, k, interpret=interpret)
+
+
+def score_update(scores, accessed, *, interpret: bool = True):
+    return _score_update(scores, accessed, interpret=interpret)
+
+
+def mla_flash_decode(q_lat, q_rope, cache_c, cache_kr, pos, *, scale=None,
+                     interpret: bool = True):
+    return _mla_flash_decode(
+        q_lat, q_rope, cache_c, cache_kr, pos, scale=scale, interpret=interpret
+    )

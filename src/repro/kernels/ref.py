@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import scoring
+
+
+def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """table (N, F), indices (M,) -> (M, F)."""
+    return jnp.take(table, indices, axis=0)
+
+
+def gather_mean(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """table (N, F), indices (B, K) -> (B, F): mean of gathered rows.
+
+    The fused GraphSAGE neighbor-aggregation hot spot: gather the K
+    sampled neighbors of each of B nodes and mean-reduce.
+    """
+    return jnp.mean(jnp.take(table, indices, axis=0), axis=1)
+
+
+def segment_sum(data: jax.Array, segment_ids: jax.Array, num_segments: int):
+    """data (E, F) sorted by segment id -> (num_segments, F)."""
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=True
+    )
+
+
+def mla_latent_attention(q_lat, q_rope, cache_c, cache_kr, pos, scale):
+    """Oracle for the MLA flash-decode kernel: masked softmax over the
+    latent cache, context in latent coordinates."""
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                   cache_c.astype(jnp.float32))
+        + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
+                     cache_kr.astype(jnp.float32))
+    ) * scale
+    valid = jnp.arange(cache_c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -2.3819763e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bhs,bsr->bhr", probs, cache_c.astype(jnp.float32)
+    ).astype(cache_c.dtype)
+
+
+def score_update(scores: jax.Array, accessed: jax.Array):
+    """Rudder scoring policy round (see core.scoring): returns
+    (new_scores, stale_count)."""
+    new = jnp.where(
+        accessed,
+        scores + scoring.ACCESS_INCREMENT,
+        scores * scoring.DECAY_FACTOR,
+    )
+    stale = jnp.sum((new < scoring.STALE_THRESHOLD).astype(jnp.int32))
+    return new, stale

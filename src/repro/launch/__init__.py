@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, steps, dry-run, train/serve drivers."""

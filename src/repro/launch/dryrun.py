@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, print memory/cost analysis, derive roofline terms.
+
+MUST set XLA_FLAGS before any jax import (above): jax locks the device
+count on first init. Do not import this module from tests.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import all_arch_ids, get_config
+from ..models import sharding as sh
+from ..models.config import ModelConfig
+from ..roofline import analyse, model_flops_for
+from .mesh import make_production_mesh
+from .steps import (
+    SHAPES,
+    abstract_cache,
+    abstract_params,
+    adamw_init_like,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    shape_supported,
+)
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree
+    )
+
+
+def build_lowered(cfg: ModelConfig, shape_name: str, mesh, donate: bool = True):
+    """Lower the right step for (cfg, shape) on mesh. Returns lowered."""
+    info = SHAPES[shape_name]
+    params_abs = abstract_params(cfg)
+    params_sh = sh.shard_params(mesh, cfg, params_abs)
+
+    if info["kind"] == "train":
+        opt_abs = jax.eval_shape(lambda p: adamw_init_like(cfg, p), params_abs)
+        opt_sh = sh.shard_opt_state(mesh, cfg, params_abs, opt_abs)
+        specs = input_specs(cfg, shape_name)
+        batch_sh = sh.shard_batch(mesh, specs["batch"])
+        step = make_train_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _replicated(mesh, {"loss": 0, "ce": 0, "aux": 0, **({"mtp_ce": 0} if cfg.mtp else {})})),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh:
+            return jitted.lower(params_abs, opt_abs, specs["batch"])
+
+    if info["kind"] == "prefill":
+        specs = input_specs(cfg, shape_name)
+        batch_sh = sh.shard_batch(mesh, specs["batch"])
+        step = make_prefill_step(cfg)
+        out_sh = NamedSharding(mesh, sh.guard(
+            mesh, P(sh.batch_axes(mesh), "model"),
+            (info["batch"], cfg.vocab_size),
+        ))
+        jitted = jax.jit(
+            step, in_shardings=(params_sh, batch_sh), out_shardings=out_sh
+        )
+        with mesh:
+            return jitted.lower(params_abs, specs["batch"])
+
+    # decode
+    long_mode = bool(info.get("long"))
+    specs = input_specs(cfg, shape_name)
+    cache_sh = sh.shard_cache(
+        mesh, cfg, specs["cache"], seq_shard=long_mode
+    )
+    token_sh = NamedSharding(
+        mesh, sh.guard(mesh, P(sh.batch_axes(mesh)), (info["batch"], 1))
+    )
+    pos_sh = NamedSharding(mesh, P())
+    step = make_decode_step(cfg, long_mode=long_mode)
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_sh, cache_sh, token_sh, pos_sh),
+        out_shardings=(token_sh, cache_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    with mesh:
+        return jitted.lower(
+            params_abs, specs["cache"], specs["token"], specs["pos"]
+        )
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    verbose: bool = True,
+    overrides: dict | None = None,
+):
+    cfg = get_config(arch)
+    if cfg.moe.num_experts:
+        # Training/prefill: experts over 'model'. Decode (§Perf deepseek x
+        # decode_32k iteration 2): experts over the FULL mesh — each chip
+        # holds E/chips experts and reads only those per step, instead of
+        # E/16; token replication is trivial at decode batch sizes.
+        info = SHAPES[shape_name]
+        if info["kind"] == "decode" and cfg.moe.num_experts >= 64:
+            # Widest axis combination that divides the expert count
+            # (multi-pod: 512 chips > 256 experts -> EP within each pod,
+            # experts replicated across pods).
+            sizes = {"pod": 2, "data": 16, "model": 16}
+            axes = ("model",)
+            for extra in ("data", "pod") if multi_pod else ("data",):
+                cand = (extra, *axes)
+                size = 1
+                for a in cand:
+                    size *= sizes[a]
+                if cfg.moe.num_experts % size == 0:
+                    axes = cand
+            cfg = cfg.with_overrides(ep_axis=axes)
+        else:
+            cfg = cfg.with_overrides(ep_axis="model")
+        from ..models.moe import set_ep_mesh
+
+        set_ep_mesh(make_production_mesh(multi_pod=multi_pod))
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    ok, reason = shape_supported(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape_name, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    info = SHAPES[shape_name]
+    # Scan-corrected cost vector (see roofline.measure_corrected).
+    from ..roofline import RooflineReport, measure_corrected
+
+    corr = measure_corrected(cfg, shape_name, mesh, build_lowered)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    coll = {
+        k.split(":", 1)[1]: v for k, v in corr.items() if k.startswith("coll:")
+    }
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh_desc="x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        chips=chips,
+        flops=corr["flops"],
+        hbm_bytes=corr["bytes"],
+        coll_bytes=sum(coll.values()),
+        coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape_name, info["batch"], info["seq"]),
+    )
+    row = report.row()
+    row.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        bytes_per_device=getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        coll_breakdown={k: v for k, v in report.coll_breakdown.items() if v},
+    )
+    if verbose:
+        print(f"--- {arch} x {shape_name} on {row['mesh']} ---")
+        print(f"memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(
+            "cost_analysis: flops=%.3e bytes=%.3e"
+            % (ca.get("flops", 0), ca.get("bytes accessed", 0))
+        )
+        print(
+            "roofline: compute=%.2es memory=%.2es collective=%.2es -> %s"
+            % (
+                report.t_compute,
+                report.t_memory,
+                report.t_collective,
+                report.bottleneck,
+            )
+        )
+        print(f"useful-flops ratio: {report.useful_flops_ratio:.3f}")
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None, help="append result rows to file")
+    ap.add_argument(
+        "--moe-combine", default=None, choices=("psum", "a2a"),
+        help="MoE expert-parallel combine strategy override",
+    )
+    ap.add_argument("--fsdp", action="store_true", help="FSDP weight sharding")
+    args = ap.parse_args()
+    overrides = {}
+    if args.moe_combine:
+        overrides["ep_combine"] = args.moe_combine
+    if args.fsdp:
+        overrides["fsdp"] = True
+
+    pairs = []
+    if args.all:
+        for a in all_arch_ids():
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    rows, failures = [], 0
+    for arch, shape_name in pairs:
+        try:
+            row = run_one(arch, shape_name, args.multi_pod, overrides=overrides)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            row = {
+                "arch": arch,
+                "shape": shape_name,
+                "status": "FAILED",
+                "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        rows.append(row)
+        print(json.dumps(row, default=str))
+        sys.stdout.flush()
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r, default=str) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Jittable step functions: train / prefill / decode, plus the
+ShapeDtypeStruct input specs for every (architecture x input shape).
+
+INPUT SHAPES (assignment):
+    train_4k     seq 4096,    global batch 256   (training)
+    prefill_32k  seq 32768,   global batch 32    (inference prefill)
+    decode_32k   cache 32768, global batch 128   (one-token decode)
+    long_500k    cache 524288, batch 1           (sub-quadratic only)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import make_batch_specs
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic decode (DESIGN.md §skips)."""
+    if shape_name != "long_500k":
+        return True, ""
+    if cfg.supports_long_context:
+        return True, ""
+    return False, (
+        f"{cfg.name} is pure full-attention; 524k-token decode is "
+        "quadratic-cost — skipped per DESIGN.md"
+    )
+
+
+# --------------------------------------------------------------------- #
+# step builders
+# --------------------------------------------------------------------- #
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4, remat: bool = True):
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        def loss_fn(p):
+            return M.lm_loss(cfg, p, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch: dict):
+        logits, _ = M.forward(
+            cfg,
+            params,
+            batch["tokens"],
+            patches=batch.get("patches"),
+            frames=batch.get("frames"),
+        )
+        # Serving prefill returns only the last-position logits.
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, long_mode: bool = False):
+    force_local = long_mode and cfg.local_global
+
+    def decode_step(params, cache, token, pos):
+        logits, cache = M.decode_step(
+            cfg, params, cache, token, pos, force_local=force_local
+        )
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+
+    return decode_step
+
+
+# --------------------------------------------------------------------- #
+# abstract inputs
+# --------------------------------------------------------------------- #
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw_init_like(cfg, params))
+
+
+def adamw_init_like(cfg: ModelConfig, params):
+    return adamw_init(params, moment_dtype=cfg.opt_dtype)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int, long_mode: bool):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, long_mode=long_mode)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    Audio/VLM frontends are stubs: frames/patches arrive as precomputed
+    embeddings of the documented shape (DESIGN.md carve-out).
+    """
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] in ("train", "prefill"):
+        batch = make_batch_specs(cfg, b, s)
+        if cfg.encoder_layers and info["kind"] == "prefill":
+            # Whisper "prefill" = transcription start: full audio, short text.
+            batch["tokens"] = jax.ShapeDtypeStruct((b, min(s, 448)), jnp.int32)
+        return {"batch": batch}
+    long_mode = bool(info.get("long"))
+    return {
+        "cache": abstract_cache(cfg, b, s, long_mode),
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,93 @@
+"""Training driver.
+
+Runs real steps on whatever devices exist (CPU here; the same code path
+lowers on the production mesh — see dryrun.py for the no-allocation
+proof). Examples:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+        --steps 50 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import all_arch_ids, get_config, get_smoke_config
+from ..data.pipeline import TokenPipeline
+from ..models import model as M
+from ..optim.adamw import adamw_init
+from .steps import make_train_step
+
+
+def train(
+    arch: str,
+    *,
+    smoke: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 64,
+    lr: float = 3e-4,
+    seed: int = 0,
+    ckpt_path: str | None = None,
+    log_every: int = 10,
+) -> dict:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    pipe = TokenPipeline(cfg, batch, seq, seed=seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params, moment_dtype=cfg.opt_dtype)
+    step_fn = jax.jit(make_train_step(cfg, lr=lr, remat=False))
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        batch_np = pipe.next_batch()
+        batch_jx = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_jx)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} ({time.time()-t0:.1f}s)")
+    if ckpt_path:
+        from ..ckpt import save_checkpoint
+
+        save_checkpoint(ckpt_path, params)
+        print(f"saved checkpoint to {ckpt_path}")
+    return {
+        "first_loss": losses[0],
+        "last_loss": losses[-1],
+        "losses": losses,
+        "params": params,
+        "config": cfg,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_arch_ids())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    res = train(
+        args.arch,
+        smoke=args.smoke,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_path=args.ckpt,
+    )
+    print(f"loss {res['first_loss']:.3f} -> {res['last_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Attention variants: GQA (w/ qk-norm, softcap, sliding window), MLA,
+and encoder/cross attention — with KV-cache decode paths.
+
+Conventions:
+  x            (B, S, D)
+  q            (B, S, H, hd)
+  k, v         (B, S, Hkv, hd)
+  caches       (B, S_cache, Hkv, hd) — pre-RoPE'd keys
+  MLA cache    latent (B, S, r_kv) + shared rope key (B, S, r_rope)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dtype_of, init_dense, rms_norm, softcap
+from .config import ModelConfig
+
+NEG_INF = -2.3819763e38  # same constant XLA uses for -inf masking
+
+
+# --------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------- #
+def init_gqa(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h, hkv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    params = {
+        "wq": init_dense(k1, d, (h, hd), dt),
+        "wk": init_dense(k2, d, (hkv, hd), dt),
+        "wv": init_dense(k3, d, (hkv, hd), dt),
+        "wo": (
+            jax.random.normal(k4, (h, hd, d), jnp.float32) * (1.0 / (h * hd)) ** 0.5
+        ).astype(dt),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        params["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return params
+
+
+def _project_qkv(cfg: ModelConfig, params: dict, xq, xkv, positions_q, positions_kv,
+                 rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask):
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd); mask: (B|1, Sq, Skv) bool.
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, sq, hkv, g, hd)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _causal_mask(sq: int, skv: int, window: int = 0) -> jax.Array:
+    """(1, Sq, Skv) causal (optionally banded) mask; q positions are the
+    trailing sq positions of the kv range."""
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m[None]
+
+
+def gqa_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    window: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(cfg, params, x, x, positions, positions)
+    s = x.shape[1]
+    if causal:
+        mask = _causal_mask(s, s, window)
+    else:
+        mask = jnp.ones((1, s, s), dtype=bool)
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def gqa_decode(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,               # (B, 1, D)
+    cache_k: jax.Array,         # (B, S, Hkv, hd)
+    cache_v: jax.Array,
+    pos: jax.Array,             # scalar int32 — current length
+    window: int = 0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. ``window>0`` treats the cache as a ring buffer of
+    that size (long-context sliding window)."""
+    s_cache = cache_k.shape[1]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = _project_qkv(
+        cfg, params, x, x, positions[None, :], positions[None, :]
+    )
+    slot = jnp.where(window > 0, pos % jnp.int32(max(window, 1)), pos)
+    slot = jnp.minimum(slot, s_cache - 1)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0)
+    )
+    kpos = jnp.arange(s_cache)
+    if window > 0:
+        # Ring buffer: every slot is valid once pos >= window.
+        valid = jnp.where(pos >= s_cache, jnp.ones((s_cache,), bool), kpos <= pos)
+    else:
+        valid = kpos <= pos
+    mask = valid[None, None, :]
+    out = _sdpa(cfg, q, cache_k, cache_v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache_k, cache_v
+
+
+# --------------------------------------------------------------------- #
+# Cross attention (Whisper decoder over encoder memory)
+# --------------------------------------------------------------------- #
+def cross_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,               # (B, Sq, D)
+    memory_k: jax.Array,        # (B, Senc, Hkv, hd) — precomputed
+    memory_v: jax.Array,
+) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    mask = jnp.ones((1, x.shape[1], memory_k.shape[1]), dtype=bool)
+    out = _sdpa(cfg, q, memory_k, memory_v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cross_memory(cfg: ModelConfig, params: dict, memory: jax.Array):
+    """Precompute encoder K/V once per request (no RoPE — Whisper uses
+    learned absolute positions added at embedding time)."""
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    return k, v
+
+
+# --------------------------------------------------------------------- #
+# MLA — Multi-head Latent Attention (DeepSeek-V3), absorbed decode
+# --------------------------------------------------------------------- #
+def init_mla(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    keys = jax.random.split(key, 8)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": init_dense(keys[0], d, m.q_lora_rank, dt),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "w_uq": init_dense(keys[1], m.q_lora_rank, (h, qk_head), dt),
+        "w_dkv": init_dense(keys[2], d, m.kv_lora_rank, dt),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "w_kr": init_dense(keys[3], d, m.qk_rope_head_dim, dt),
+        "w_uk": init_dense(keys[4], m.kv_lora_rank, (h, m.qk_nope_head_dim), dt),
+        "w_uv": init_dense(keys[5], m.kv_lora_rank, (h, m.v_head_dim), dt),
+        "wo": (
+            jax.random.normal(keys[6], (h, m.v_head_dim, d), jnp.float32)
+            * (1.0 / (h * m.v_head_dim)) ** 0.5
+        ).astype(dt),
+    }
+
+
+def _mla_q(cfg: ModelConfig, params: dict, x, positions):
+    m = cfg.mla
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dq"]), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", ql, params["w_uq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: ModelConfig, params: dict, x, positions):
+    c = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]), params["kv_norm"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_forward(
+    cfg: ModelConfig, params: dict, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """Full-sequence MLA (training / prefill) — materialised k/v."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)
+    c, k_rope = _mla_latent(cfg, params, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c, params["w_uv"])
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    mask = _causal_mask(s, s)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def mla_decode(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,               # (B, 1, D)
+    cache_c: jax.Array,         # (B, S, r_kv) — compressed latent
+    cache_kr: jax.Array,        # (B, S, r_rope)
+    pos: jax.Array,
+):
+    """Absorbed-matrices decode: attention runs in the latent space, so
+    the per-token cache is r_kv + r_rope floats — MLA's whole point."""
+    m = cfg.mla
+    positions = pos[None]
+    q_nope, q_rope = _mla_q(cfg, params, x, positions[None, :])
+    c_new, kr_new = _mla_latent(cfg, params, x, positions[None, :])
+    cache_c = jax.lax.dynamic_update_slice(
+        cache_c, c_new.astype(cache_c.dtype), (0, pos, 0)
+    )
+    cache_kr = jax.lax.dynamic_update_slice(
+        cache_kr, kr_new.astype(cache_kr.dtype), (0, pos, 0)
+    )
+    # Absorb W_uk into q: query expressed in latent coordinates.
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["w_uk"])
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, cache_c)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, cache_kr)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(cache_c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cache_c.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cache_c)
+    out = jnp.einsum("bqhr,rhk->bqhk", ctx_lat, params["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache_c, cache_kr

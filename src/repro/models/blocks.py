@@ -1,0 +1,244 @@
+"""Per-layer block dispatch: init / sequence-forward / decode-step for
+every block kind used by the assigned architectures.
+
+Kinds:
+  attn / attn_global  — GQA + MLP (pre-norm, optional post-norm)
+  attn_local          — GQA with sliding window
+  dense               — MLA attention + dense MLP (DeepSeek first-k)
+  moe                 — MLA/GQA attention + MoE FFN
+  mamba2              — Mamba2 mixer (no separate MLP)
+  mlstm / slstm       — xLSTM cells
+  shared_attn         — Zamba2 shared transformer block (weights shared
+                        across occurrences; per-slot norms are scanned)
+  enc                 — bidirectional attention + MLP (Whisper encoder)
+  dec                 — causal self-attn + cross-attn + MLP (Whisper)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm
+from .common import apply_norm, dtype_of, make_norm_params
+from .config import ModelConfig
+from .mlp import init_mlp, mlp_forward
+from .moe import init_moe, moe_apply
+
+ATTN_KINDS = ("attn", "attn_global", "attn_local", "dense", "moe", "enc", "dec")
+
+
+def _uses_mla(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.attn_type == "mla" and kind in ("dense", "moe", "attn")
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_block(cfg: ModelConfig, kind: str, key) -> dict:
+    keys = jax.random.split(key, 4)
+    p: dict = {"norm1": make_norm_params(cfg)}
+    if cfg.post_norm:
+        p["post_norm1"] = make_norm_params(cfg)
+    if kind in ("mamba2",):
+        p["mixer"] = ssm.init_mamba2(cfg, keys[0])
+        return p
+    if kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(cfg, keys[0])
+        return p
+    if kind == "slstm":
+        p["mixer"] = ssm.init_slstm(cfg, keys[0])
+        return p
+    if kind == "shared_attn":
+        # Shared weights live at model level; only the per-slot norm here.
+        return p
+
+    # attention + ffn families
+    if _uses_mla(cfg, kind):
+        p["mixer"] = attn.init_mla(cfg, keys[0])
+    else:
+        p["mixer"] = attn.init_gqa(cfg, keys[0])
+    if kind == "dec":
+        p["norm_cross"] = make_norm_params(cfg)
+        p["cross"] = attn.init_gqa(cfg, keys[1])
+    p["norm2"] = make_norm_params(cfg)
+    if cfg.post_norm:
+        p["post_norm2"] = make_norm_params(cfg)
+    if kind == "moe":
+        p["ffn"] = init_moe(cfg, keys[2])
+    elif kind == "dense":
+        p["ffn"] = init_mlp(cfg, keys[2], d_ff=cfg.moe.d_ff_dense)
+    else:
+        p["ffn"] = init_mlp(cfg, keys[2])
+    return p
+
+
+def init_shared_block(cfg: ModelConfig, key) -> dict:
+    """Zamba2's single shared attention+MLP block."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": make_norm_params(cfg),
+        "mixer": attn.init_gqa(cfg, k1),
+        "norm2": make_norm_params(cfg),
+        "ffn": init_mlp(cfg, k2),
+    }
+
+
+# --------------------------------------------------------------------- #
+# sequence forward (training / prefill)
+# --------------------------------------------------------------------- #
+def _residual(cfg: ModelConfig, p: dict, x, sub_out, post_key: str):
+    if cfg.post_norm and post_key in p:
+        sub_out = apply_norm(cfg, p[post_key], sub_out)
+    return x + sub_out
+
+
+def block_forward(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    shared: dict | None = None,
+    memory_kv: tuple | None = None,
+    force_local: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+
+    if kind == "mamba2":
+        return _residual(cfg, p, x, ssm.mamba2_forward(cfg, p["mixer"], h), "post_norm1"), aux
+    if kind == "mlstm":
+        return _residual(cfg, p, x, ssm.mlstm_forward(cfg, p["mixer"], h), "post_norm1"), aux
+    if kind == "slstm":
+        return _residual(cfg, p, x, ssm.slstm_forward(cfg, p["mixer"], h), "post_norm1"), aux
+    if kind == "shared_attn":
+        sp = shared
+        hh = apply_norm(cfg, sp["norm1"], x)
+        x = x + attn.gqa_forward(cfg, sp["mixer"], hh, positions)
+        hh = apply_norm(cfg, sp["norm2"], x)
+        return x + mlp_forward(cfg, sp["ffn"], hh), aux
+
+    # attention families
+    if _uses_mla(cfg, kind):
+        a = attn.mla_forward(cfg, p["mixer"], h, positions)
+    elif kind == "enc":
+        a = attn.gqa_forward(cfg, p["mixer"], h, positions, causal=False)
+    else:
+        window = 0
+        if kind == "attn_local" or (force_local and kind == "attn_global"):
+            window = cfg.sliding_window
+        elif cfg.sliding_window and not cfg.local_global:
+            window = cfg.sliding_window
+        a = attn.gqa_forward(cfg, p["mixer"], h, positions, window=window)
+    x = _residual(cfg, p, x, a, "post_norm1")
+
+    if kind == "dec":
+        h = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_forward(cfg, p["cross"], h, *memory_kv)
+
+    h = apply_norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        f, aux = moe_apply(cfg, p["ffn"], h)
+    else:
+        f = mlp_forward(cfg, p["ffn"], h)
+    return _residual(cfg, p, x, f, "post_norm2"), aux
+
+
+# --------------------------------------------------------------------- #
+# decode step (single token, cache-carrying)
+# --------------------------------------------------------------------- #
+def init_layer_cache(
+    cfg: ModelConfig, kind: str, batch: int, seq: int, long_mode: bool = False
+) -> dict:
+    dt = dtype_of(cfg)
+    if kind == "mamba2":
+        return ssm.mamba2_init_state(cfg, batch)
+    if kind == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    if _uses_mla(cfg, kind):
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((batch, seq, m.kv_lora_rank), dt),
+            "kr": jnp.zeros((batch, seq, m.qk_rope_head_dim), dt),
+        }
+    s = seq
+    if kind == "attn_local" or (long_mode and kind == "attn_global"):
+        s = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    elif cfg.sliding_window and not cfg.local_global:
+        s = min(seq, cfg.sliding_window)
+    cache = {
+        "k": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, s, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+    if kind == "dec":
+        cache["ck"] = jnp.zeros(
+            (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt
+        )
+        cache["cv"] = jnp.zeros(
+            (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim), dt
+        )
+    return cache
+
+
+def block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,                # (B, 1, D)
+    cache: dict,
+    pos: jax.Array,
+    *,
+    shared: dict | None = None,
+    force_local: bool = False,
+) -> tuple[jax.Array, dict]:
+    h = apply_norm(cfg, p["norm1"], x)
+
+    if kind == "mamba2":
+        out, cache = ssm.mamba2_decode(cfg, p["mixer"], h, cache)
+        return _residual(cfg, p, x, out, "post_norm1"), cache
+    if kind == "mlstm":
+        out, cache = ssm.mlstm_decode(cfg, p["mixer"], h, cache)
+        return _residual(cfg, p, x, out, "post_norm1"), cache
+    if kind == "slstm":
+        out, cache = ssm.slstm_decode(cfg, p["mixer"], h, cache)
+        return _residual(cfg, p, x, out, "post_norm1"), cache
+    if kind == "shared_attn":
+        sp = shared
+        hh = apply_norm(cfg, sp["norm1"], x)
+        a, ck, cv = attn.gqa_decode(cfg, sp["mixer"], hh, cache["k"], cache["v"], pos)
+        cache = dict(cache, k=ck, v=cv)
+        x = x + a
+        hh = apply_norm(cfg, sp["norm2"], x)
+        return x + mlp_forward(cfg, sp["ffn"], hh), cache
+
+    if _uses_mla(cfg, kind):
+        a, c, kr = attn.mla_decode(cfg, p["mixer"], h, cache["c"], cache["kr"], pos)
+        cache = dict(cache, c=c, kr=kr)
+    else:
+        window = 0
+        if kind == "attn_local" or (force_local and kind == "attn_global"):
+            window = cfg.sliding_window
+        elif cfg.sliding_window and not cfg.local_global:
+            window = cfg.sliding_window
+        a, ck, cv = attn.gqa_decode(
+            cfg, p["mixer"], h, cache["k"], cache["v"], pos, window=window
+        )
+        cache = dict(cache, k=ck, v=cv)
+    x = _residual(cfg, p, x, a, "post_norm1")
+
+    if kind == "dec":
+        h = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_forward(cfg, p["cross"], h, cache["ck"], cache["cv"])
+
+    h = apply_norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        f, _ = moe_apply(cfg, p["ffn"], h)
+    else:
+        f = mlp_forward(cfg, p["ffn"], h)
+    return _residual(cfg, p, x, f, "post_norm2"), cache

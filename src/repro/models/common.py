@@ -1,0 +1,100 @@
+"""Shared layers: norms, RoPE, embeddings, softcap."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm_params(cfg: ModelConfig, key=None) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": jnp.ones((cfg.d_model,), jnp.float32),
+            "bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"])
+    return rms_norm(x, params["scale"])
+
+
+# --------------------------------------------------------------------- #
+# rotary position embedding
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# misc
+# --------------------------------------------------------------------- #
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 soft capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def embed_tokens(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed(cfg: ModelConfig, embedding: jax.Array, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        embedding.astype(jnp.float32))
+    return softcap(logits, cfg.logit_softcap)
+
+
+def init_dense(key, in_dim: int, out_dims, dtype) -> jax.Array:
+    """Fan-in scaled normal init; out_dims may be a tuple (fused heads)."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+    shape = (in_dim, *out_dims)
+    return (jax.random.normal(key, shape, jnp.float32) * (1.0 / in_dim) ** 0.5).astype(dtype)

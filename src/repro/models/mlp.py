@@ -1,0 +1,40 @@
+"""Feed-forward variants: SwiGLU / GeGLU / GELU / squared-ReLU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dtype_of, init_dense
+from .config import ModelConfig
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_up": init_dense(k1, d, f, dt),
+        "w_down": (
+            jax.random.normal(k3, (f, d), jnp.float32) * (1.0 / f) ** 0.5
+        ).astype(dt),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        params["w_gate"] = init_dense(k2, d, f, dt)
+    return params
+
+
+def mlp_forward(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.mlp_type == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp_type == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:  # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,377 @@
+"""Model assembly: scan-over-layers stacks, embeddings, LM loss, decode.
+
+Layers are grouped into *scan groups*: maximal runs of a repeating unit
+(e.g. Gemma2 = 13 x (local, global); Zamba2 = 6 x (5 mamba + shared) +
+2 mamba; DeepSeek = 3 dense + 58 moe). Each group's parameters are
+stacked with a leading count axis and the forward is a single
+``jax.lax.scan`` — HLO size stays O(#groups), not O(depth), which keeps
+the 61-layer DeepSeek dry-run compile tractable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .common import apply_norm, dtype_of, embed_tokens, make_norm_params, unembed
+from .config import ModelConfig
+
+VISION_EMBED_DIM = 1024  # CLIP ViT-L/14 output width (projector input)
+
+
+# --------------------------------------------------------------------- #
+# scan-group structure
+# --------------------------------------------------------------------- #
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.encoder_layers:
+        return ["dec"] * cfg.num_layers
+    return [cfg.block_kind(l) for l in range(cfg.num_layers)]
+
+
+def scan_groups(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """Partition the layer-kind sequence into (unit, count) groups."""
+    groups = _scan_groups_raw(cfg)
+    if cfg.scan_counts_override is not None:
+        ov = cfg.scan_counts_override
+        assert len(ov) == len(groups), (ov, groups)
+        groups = [(unit, int(c)) for (unit, _), c in zip(groups, ov)]
+    return groups
+
+
+def _scan_groups_raw(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    kinds = layer_kinds(cfg)
+    groups: list[tuple[tuple[str, ...], int]] = []
+    i = 0
+    L = len(kinds)
+    while i < L:
+        best_unit, best_count = (kinds[i],), 1
+        for period in range(1, min(8, L - i) + 1):
+            unit = tuple(kinds[i : i + period])
+            count = 1
+            while (
+                tuple(kinds[i + count * period : i + (count + 1) * period]) == unit
+            ):
+                count += 1
+            if count * period > len(best_unit) * best_count:
+                best_unit, best_count = unit, count
+        groups.append((best_unit, best_count))
+        i += len(best_unit) * best_count
+    return groups
+
+
+def _init_unit(cfg: ModelConfig, unit: tuple[str, ...], key) -> dict:
+    keys = jax.random.split(key, len(unit))
+    return {f"b{i}": blocks.init_block(cfg, k, keys[i]) for i, k in enumerate(unit)}
+
+
+def _init_group(cfg: ModelConfig, unit, count, key) -> dict:
+    keys = jax.random.split(key, count)
+    return jax.vmap(lambda k: _init_unit(cfg, unit, k))(keys)
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "final_norm": make_norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(keys[6], (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt)
+    groups = scan_groups(cfg)
+    gkeys = jax.random.split(keys[1], len(groups))
+    params["groups"] = [
+        _init_group(cfg, unit, count, gkeys[i])
+        for i, (unit, count) in enumerate(groups)
+    ]
+    if cfg.shared_attn_every:
+        params["shared_block"] = blocks.init_shared_block(cfg, keys[2])
+    if cfg.encoder_layers:
+        enc_cfg = cfg  # same widths
+        ekeys = jax.random.split(keys[3], 1)
+        params["enc_groups"] = [
+            _init_group(enc_cfg, ("enc",), cfg.encoder_layers, ekeys[0])
+        ]
+        params["enc_final_norm"] = make_norm_params(cfg)
+    if cfg.frontend == "vision":
+        params["vision_proj"] = (
+            jax.random.normal(keys[4], (VISION_EMBED_DIM, cfg.d_model), jnp.float32)
+            * (1.0 / VISION_EMBED_DIM) ** 0.5
+        ).astype(dt)
+    if cfg.mtp:
+        params["mtp_proj"] = (
+            jax.random.normal(keys[5], (2 * cfg.d_model, cfg.d_model), jnp.float32)
+            * (0.5 / cfg.d_model) ** 0.5
+        ).astype(dt)
+        params["mtp_block"] = blocks.init_block(
+            cfg, "dense" if cfg.moe.num_experts else "attn", keys[7]
+        )
+        params["mtp_norm"] = make_norm_params(cfg)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# positions
+# --------------------------------------------------------------------- #
+def _sinusoidal(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angles = pos / jnp.power(10_000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)[None]
+
+
+# --------------------------------------------------------------------- #
+# forward (training / prefill)
+# --------------------------------------------------------------------- #
+def _run_groups(
+    cfg: ModelConfig,
+    params: dict,
+    group_list: list,
+    group_structure: list,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    memory: jax.Array | None = None,
+    force_local: bool = False,
+    remat: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    shared = params.get("shared_block")
+    aux_total = jnp.zeros((), jnp.float32)
+    for (unit, count), gparams in zip(group_structure, group_list):
+
+        def unit_fwd(carry, up, unit=unit):
+            h, aux = carry
+            for i, kind in enumerate(unit):
+                mem_kv = None
+                if kind == "dec":
+                    from .attention import cross_memory
+
+                    mem_kv = cross_memory(cfg, up[f"b{i}"]["cross"], memory)
+                h, a = blocks.block_forward(
+                    cfg,
+                    kind,
+                    up[f"b{i}"],
+                    h,
+                    positions,
+                    shared=shared,
+                    memory_kv=mem_kv,
+                    force_local=force_local,
+                )
+                aux = aux + a
+            return (h, aux), None
+
+        body = jax.checkpoint(unit_fwd) if remat else unit_fwd
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), gparams, unroll=True if cfg.unroll_scans else 1
+        )
+    return x, aux_total
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over (stubbed) post-conv frame embeddings."""
+    frames = frames.astype(dtype_of(cfg))
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])[None]
+    x, _ = _run_groups(
+        cfg,
+        params,
+        params["enc_groups"],
+        [(("enc",), cfg.encoder_layers)],
+        x,
+        positions,
+    )
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    patches: jax.Array | None = None,
+    frames: jax.Array | None = None,
+    force_local: bool = False,
+    remat: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits, moe_aux_loss)."""
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.arch_type == "audio" or cfg.encoder_layers:
+        x = x + _sinusoidal(tokens.shape[1], cfg.d_model).astype(x.dtype)
+    else:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype) if cfg.logit_softcap else x
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(cfg, params, frames)
+    if patches is not None:
+        pe = jnp.einsum("bpv,vd->bpd", patches, params["vision_proj"]).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    positions = jnp.arange(x.shape[1])[None]
+    x, aux = _run_groups(
+        cfg,
+        params,
+        params["groups"],
+        scan_groups(cfg),
+        x,
+        positions,
+        memory=memory,
+        force_local=force_local,
+        remat=remat,
+    )
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params.get("unembed", params["embed"]), x)
+    return logits, aux
+
+
+# --------------------------------------------------------------------- #
+# LM loss (next-token CE, modality-aware masking) + optional MTP
+# --------------------------------------------------------------------- #
+def lm_loss(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    remat: bool = False,
+) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    logits, aux = forward(
+        cfg,
+        params,
+        tokens,
+        patches=batch.get("patches"),
+        frames=batch.get("frames"),
+        remat=remat,
+    )
+    n_prefix = 0 if batch.get("patches") is None else batch["patches"].shape[1]
+    text_logits = logits[:, n_prefix : n_prefix + tokens.shape[1] - 1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(text_logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+    total = ce + cfg.moe.router_aux_weight * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        # DeepSeek MTP: predict t+2 from [h_t ; emb(t+1)] through one extra
+        # block sharing embeddings/head with the trunk.
+        h = embed_tokens(params["embed"], tokens)  # cheap re-embed proxy trunk input
+        h2 = jnp.concatenate([h[:, :-1], embed_tokens(params["embed"], tokens[:, 1:])], axis=-1)
+        h2 = jnp.einsum("bsk,kd->bsd", h2, params["mtp_proj"])
+        positions = jnp.arange(h2.shape[1])[None]
+        h2, _ = blocks.block_forward(
+            cfg,
+            "dense" if cfg.moe.num_experts else "attn",
+            params["mtp_block"],
+            h2,
+            positions,
+        )
+        h2 = apply_norm(cfg, params["mtp_norm"], h2)
+        mtp_logits = unembed(cfg, params.get("unembed", params["embed"]), h2[:, :-1])
+        mtp_targets = tokens[:, 2:]
+        mlogp = jax.nn.log_softmax(mtp_logits.astype(jnp.float32), axis=-1)
+        mtp_ce = -jnp.mean(jnp.take_along_axis(mlogp, mtp_targets[..., None], axis=-1))
+        total = total + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return total, metrics
+
+
+# --------------------------------------------------------------------- #
+# decode (serving)
+# --------------------------------------------------------------------- #
+def init_cache(
+    cfg: ModelConfig, batch: int, seq: int, long_mode: bool = False
+) -> list:
+    """Stacked per-group caches."""
+    caches = []
+    for unit, count in scan_groups(cfg):
+        unit_cache = {
+            f"b{i}": blocks.init_layer_cache(cfg, kind, batch, seq, long_mode)
+            for i, kind in enumerate(unit)
+        }
+        # Stack per-layer caches by repeating the *initial values* (the
+        # xLSTM stabiliser m starts at -1e30, not 0).
+        caches.append(
+            jax.tree_util.tree_map(
+                lambda l: jnp.repeat(l[None], count, axis=0), unit_cache
+            )
+        )
+    return caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    cache: list,
+    token: jax.Array,            # (B, 1) int32
+    pos: jax.Array,              # scalar int32 — current sequence length
+    *,
+    force_local: bool = False,
+) -> tuple[jax.Array, list]:
+    """One-token decode over the full stack. Returns (logits, new_cache)."""
+    x = embed_tokens(params["embed"], token)
+    if cfg.arch_type == "audio" or cfg.encoder_layers:
+        d = cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10_000.0, dim / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pe.astype(x.dtype)
+    elif cfg.logit_softcap:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    shared = params.get("shared_block")
+    new_cache = []
+    for (unit, count), gparams, gcache in zip(
+        scan_groups(cfg), params["groups"], cache
+    ):
+
+        def unit_dec(h, scanned, unit=unit):
+            up, uc = scanned
+            new_uc = {}
+            for i, kind in enumerate(unit):
+                h, new_uc[f"b{i}"] = blocks.block_decode(
+                    cfg,
+                    kind,
+                    up[f"b{i}"],
+                    h,
+                    uc[f"b{i}"],
+                    pos,
+                    shared=shared,
+                    force_local=force_local,
+                )
+            return h, new_uc
+
+        x, gcache_new = jax.lax.scan(
+            unit_dec, x, (gparams, gcache), unroll=True if cfg.unroll_scans else 1
+        )
+        new_cache.append(gcache_new)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params.get("unembed", params["embed"]), x)
+    return logits, new_cache
+
+
+def prefill_cross_cache(
+    cfg: ModelConfig, params: dict, cache: list, frames: jax.Array
+) -> list:
+    """Whisper: run the encoder once and fill the cross K/V cache."""
+    from .attention import cross_memory
+
+    memory = encode(cfg, params, frames)
+    (unit, count), gparams = scan_groups(cfg)[0], params["groups"][0]
+
+    def fill(up):
+        k, v = cross_memory(cfg, up["b0"]["cross"], memory)
+        return k, v
+
+    ck, cv = jax.vmap(fill)(gparams)
+    new0 = dict(cache[0])
+    b0 = dict(new0["b0"])
+    b0["ck"], b0["cv"] = ck, cv
+    new0["b0"] = b0
+    return [new0] + cache[1:]

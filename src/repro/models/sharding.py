@@ -1,0 +1,284 @@
+"""Sharding policy: rule-based PartitionSpec assignment.
+
+Maps every parameter / activation / cache leaf to a PartitionSpec on the
+production mesh. Rules are name+rank based, with a universal
+*divisibility guard*: a mesh axis is only assigned to a tensor dim when
+it divides that dim, otherwise the dim is replicated — this single rule
+is what lets 10 heterogeneous architectures (4-head xLSTM next to
+128-head DeepSeek) lower on the same (data=16, model=16) mesh without
+per-arch special cases.
+
+Conventions:
+* params under ``groups`` carry one leading scan (layer-count) axis;
+* tensor parallelism over the ``model`` axis: attention heads, FFN
+  hidden, MoE expert dim, vocab;
+* batch over ``('pod', 'data')``; long-context decode (batch 1) shards
+  the KV-cache *sequence* axis over ``data`` instead;
+* ZeRO-style optimizer-state sharding adds ``data`` on the largest
+  still-replicated divisible dim.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def batch_axes(mesh: Mesh):
+    return (POD_AXIS, DATA_AXIS) if POD_AXIS in mesh.shape else (DATA_AXIS,)
+
+
+def guard(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop any axis assignment that does not divide its dim."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, ax)
+        if size and shape[i] % size == 0 and shape[i] >= size:
+            out.append(ax)
+        else:
+            # Try a single sub-axis for composite assignments.
+            if isinstance(ax, (tuple, list)):
+                kept = None
+                for sub in ax:
+                    s = _axis_size(mesh, sub)
+                    if s and shape[i] % s == 0 and shape[i] >= s:
+                        kept = sub
+                        break
+                out.append(kept)
+            else:
+                out.append(None)
+    # pad to rank
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+# name -> (which effective dim gets the model axis), by effective rank.
+# eff rank counts dims after stripping the scan axis.
+_RULES: dict[str, dict[int, int]] = {
+    # attention projections (in, H, hd) — shard heads
+    "wq": {3: 1},
+    "wk": {3: 1},
+    "wv": {3: 1},
+    "w_uq": {3: 1},
+    "w_uk": {3: 1},
+    "w_uv": {3: 1},
+    "wo": {3: 0},                 # (H, hd, D)
+    # dense mlp
+    "w_up": {2: 1, 3: 0},         # (D,F) -> F ; experts (E,D,F) -> E
+    "w_gate": {2: 1, 3: 0},
+    "w_down": {2: 0, 3: 0},       # (F,D) -> F ; experts (E,F,D) -> E
+    # embeddings
+    "embed": {2: 0},              # (V, D) -> vocab
+    "unembed": {2: 0},
+    "vision_proj": {2: 1},
+    "mtp_proj": {2: 1},
+    # mla low-rank projections
+    "w_dq": {2: 1},
+    "w_dkv": {2: 0},              # keep latent replicated; shard input dim? no - (D, r): r small
+    "w_kr": {2: 0},
+    # ssm
+    "w_in": {2: 1},               # (D, K) -> inner
+    "w_out": {2: 0},              # (K, D) -> inner
+    "w_if": {2: 1},
+    "w_q": {3: 1},
+    "w_k": {3: 1},
+    "w_v": {3: 1},
+    "w_gates": {2: 1},
+    "r_gates": {2: 1},
+}
+# names we always replicate
+_REPLICATED = {
+    "router", "conv_w", "conv_b", "a_log", "dt_bias", "d_skip",
+    "scale", "bias", "norm_scale", "q_norm", "k_norm", "kv_norm",
+}
+
+
+def param_spec(
+    mesh: Mesh, cfg: ModelConfig, path, leaf
+) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    scanned = "groups" in names or "enc_groups" in names
+    base = 1 if scanned and len(shape) >= 1 else 0
+    eff_rank = len(shape) - base
+    if name in _REPLICATED or eff_rank <= 1:
+        return P(*([None] * len(shape)))
+    # xLSTM (§Perf, xlstm x train_4k): inner-dim tensor parallelism
+    # forces an all-reduce of full (B, S, H, hd) activations per
+    # projection (iteration 1: replicate -> collective /110). The mLSTM
+    # matrix memory C (B, H, hd, hd) is the dominant state, so q/k/v
+    # shard their HEAD-DIM over 'model' (iteration 2) — C and n inherit
+    # the sharding and per-step state bytes drop 16x; the per-step
+    # all-reduce is only (B, H, hd). Everything else replicates;
+    # embeddings keep vocab sharding.
+    if cfg.arch_type == "ssm" and name not in ("embed", "unembed"):
+        if name in ("w_q", "w_k", "w_v") and eff_rank == 3:
+            spec = [None] * len(shape)
+            spec[base + 2] = MODEL_AXIS
+            return guard(mesh, P(*spec), shape)
+        return P(*([None] * len(shape)))
+    rule = _RULES.get(name)
+    spec = [None] * len(shape)
+    if rule and eff_rank in rule:
+        axis = MODEL_AXIS
+        if (
+            eff_rank == 3
+            and name in ("w_up", "w_gate", "w_down")
+            and cfg.moe.num_experts
+            and cfg.ep_axis is not None
+        ):
+            axis = cfg.ep_axis  # expert dim follows the EP layout
+        spec[base + rule[eff_rank]] = axis
+    elif name in ("w_dkv", "w_kr"):
+        pass  # replicated
+    spec = guard(mesh, P(*spec), shape)
+    if getattr(cfg, "fsdp", False):
+        import numpy as _np
+
+        # FSDP: big leaves also shard over 'data' (weights gathered
+        # per-layer at use). 16 MiB threshold keeps norms/biases whole.
+        if _np.prod(shape) * 2 >= 16 * 2**20:
+            spec = zero_spec(mesh, spec, shape)
+    return spec
+
+
+def shard_params(mesh: Mesh, cfg: ModelConfig, params_tree):
+    """Pytree of NamedShardings matching an (abstract) params pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, cfg, path, leaf)),
+        params_tree,
+    )
+
+
+def zero_spec(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """ZeRO-1: additionally shard optimizer moments over 'data' on the
+    largest still-replicated divisible dim."""
+    d = _axis_size(mesh, DATA_AXIS)
+    if not d:
+        return spec
+    flat = [
+        a
+        for entry in spec
+        if entry is not None
+        for a in (entry if isinstance(entry, (tuple, list)) else (entry,))
+    ]
+    if DATA_AXIS in flat:
+        return spec
+    spec_l = list(spec) + [None] * (len(shape) - len(spec))
+    cand = [
+        (shape[i], i)
+        for i in range(len(shape))
+        if spec_l[i] is None and shape[i] % d == 0 and shape[i] >= d
+    ]
+    if cand:
+        _, i = max(cand)
+        spec_l[i] = DATA_AXIS
+    return P(*spec_l)
+
+
+def shard_opt_state(mesh: Mesh, cfg: ModelConfig, params_tree, opt_template):
+    """Shardings for AdamWState given the params' specs."""
+    pspecs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(mesh, cfg, path, leaf), params_tree
+    )
+
+    def moment_sharding(spec, leaf):
+        return NamedSharding(mesh, zero_spec(mesh, spec, leaf.shape))
+
+    m_sh = jax.tree_util.tree_map(moment_sharding, pspecs, params_tree)
+    from ..optim.adamw import AdamWState
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=m_sh,
+        v=jax.tree_util.tree_map(lambda s: s, m_sh),
+    )
+
+
+# --------------------------------------------------------------------- #
+# activations / inputs / caches
+# --------------------------------------------------------------------- #
+def batch_spec(mesh: Mesh, shape: tuple[int, ...]) -> P:
+    return guard(mesh, P(batch_axes(mesh)), shape)
+
+
+def shard_batch(mesh: Mesh, batch_tree):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, leaf.shape)), batch_tree
+    )
+
+
+def cache_spec(
+    mesh: Mesh, cfg: ModelConfig, path, leaf, *, seq_shard: bool = False
+) -> P:
+    """KV/state caches: (count, B, S, H, hd) etc.
+
+    Default: batch over ('pod','data'), kv-heads over 'model'.
+    ``seq_shard`` (long_500k, batch 1): sequence over 'data' instead.
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    spec = [None] * len(shape)
+    if len(shape) >= 2:
+        spec[1] = batch_axes(mesh)  # batch dim after scan axis
+    if name in ("k", "v", "ck", "cv") and len(shape) == 5:
+        # (count, B, S, Hkv, hd). Flash-decode layout: the sequence dim
+        # shards over 'model' (kv-head counts rarely divide the model
+        # axis; sequence always does). Softmax over the sharded axis
+        # resolves to cheap all-reduces instead of cache all-gathers.
+        if seq_shard:
+            spec[1] = None
+            spec[2] = (DATA_AXIS, MODEL_AXIS)
+        else:
+            spec[2] = MODEL_AXIS
+    elif name in ("c", "kr") and len(shape) == 4:
+        # MLA latent: (count, B, S, r)
+        if seq_shard:
+            spec[1] = None
+            spec[2] = (DATA_AXIS, MODEL_AXIS)
+        else:
+            spec[2] = MODEL_AXIS
+    elif name in ("C",) and len(shape) == 5:
+        spec[2] = MODEL_AXIS      # (count, B, H, hd, hd)
+    elif name in ("ssm",) and len(shape) == 5:
+        spec[2] = MODEL_AXIS      # (count, B, H, hd, N)
+    return guard(mesh, P(*spec), shape)
+
+
+def shard_cache(mesh: Mesh, cfg: ModelConfig, cache_tree, *, seq_shard=False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(mesh, cfg, path, leaf, seq_shard=seq_shard)
+        ),
+        cache_tree,
+    )

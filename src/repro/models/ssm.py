@@ -1,0 +1,361 @@
+"""Recurrent blocks: Mamba2 (SSD), and xLSTM's mLSTM/sLSTM cells.
+
+All three expose a *sequence* form (scan over time — training/prefill)
+and a *step* form (single-token decode carrying explicit state). The
+O(1)-per-token decode state is what qualifies these architectures for
+the ``long_500k`` shape (524k context, batch 1).
+
+TPU adaptation note (DESIGN.md §2): CUDA Mamba kernels rely on
+warp-level parallel scans; on TPU the natural mapping is a
+``jax.lax.scan`` (sequential, one fused step body) or a chunked
+parallel form. We ship the scan form as the baseline and treat
+chunking as §Perf hillclimbing material.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dtype_of, init_dense, rms_norm
+from .config import ModelConfig
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 (simplified SSD: scalar decay per head, groups = 1)
+# --------------------------------------------------------------------- #
+def mamba2_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    heads = d_inner // cfg.ssm.head_dim
+    return d_inner, heads, cfg.ssm.state_dim
+
+
+def init_mamba2(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, heads, n = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    keys = jax.random.split(key, 4)
+    return {
+        # fused in-projection: [x (d_inner), B (n), C (n), z (d_inner), dt (heads)]
+        "w_in": init_dense(keys[0], d, 2 * d_inner + 2 * n + heads, dt),
+        "conv_w": (
+            jax.random.normal(keys[1], (cfg.ssm.conv_width, conv_dim), jnp.float32)
+            * 0.2
+        ).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, float(heads), heads, dtype=jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "w_out": (
+            jax.random.normal(keys[2], (d_inner, d), jnp.float32)
+            * (1.0 / d_inner) ** 0.5
+        ).astype(dt),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
+    d_inner, heads, n = mamba2_dims(cfg)
+    xbc = proj[..., : d_inner + 2 * n]
+    z = proj[..., d_inner + 2 * n : 2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n :]
+    return xbc, z, dt
+
+
+def _mamba2_step(cfg, params, state, xbc, z, dt_raw):
+    """One SSD step. state: (B, H, hd, N); returns (state, y (B, d_inner))."""
+    d_inner, heads, n = mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+    x = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner : d_inner + n]
+    c_in = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(-jnp.exp(params["a_log"])[None] * dt)                 # (B,H)
+    xh = x.reshape(*x.shape[:-1], heads, hd).astype(jnp.float32)
+    update = jnp.einsum("bhk,bn->bhkn", xh * dt[..., None], b_in.astype(jnp.float32))
+    state = state * decay[..., None, None] + update
+    y = jnp.einsum("bhkn,bn->bhk", state, c_in.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh
+    return state, y.reshape(*x.shape[:-1], d_inner)
+
+
+def mamba2_forward(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) → (B, S, D); causal depthwise conv + SSD scan."""
+    b, s, d = x.shape
+    d_inner, heads, n = mamba2_dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, params["w_in"])
+    xbc, z, dt = _mamba2_split(cfg, proj)
+    # Causal depthwise conv over time.
+    w = params["conv_w"]
+    pad = cfg.ssm.conv_width - 1
+    xbc_pad = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + s, :] * w[i][None, None, :]
+        for i in range(cfg.ssm.conv_width)
+    ) + params["conv_b"][None, None, :]
+    conv = jax.nn.silu(conv)
+
+    state0 = jnp.zeros((b, heads, cfg.ssm.head_dim, n), jnp.float32)
+
+    def step(state, inputs):
+        xbc_t, z_t, dt_t = inputs
+        state, y = _mamba2_step(cfg, params, state, xbc_t, z_t, dt_t)
+        return state, y
+
+    _, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            conv.transpose(1, 0, 2),
+            z.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2),
+        ),
+    )
+    y = ys.transpose(1, 0, 2).astype(x.dtype)          # (B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    return jnp.einsum("bsk,kd->bsd", y, params["w_out"])
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, heads, n = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros(
+            (batch, cfg.ssm.conv_width - 1, conv_dim), dtype_of(cfg)
+        ),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm.head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, params: dict, x: jax.Array, state: dict):
+    """x: (B, 1, D); O(1) step."""
+    proj = jnp.einsum("bsd,dk->bsk", x, params["w_in"])[:, 0]
+    xbc, z, dt = _mamba2_split(cfg, proj)
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv = jnp.einsum("bwk,wk->bk", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_ssm, y = _mamba2_step(cfg, params, state["ssm"], conv, z, dt)
+    y = rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        params["norm_scale"],
+    )
+    out = jnp.einsum("bk,kd->bd", y, params["w_out"])[:, None, :]
+    return out, {"conv": window[:, 1:, :], "ssm": new_ssm}
+
+
+# --------------------------------------------------------------------- #
+# mLSTM (xLSTM): matrix memory with exponential gating
+# --------------------------------------------------------------------- #
+def mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_inner = int(cfg.ssm.proj_factor_mlstm * cfg.d_model)
+    heads = cfg.num_heads
+    hd = d_inner // heads
+    return d_inner, heads, hd
+
+
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, heads, hd = mlstm_dims(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "w_up": init_dense(keys[0], d, 2 * d_inner, dt),   # [x_in, z_gate]
+        "w_q": init_dense(keys[1], d_inner, (heads, hd), dt),
+        "w_k": init_dense(keys[2], d_inner, (heads, hd), dt),
+        "w_v": init_dense(keys[3], d_inner, (heads, hd), dt),
+        "w_if": init_dense(keys[4], d_inner, 2 * heads, dt),  # i, f pre-acts
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "w_down": (
+            jax.random.normal(keys[5], (d_inner, d), jnp.float32)
+            * (1.0 / d_inner) ** 0.5
+        ).astype(dt),
+    }
+
+
+def _mlstm_step(params, carry, q, k, v, i_pre, f_pre):
+    """Stabilised exponential gating (xLSTM eq. 15-19).
+
+    carry: C (B,H,hd,hd), n (B,H,hd), m (B,H).
+    """
+    C, n, m = carry
+    log_f = -jax.nn.softplus(-f_pre)            # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    C = C * f_g[..., None, None] + jnp.einsum("bhk,bhq->bhkq", v, k) * i_g[
+        ..., None, None
+    ]
+    n = n * f_g[..., None] + k * i_g[..., None]
+    num = jnp.einsum("bhkq,bhq->bhk", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvif(cfg, params, x_in):
+    _, heads, hd = mlstm_dims(cfg)
+    q = jnp.einsum("...k,khd->...hd", x_in, params["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("...k,khd->...hd", x_in, params["w_k"]).astype(
+        jnp.float32
+    ) / jnp.sqrt(hd)
+    v = jnp.einsum("...k,khd->...hd", x_in, params["w_v"]).astype(jnp.float32)
+    gates = jnp.einsum("...k,kh->...h", x_in, params["w_if"]).astype(jnp.float32)
+    return q, k, v, gates[..., :heads], gates[..., heads:]
+
+
+MLSTM_CHUNK = 64  # time chunk for the nested-checkpoint scan
+
+
+def mlstm_forward(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    """Chunked scan: outer scan over S/CHUNK with an inner checkpointed
+    scan over CHUNK steps. The naive single scan saves every per-step
+    matrix memory C (B, H, hd, hd) for the backward — multi-TB at 4k
+    sequence; checkpointing the inner scan keeps only chunk-boundary
+    states and recomputes within chunks (§Perf, xlstm iteration 2 —
+    memory term /13 for ~1.3x forward recompute)."""
+    b, s, d = x.shape
+    d_inner, heads, hd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, params["w_up"])
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, params, x_in)
+
+    carry0 = (
+        jnp.zeros((b, heads, hd, hd), jnp.float32),
+        jnp.zeros((b, heads, hd), jnp.float32),
+        jnp.full((b, heads), -1e30, jnp.float32),
+    )
+
+    ck = MLSTM_CHUNK if s % MLSTM_CHUNK == 0 else 1
+    n_chunks = s // ck
+
+    def chunkify(t):  # (B, S, ...) -> (n_chunks, ck, B, ...)
+        return t.reshape(b, n_chunks, ck, *t.shape[2:]).swapaxes(0, 1).swapaxes(1, 2)
+
+    xs = tuple(chunkify(t) for t in (q, k, v, i_pre, f_pre))
+
+    def inner(carry, inp_chunk):
+        def step(c, inp):
+            return _mlstm_step(params, c, *inp)
+
+        return jax.lax.scan(step, carry, inp_chunk)
+
+    def outer(carry, inp_chunk):
+        return jax.checkpoint(inner)(carry, inp_chunk)
+
+    _, hs = jax.lax.scan(outer, carry0, xs)  # (n_chunks, ck, B, H, hd)
+    h = (
+        hs.swapaxes(1, 2)
+        .swapaxes(0, 1)
+        .reshape(b, s, d_inner)
+        .astype(x.dtype)
+    )
+    h = rms_norm(h, params["norm_scale"]) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", h, params["w_down"])
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    _, heads, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, heads, hd), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg: ModelConfig, params: dict, x: jax.Array, state: dict):
+    b = x.shape[0]
+    d_inner, heads, hd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, params["w_up"])[:, 0]
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, params, x_in)
+    carry = (state["C"], state["n"], state["m"])
+    carry, h = _mlstm_step(params, carry, q, k, v, i_pre, f_pre)
+    h = h.reshape(b, d_inner).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"]) * jax.nn.silu(z)
+    out = jnp.einsum("bk,kd->bd", h, params["w_down"])[:, None, :]
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# --------------------------------------------------------------------- #
+# sLSTM (xLSTM): scalar memory with recurrent gate connections
+# --------------------------------------------------------------------- #
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    f = int(cfg.ssm.proj_factor_slstm * d)
+    keys = jax.random.split(key, 4)
+    return {
+        "w_gates": init_dense(keys[0], d, 4 * d, dt),       # i, f, z, o
+        "r_gates": (
+            jax.random.normal(keys[1], (d, 4 * d), jnp.float32) * (1.0 / d) ** 0.5
+        ).astype(dt),
+        "norm_scale": jnp.zeros((d,), jnp.float32),
+        "w_up": init_dense(keys[2], d, 2 * f, dt),
+        "w_down": (
+            jax.random.normal(keys[3], (f, d), jnp.float32) * (1.0 / f) ** 0.5
+        ).astype(dt),
+    }
+
+
+def _slstm_step(params, carry, x_t):
+    """carry: c, n, h, m — each (B, D)."""
+    c, n, h, m = carry
+    d = c.shape[-1]
+    pre = (
+        jnp.einsum("bd,dk->bk", x_t, params["w_gates"])
+        + jnp.einsum("bd,dk->bk", h.astype(x_t.dtype), params["r_gates"])
+    ).astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = c * f_g + i_g * jnp.tanh(z_pre)
+    n = n * f_g + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_forward(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    carry0 = (
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.full((b, d), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(
+        lambda carry, x_t: _slstm_step(params, carry, x_t),
+        carry0,
+        x.transpose(1, 0, 2),
+    )
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"])
+    f = params["w_up"].shape[-1] // 2
+    up = jnp.einsum("bsd,dk->bsk", h, params["w_up"])
+    h = jax.nn.gelu(up[..., :f], approximate=True) * up[..., f:]
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(cfg: ModelConfig, params: dict, x: jax.Array, state: dict):
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(params, carry, x[:, 0])
+    h = rms_norm(h.astype(x.dtype), params["norm_scale"])
+    f = params["w_up"].shape[-1] // 2
+    up = jnp.einsum("bd,dk->bk", h, params["w_up"])
+    h = jax.nn.gelu(up[..., :f], approximate=True) * up[..., f:]
+    out = jnp.einsum("bf,fd->bd", h, params["w_down"])[:, None, :]
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW + schedules (pure JAX pytree transforms)."""
+
+from .adamw import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule"]

@@ -1,0 +1,93 @@
+"""AdamW with configurable moment dtype.
+
+Moments default to fp32; very large models (DeepSeek-V3) use bf16
+moments (``cfg.opt_dtype``) so the optimizer state fits v5e HBM — the
+trade-off is noted in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: float | jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+):
+    step = state.step + 1
+
+    if grad_clip > 0:
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+        )
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int
+):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        progress = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(progress, 0.0, 1.0)))
+        return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,254 @@
+"""Roofline-term derivation from compiled XLA artifacts.
+
+Per (arch × shape × mesh), from the dry-run's lowered/compiled program:
+
+    compute    = HLO_FLOPs   / peak_FLOP/s          [per chip]
+    memory     = HLO_bytes   / HBM_bw               [per chip]
+    collective = collective_bytes / ICI link_bw     [per chip]
+
+``cost_analysis()`` reports the *per-device* (post-GSPMD-partitioning)
+module, so the terms above are already per chip — equivalent to the
+assignment's ``global / (chips × bw)`` formulation.
+
+``collective_bytes`` is not in cost_analysis: we parse the optimized HLO
+and sum the **result bytes of every collective op** (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute), scaled
+by an op-aware wire factor (all-reduce moves ~2x its payload in a
+ring; the others ~1x). Shapes in the post-partitioning module are
+per-shard, so this is bytes-through-the-ICI per chip.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# Ring all-reduce = reduce-scatter + all-gather ≈ 2x payload on the wire.
+_WIRE_FACTOR = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(%?)("
+    + "|".join(_COLLECTIVES)
+    + r")(-start|-done)?\b"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Wire bytes per chip, by collective kind (from partitioned HLO)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(4) == "-done":
+            continue  # async pair: count only the -start
+        kind = m.group(3)
+        nbytes = _shape_bytes(m.group(1))
+        out[kind] += nbytes * _WIRE_FACTOR.get(kind, 1.0)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh_desc: str
+    chips: int
+    flops: float                   # per chip
+    hbm_bytes: float               # per chip
+    coll_bytes: float              # per chip (wire)
+    coll_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0       # 6*N*D (global, active params)
+    peak_flops: float = mesh_mod.PEAK_FLOPS_BF16
+    hbm_bw: float = mesh_mod.HBM_BW
+    ici_bw: float = mesh_mod.ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops): remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh_desc,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.flops,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyse(
+    *,
+    arch: str,
+    shape: str,
+    mesh,
+    compiled,
+    lowered_text: str | None = None,
+    model_flops: float = 0.0,
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text or compiled.as_text()
+    coll = collective_bytes(text)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh_desc="x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        chips=chips,
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=sum(coll.values()),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+# --------------------------------------------------------------------- #
+# Scan-aware cost measurement.
+#
+# XLA's HloCostAnalysis counts a while/scan body ONCE regardless of trip
+# count, so flops/bytes/collectives of a scanned-layer model are
+# undercounted by ~the depth. Cost analysis is additive, so we recover
+# exact totals with probe lowerings: lower the model with every scan
+# group at count=1 (A0), then with group i at count=2 (Ai); the per-unit
+# cost of group i is (Ai - A0) and
+#
+#     total = A0 + Σ_i (true_count_i − 1) · (Ai − A0).
+#
+# The probes are 2-4 layer models — cheap to compile — while the full
+# rolled program is still compiled once for the memory analysis and the
+# lowering proof.
+# --------------------------------------------------------------------- #
+def _cost_vector(compiled) -> dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        **{f"coll:{k}": v for k, v in coll.items()},
+    }
+
+
+def _vec_sub(a: dict, b: dict) -> dict:
+    return {k: a.get(k, 0.0) - b.get(k, 0.0) for k in set(a) | set(b)}
+
+
+def _vec_axpy(acc: dict, alpha: float, d: dict) -> dict:
+    return {
+        k: acc.get(k, 0.0) + alpha * d.get(k, 0.0) for k in set(acc) | set(d)
+    }
+
+
+def measure_corrected(cfg, shape_name: str, mesh, build_lowered) -> dict:
+    """Exact scan-corrected cost vector via probe lowerings.
+
+    ``build_lowered(cfg, shape_name, mesh)`` must return a Lowered.
+    """
+    from .models.model import _scan_groups_raw
+
+    groups = _scan_groups_raw(cfg)
+    dims = [count for _, count in groups]
+    has_enc = cfg.encoder_layers > 0
+    if has_enc:
+        dims.append(cfg.encoder_layers)
+
+    def probe_cfg(counts):
+        dec = tuple(counts[: len(groups)])
+        kw = {"scan_counts_override": dec, "unroll_scans": True}
+        if has_enc:
+            kw["encoder_layers"] = counts[len(groups)]
+        return cfg.with_overrides(**kw)
+
+    base_counts = [1] * len(dims)
+    vec0 = _cost_vector(
+        build_lowered(probe_cfg(base_counts), shape_name, mesh).compile()
+    )
+    total = dict(vec0)
+    for i, true_count in enumerate(dims):
+        if true_count <= 1:
+            continue
+        counts = list(base_counts)
+        counts[i] = 2
+        vec_i = _cost_vector(
+            build_lowered(probe_cfg(counts), shape_name, mesh).compile()
+        )
+        unit = _vec_sub(vec_i, vec0)
+        total = _vec_axpy(total, true_count - 1, unit)
+    return total
+
+
+def model_flops_for(cfg, shape_name: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference forward), with
+    N = active params (MoE) and D = tokens processed."""
+    n = cfg.active_param_count()
+    if shape_name.startswith("train"):
+        return 6.0 * n * batch * seq
+    if shape_name.startswith("prefill"):
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch  # decode: one token per sequence

@@ -1,0 +1,119 @@
+"""Distributed GNN training: the paper's variant comparison, end to end."""
+
+import numpy as np
+import pytest
+
+from repro.core import make_backend, make_classifier
+from repro.gnn import DistributedTrainer
+from repro.gnn.train import collect_traces
+from repro.graph import generate, partition_graph
+
+
+@pytest.fixture(scope="module")
+def parts():
+    g = generate("products", seed=0, scale=0.15)
+    return partition_graph(g, 4)
+
+
+COMMON = dict(epochs=5, batch_size=16, train_model=False, buffer_frac=0.25)
+
+
+@pytest.fixture(scope="module")
+def results(parts):
+    out = {
+        "distdgl": DistributedTrainer(parts, variant="distdgl", **COMMON).run(),
+        "fixed": DistributedTrainer(parts, variant="fixed", **COMMON).run(),
+        "massivegnn": DistributedTrainer(parts, variant="massivegnn", **COMMON).run(),
+        "rudder": DistributedTrainer(
+            parts, variant="rudder", deciders=["gemma3-4b"], **COMMON
+        ).run(),
+    }
+    return out
+
+
+class TestVariantOrdering:
+    def test_prefetch_variants_hit(self, results):
+        assert results["distdgl"].mean_pct_hits == 0.0
+        assert results["fixed"].mean_pct_hits > 5.0
+        assert results["rudder"].mean_pct_hits > 5.0
+
+    def test_prefetching_reduces_communication(self, results):
+        assert results["fixed"].total_comm < results["distdgl"].total_comm
+        assert results["rudder"].total_comm < results["distdgl"].total_comm
+
+    def test_rudder_less_replacement_traffic_than_fixed(self, results):
+        """Adaptive replacement executes fewer rounds than every-minibatch."""
+        fixed_repl = sum(sum(l.replaced) for l in results["fixed"].logs)
+        rudder_repl = sum(sum(l.replaced) for l in results["rudder"].logs)
+        assert rudder_repl <= fixed_repl
+
+    def test_epoch_time_ordering(self, results):
+        """Paper §5.1: baseline slowest; Rudder at least matches fixed."""
+        t = {k: r.mean_epoch_time for k, r in results.items()}
+        assert t["rudder"] <= t["distdgl"]
+        assert t["fixed"] <= t["distdgl"]
+        assert t["rudder"] <= t["fixed"] * 1.05
+
+    def test_massivegnn_warm_start_hits_early(self, results):
+        """Degree-based warm start gives nonzero first-minibatch hits."""
+        first_hits = results["massivegnn"].logs[0].pct_hits[0]
+        assert first_hits > 0.0
+        assert results["rudder"].logs[0].pct_hits[0] == 0.0  # cold start
+
+
+class TestSyncVsAsync:
+    def test_sync_mode_slower(self, parts):
+        r_async = DistributedTrainer(
+            parts, variant="rudder", deciders=["gemma3-4b"], **COMMON
+        ).run()
+        r_sync = DistributedTrainer(
+            parts, variant="rudder", deciders=["gemma3-4b"], mode="sync", **COMMON
+        ).run()
+        assert r_sync.mean_epoch_time > r_async.mean_epoch_time
+        # sync replacement interval is 1
+        assert r_sync.controllers[0].replacement_interval == pytest.approx(1.0)
+        assert r_async.controllers[0].replacement_interval > 1.0
+
+
+class TestClassifierController:
+    def test_classifier_controller_runs(self, parts):
+        X, y = collect_traces(parts, epochs=2, batch_size=16)
+        assert X.shape[0] == y.shape[0] > 0
+        clf = make_classifier("lr").fit(X, y)
+        r = DistributedTrainer(
+            parts, variant="rudder", deciders=[clf], **COMMON
+        ).run()
+        assert any(d for log in r.logs for d in log.decisions)
+        assert r.mean_pct_hits > 0.0
+
+    def test_classifier_decides_more_frequently_than_llm(self, parts):
+        """Table 2: classifier r ~1-2, LLM agents r >= latency."""
+        X, y = collect_traces(parts, epochs=2, batch_size=16)
+        clf = make_classifier("lr").fit(X, y)
+        r_clf = DistributedTrainer(
+            parts, variant="rudder", deciders=[clf], **COMMON
+        ).run()
+        kw = dict(COMMON, epochs=14)
+        r_llm = DistributedTrainer(
+            parts, variant="rudder", deciders=["qwen-1.5b"], **kw
+        ).run()
+        assert (
+            r_clf.controllers[0].replacement_interval
+            < r_llm.controllers[0].replacement_interval
+        )
+
+
+class TestTrainingIntegrity:
+    def test_model_learns_and_accuracy_unaffected_by_variant(self):
+        """Rudder does not alter sampling or training math (§4.5):
+        same seeds -> same losses regardless of prefetch variant."""
+        g = generate("arxiv", seed=1, scale=0.08)
+        parts = partition_graph(g, 2)
+        kw = dict(epochs=4, batch_size=16, train_model=True, buffer_frac=0.25, seed=7)
+        r1 = DistributedTrainer(parts, variant="distdgl", **kw).run()
+        r2 = DistributedTrainer(
+            parts, variant="rudder", deciders=["gemma3-4b"], **kw
+        ).run()
+        assert r1.losses[-1] < r1.losses[0]
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-4)
+        assert r1.accuracy == pytest.approx(r2.accuracy, abs=1e-6)

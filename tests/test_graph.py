@@ -1,0 +1,98 @@
+"""Graph substrate: generation, partitioning, sampling invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import DATASET_PRESETS, NeighborSampler, generate, partition_graph
+from repro.graph.sampler import unique_remote
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate("arxiv", seed=0, scale=0.1)
+
+
+class TestGenerate:
+    def test_csr_well_formed(self, graph):
+        assert graph.indptr[0] == 0
+        assert graph.indptr[-1] == len(graph.indices)
+        assert np.all(np.diff(graph.indptr) >= 0)
+        assert graph.indices.max() < graph.num_nodes
+
+    def test_symmetry(self, graph):
+        """Undirected: edge (u,v) implies (v,u)."""
+        rng = np.random.default_rng(0)
+        for u in rng.choice(graph.num_nodes, 30):
+            for v in graph.neighbors(int(u))[:5]:
+                assert int(u) in graph.neighbors(int(v)).tolist()
+
+    def test_power_law_ish_degrees(self, graph):
+        deg = graph.degree()
+        assert deg.max() > 8 * max(deg.mean(), 1)  # heavy tail
+
+    def test_presets_scale(self):
+        g = generate("yelp", scale=0.05)
+        assert g.features.shape[1] == DATASET_PRESETS["yelp"].feature_dim
+        assert abs(g.num_nodes - 14_000 * 0.05) < 100
+
+    def test_deterministic(self):
+        a = generate("arxiv", seed=3, scale=0.05)
+        b = generate("arxiv", seed=3, scale=0.05)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.train_nodes, b.train_nodes)
+
+
+class TestPartition:
+    @pytest.mark.parametrize("p", [2, 4, 8])
+    def test_partition_complete_and_balanced(self, graph, p):
+        parts = partition_graph(graph, p)
+        sizes = np.array([len(n) for n in parts.local_nodes])
+        assert sizes.sum() == graph.num_nodes
+        assert sizes.max() <= 1.5 * sizes.min() + 16
+        # every node assigned exactly once
+        all_nodes = np.concatenate(parts.local_nodes)
+        assert len(np.unique(all_nodes)) == graph.num_nodes
+
+    def test_community_partition_beats_random_cut(self, graph):
+        parts = partition_graph(graph, 4)
+        random_cut_frac = 1 - 1 / 4  # expected for random assignment
+        assert parts.edge_cut / graph.num_edges < 0.6 * random_cut_frac
+
+    def test_single_partition(self, graph):
+        parts = partition_graph(graph, 1)
+        assert parts.edge_cut == 0
+
+
+class TestSampler:
+    def test_shapes_and_membership(self, graph):
+        s = NeighborSampler(graph, fanouts=(4, 6))
+        rng = np.random.default_rng(0)
+        mb = s.sample(graph.train_nodes[:10], rng)
+        assert mb.layer_nbrs[0].shape == (10, 4)
+        assert mb.layer_nbrs[1].shape == (40, 6)
+        # sampled entries are true neighbors (or self for isolated)
+        for i, u in enumerate(mb.seeds[:5]):
+            nbrs = set(graph.neighbors(int(u)).tolist()) | {int(u)}
+            assert set(mb.layer_nbrs[0][i].tolist()) <= nbrs
+
+    def test_unique_remote_excludes_local(self, graph):
+        parts = partition_graph(graph, 4)
+        s = NeighborSampler(graph)
+        rng = np.random.default_rng(1)
+        seeds = parts.local_train_nodes(0)[:8]
+        if len(seeds) == 0:
+            pytest.skip("partition 0 has no train nodes")
+        mb = s.sample(seeds, rng)
+        rem = unique_remote(mb, parts.part_of, 0)
+        assert np.all(parts.part_of[rem] != 0)
+        assert len(np.unique(rem)) == len(rem)
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_sampler_ids_in_range(self, graph, seed):
+        s = NeighborSampler(graph, fanouts=(3, 3))
+        rng = np.random.default_rng(seed)
+        mb = s.sample(graph.train_nodes[:4], rng)
+        assert mb.unique_nodes.min() >= 0
+        assert mb.unique_nodes.max() < graph.num_nodes

@@ -1,0 +1,84 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,f", [(32, 100), (100, 300), (57, 512), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_rows_sweep(n, f, dtype):
+    table = jax.random.normal(jax.random.PRNGKey(0), (n, f)).astype(dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (17,), 0, n)
+    out = ops.gather_rows(table, idx)
+    want = ref.gather_rows(table, idx)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("b,k,f", [(4, 3, 64), (9, 10, 300), (16, 25, 100), (2, 7, 600)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_mean_sweep(b, k, f, dtype):
+    table = jax.random.normal(jax.random.PRNGKey(2), (50, f)).astype(dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(3), (b, k), 0, 50)
+    out = ops.gather_mean(table, idx)
+    want = ref.gather_mean(table, idx)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("s,k,f", [(8, 5, 100), (20, 10, 256), (3, 25, 64)])
+def test_segment_sum_sweep(s, k, f):
+    data = jax.random.normal(jax.random.PRNGKey(4), (s * k, f))
+    seg = jnp.repeat(jnp.arange(s), k)
+    out = ops.segment_sum_equal(data, k)
+    want = ref.segment_sum(data, seg, s)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [10, 1000, 8192, 10_000])
+def test_score_update_sweep(n):
+    scores = jax.random.uniform(jax.random.PRNGKey(5), (n,), minval=0.0, maxval=4.0)
+    accessed = jax.random.bernoulli(jax.random.PRNGKey(6), 0.4, (n,))
+    out, stale = ops.score_update(scores, accessed)
+    want, want_stale = ref.score_update(scores, accessed)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+    assert int(stale) == int(want_stale)
+
+
+@given(
+    n=st.integers(1, 300),
+    p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=20, deadline=None)
+def test_score_update_property(n, p, seed):
+    """Kernel == scoring policy for arbitrary buffer sizes/access rates."""
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (n,), maxval=3.0)
+    accessed = jax.random.bernoulli(jax.random.PRNGKey(seed + 1), p, (n,))
+    out, stale = ops.score_update(scores, accessed)
+    want, want_stale = ref.score_update(scores, accessed)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+    assert int(stale) == int(want_stale)
+
+
+def test_gather_matches_buffer_semantics():
+    """The kernel path assembles exactly the features the buffer returns
+    (integration: core.buffer x kernels)."""
+    from repro.core.buffer import PersistentBuffer
+
+    feats = np.random.default_rng(0).normal(size=(64, 100)).astype(np.float32)
+    buf = PersistentBuffer(capacity=16, feature_dim=100)
+    ids = np.arange(10, 26)
+    buf.insert(ids, feats[ids])
+    hit, slots = buf.lookup(np.array([12, 15, 40]))
+    hit_slots = slots[hit]
+    got = ops.gather_rows(jnp.asarray(buf.features), jnp.asarray(hit_slots))
+    np.testing.assert_allclose(got, feats[[12, 15]], rtol=1e-6)

@@ -1,0 +1,83 @@
+"""Launcher step builders and input specs (no 512-device flags here —
+single CPU device; the production-mesh path is covered by dryrun runs)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_arch_ids, get_config, get_smoke_config
+from repro.launch.steps import (
+    SHAPES,
+    input_specs,
+    make_decode_step,
+    shape_supported,
+)
+from repro.models import model as M
+
+
+class TestShapeSupport:
+    def test_long_500k_rules(self):
+        """DESIGN.md skip table: sub-quadratic archs only."""
+        allowed = {"xlstm-350m", "zamba2-1.2b", "gemma2-2b"}
+        for arch in all_arch_ids():
+            ok, reason = shape_supported(get_config(arch), "long_500k")
+            assert ok == (arch in allowed), (arch, reason)
+            if not ok:
+                assert "full-attention" in reason
+
+    def test_other_shapes_always_supported(self):
+        for arch in all_arch_ids():
+            for shape in ("train_4k", "prefill_32k", "decode_32k"):
+                assert shape_supported(get_config(arch), shape)[0]
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape", list(SHAPES))
+    def test_specs_are_abstract(self, shape):
+        cfg = get_config("gemma2-2b")
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        ):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)  # no allocation
+
+    def test_train_shapes(self):
+        cfg = get_config("qwen3-8b")
+        specs = input_specs(cfg, "train_4k")
+        assert specs["batch"]["tokens"].shape == (256, 4096)
+
+    def test_decode_cache_matches_init_cache(self):
+        cfg = get_smoke_config("qwen3-8b")
+        specs = jax.eval_shape(lambda: M.init_cache(cfg, 128, 32768))
+        # structure must match a small real cache of the same config
+        real = M.init_cache(cfg, 2, 16)
+        assert jax.tree_util.tree_structure(specs) == (
+            jax.tree_util.tree_structure(real)
+        )
+
+    def test_whisper_prefill_uses_true_decoder_length(self):
+        cfg = get_config("whisper-large-v3")
+        specs = input_specs(cfg, "prefill_32k")
+        assert specs["batch"]["tokens"].shape[1] == 448
+        assert specs["batch"]["frames"].shape[1:] == (1500, 1280)
+
+    def test_long_mode_window_cache(self):
+        cfg = get_config("gemma2-2b")
+        specs = input_specs(cfg, "long_500k")
+        leaves = jax.tree_util.tree_leaves(specs["cache"])
+        # no leaf carries the full 524288 sequence (sliding window only)
+        assert all(
+            all(d <= cfg.sliding_window or d > 524_288 or d != 524_288 for d in l.shape)
+            for l in leaves
+        )
+        assert max(max(l.shape) for l in leaves) < 524_288
+
+
+def test_decode_step_greedy_token():
+    cfg = get_smoke_config("gemma2-2b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_cache(cfg, 2, 8)
+    step = make_decode_step(cfg)
+    tok, cache = step(params, cache, jnp.ones((2, 1), jnp.int32), jnp.int32(0))
+    assert tok.shape == (2, 1) and tok.dtype == jnp.int32
+    assert int(tok.max()) < cfg.vocab_size

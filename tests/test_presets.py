@@ -1,0 +1,22 @@
+"""Named Rudder experiment presets build and run."""
+
+import pytest
+
+from repro.configs.rudder_gnn import EXPERIMENTS, build_trainer
+
+
+def test_all_presets_well_formed():
+    for name, exp in EXPERIMENTS.items():
+        assert exp.variant in ("distdgl", "fixed", "massivegnn", "rudder"), name
+        assert 0 < exp.buffer_frac <= 1
+
+
+def test_preset_roundtrip():
+    tr = build_trainer("products_25pct_fixed")
+    res = tr.run()
+    assert res.mean_pct_hits > 0
+
+
+def test_unknown_preset_raises():
+    with pytest.raises(KeyError):
+        build_trainer("nope")

@@ -1,0 +1,77 @@
+"""Roofline utilities: HLO collective parsing, report math, MODEL_FLOPS."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.roofline import (
+    RooflineReport,
+    _shape_bytes,
+    collective_bytes,
+    model_flops_for,
+)
+
+HLO_SAMPLE = """
+  %all-gather.3 = f32[36,8,32768,8,128]{4,2,1,0,3} all-gather(%x), dimensions={3}
+  %all-reduce.5 = bf16[1024,512]{1,0} all-reduce(%y), replica_groups={}
+  %ar.start = f32[16]{0} all-reduce-start(%z)
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q)
+  %cp = u8[100]{0} collective-permute(%w)
+  %dot.1 = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[10,10]") == 400
+        assert _shape_bytes("bf16[8]") == 16
+        assert _shape_bytes("pred[3]") == 3
+
+    def test_tuple(self):
+        assert _shape_bytes("(f32[4,4]{1,0},f32[4,4]{1,0})") == 128
+
+    def test_scalar_and_unknown(self):
+        assert _shape_bytes("f32[]") == 4
+        assert _shape_bytes("token[]") == 0
+
+
+class TestCollectiveParse:
+    def test_kinds_and_wire_factor(self):
+        out = collective_bytes(HLO_SAMPLE)
+        assert out["all-gather"] == 36 * 8 * 32768 * 8 * 128 * 4
+        # all-reduce has 2x ring wire factor
+        assert out["all-reduce"] == (1024 * 512 * 2 + 16 * 4) * 2.0
+        assert out["all-to-all"] == 128
+        assert out["collective-permute"] == 100
+
+    def test_ignores_compute_ops(self):
+        out = collective_bytes("%dot = f32[8,8]{1,0} dot(%a, %b)")
+        assert sum(out.values()) == 0
+
+
+class TestReport:
+    def test_bottleneck_and_terms(self):
+        r = RooflineReport(
+            arch="a", shape="s", mesh_desc="m", chips=4,
+            flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+            model_flops=4 * 197e12 * 0.25,
+        )
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.t_memory == pytest.approx(2.0)
+        assert r.t_collective == pytest.approx(0.5)
+        assert r.bottleneck == "memory"
+        assert r.useful_flops_ratio == pytest.approx(0.25)
+
+
+class TestModelFlops:
+    def test_train_vs_decode_scaling(self):
+        cfg = get_config("qwen3-8b")
+        train = model_flops_for(cfg, "train_4k", 256, 4096)
+        dec = model_flops_for(cfg, "decode_32k", 128, 32768)
+        # train: 6*N*B*S; decode: 2*N*B
+        assert train / dec == pytest.approx(3 * 256 * 4096 / 128)
+
+    def test_moe_uses_active_params(self):
+        cfg = get_config("deepseek-v3-671b")
+        total = model_flops_for(cfg, "train_4k", 256, 4096)
+        dense_equiv = 6 * cfg.param_count() * 256 * 4096
+        assert total < 0.1 * dense_equiv  # 37B active of 671B

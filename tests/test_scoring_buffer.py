@@ -1,0 +1,114 @@
+"""Unit + property tests for the scoring policy and persistent buffer."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scoring
+from repro.core.buffer import PersistentBuffer
+
+
+class TestScoringPolicy:
+    def test_access_increments(self):
+        s = scoring.update_scores(np.array([1.0, 2.0]), np.array([True, True]))
+        np.testing.assert_allclose(s, [2.0, 3.0])
+
+    def test_idle_decays(self):
+        s = scoring.update_scores(np.array([1.0, 2.0]), np.array([False, False]))
+        np.testing.assert_allclose(s, [0.95, 1.9])
+
+    def test_stale_threshold(self):
+        assert scoring.stale_mask(np.array([0.94, 0.95, 1.0])).tolist() == [
+            True,
+            False,
+            False,
+        ]
+
+    def test_more_aggressive_than_lfu(self):
+        """A once-hot node decays to stale after idle rounds — LFU would
+        keep it forever (cache-pollution scenario from §2.1)."""
+        score = 5.0
+        rounds = scoring.rounds_until_stale(score)
+        assert rounds < 40  # log(0.95/5)/log(0.95) ≈ 33
+        s = np.array([score])
+        for _ in range(rounds):
+            s = scoring.update_scores(s, np.array([False]))
+        assert scoring.stale_mask(s)[0]
+
+    @given(
+        scores=st.lists(
+            st.floats(min_value=0.0, max_value=100.0), min_size=1, max_size=64
+        ),
+        accessed=st.data(),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_policy_invariants(self, scores, accessed):
+        s = np.array(scores, dtype=np.float32)
+        a = np.array(
+            accessed.draw(
+                st.lists(st.booleans(), min_size=len(s), max_size=len(s))
+            )
+        )
+        out = scoring.update_scores(s, a)
+        # accessed scores strictly increase; idle strictly decrease (s>0)
+        assert np.all(out[a] == s[a] + 1.0)
+        assert np.all(out[~a] <= s[~a])
+        assert np.all(out >= 0.0)
+
+
+class TestPersistentBuffer:
+    def test_insert_and_lookup(self):
+        buf = PersistentBuffer(capacity=4)
+        assert buf.insert(np.array([1, 2, 3])) == 3
+        hit, slots = buf.lookup(np.array([1, 2, 9]))
+        assert hit.tolist() == [True, True, False]
+        assert buf.stats.hits == 2 and buf.stats.misses == 1
+
+    def test_replacement_skipped_without_stale(self):
+        buf = PersistentBuffer(capacity=2)
+        buf.insert(np.array([1, 2]))
+        buf.lookup(np.array([1, 2]))
+        buf.end_round()  # both accessed -> scores 2.0, nothing stale
+        assert buf.replace(np.array([5, 6])) == 0
+        assert buf.stats.skipped_rounds == 1
+
+    def test_stale_eviction(self):
+        buf = PersistentBuffer(capacity=2)
+        buf.insert(np.array([1, 2]))
+        buf.lookup(np.array([1]))
+        for _ in range(3):
+            buf.end_round()  # node 2 decays below 0.95
+        replaced = buf.replace(np.array([7]))
+        assert replaced == 1
+        assert 7 in buf and 1 in buf and 2 not in buf
+
+    def test_duplicate_insert_ignored(self):
+        buf = PersistentBuffer(capacity=4)
+        buf.insert(np.array([1, 2]))
+        assert buf.insert(np.array([2, 3])) == 1
+        assert buf.size == 3
+
+    @given(
+        capacity=st.integers(1, 32),
+        ops=st.lists(
+            st.lists(st.integers(0, 99), min_size=1, max_size=16),
+            min_size=1,
+            max_size=20,
+        ),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_buffer_invariants(self, capacity, ops):
+        """Size never exceeds capacity; membership map stays consistent;
+        hit-rate accounting matches membership."""
+        buf = PersistentBuffer(capacity=capacity)
+        for batch in ops:
+            ids = np.array(batch, dtype=np.int64)
+            hit, slots = buf.lookup(ids)
+            for i, h in zip(ids, hit):
+                assert (int(i) in buf) == bool(h) or int(i) in ids[hit].tolist()
+            buf.end_round()
+            buf.replace(ids)
+            assert buf.size <= capacity
+            # internal consistency: every mapped id is valid and unique
+            mapped = buf.ids_snapshot()
+            assert len(set(mapped.tolist())) == len(mapped) == buf.size

@@ -1,0 +1,76 @@
+"""End-to-end system behaviour: the paper's full loop on CPU, plus the
+LM train/serve drivers exercising the public API."""
+
+import numpy as np
+import pytest
+
+from repro.core import agent_report, make_backend
+from repro.core.agent import LLMAgent
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+
+
+def test_rudder_end_to_end_reproduces_paper_trends():
+    """One complete experiment: DistDGL vs +fixed vs +Rudder on a
+    products-like graph — Rudder must (a) raise %-Hits from zero,
+    (b) reduce communication vs no-prefetch, (c) not lose to fixed on
+    epoch time, and (d) produce a Table-2-style agent report."""
+    g = generate("products", seed=0, scale=0.12)
+    parts = partition_graph(g, 4)
+    kw = dict(epochs=6, batch_size=16, train_model=False, buffer_frac=0.25)
+
+    base = DistributedTrainer(parts, variant="distdgl", **kw).run()
+    fixed = DistributedTrainer(parts, variant="fixed", **kw).run()
+    agents = [LLMAgent(make_backend("gemma3-4b"), None) for _ in range(4)]
+    rudder_tr = DistributedTrainer(parts, variant="rudder", deciders=agents, **kw)
+    rudder = rudder_tr.run()
+
+    assert rudder.mean_pct_hits > 10.0
+    assert rudder.total_comm < base.total_comm * 0.95
+    assert rudder.mean_epoch_time <= fixed.mean_epoch_time * 1.05
+    assert rudder.mean_epoch_time < base.mean_epoch_time
+
+    rep = agent_report(agents[0])
+    assert rep["n_decisions"] > 0
+    assert 0 <= rep["pass@1"] <= 100
+    assert rep["valid_pct"] == 100.0  # surrogate is JSON-compliant
+
+
+def test_lm_training_driver_learns():
+    from repro.launch.train import train
+
+    res = train("gemma2-2b", smoke=True, steps=8, batch=4, seq=32, lr=3e-3,
+                log_every=100)
+    assert res["last_loss"] < res["first_loss"]
+
+
+def test_serving_driver_generates():
+    from repro.launch.serve import serve_batch
+
+    res = serve_batch("xlstm-350m", smoke=True, requests=2, prompt_len=4,
+                      gen_len=6)
+    assert res["tokens"].shape == (2, 6)
+    assert res["tokens"].dtype.kind == "i"
+
+
+def test_moe_expert_prefetch_transfer():
+    """DESIGN.md §4: the identical Rudder buffer steers a hot-expert
+    working set in MoE serving — hit rate beats no-buffer by reusing
+    skewed expert popularity."""
+    from repro.core.buffer import PersistentBuffer
+
+    rng = np.random.default_rng(0)
+    num_experts, k = 64, 8
+    # Zipf-skewed expert popularity, drifting over time.
+    buf = PersistentBuffer(capacity=16)
+    hits = []
+    for step in range(200):
+        shift = step // 50  # drift
+        ranks = (np.arange(num_experts) + 1 + shift) ** -1.2
+        p = ranks / ranks.sum()
+        req = rng.choice(num_experts, size=k, replace=False, p=p)
+        hit, _ = buf.lookup(req)
+        hits.append(hit.mean())
+        buf.end_round()
+        buf.replace(req[~hit])
+    assert np.mean(hits[50:]) > 0.5  # hot experts persist in the buffer
