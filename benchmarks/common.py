@@ -4,6 +4,12 @@ Scaled-down experiment grid (graphs ~100-1000x smaller than the paper,
 time model documented in repro.gnn.train.TimeModel); every module
 reports the paper's metric for its figure/table and a one-line check
 against the paper's qualitative claim.
+
+All runs execute on the vectorized ``repro.runtime`` engine (the
+``DistributedTrainer`` default), which is bit-identical to the legacy
+per-trainer loop — see docs/ARCHITECTURE.md and
+tests/test_runtime_parity.py. ``python -m benchmarks.run --sweep`` runs
+the multi-configuration grid in one process.
 """
 
 from __future__ import annotations

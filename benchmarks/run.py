@@ -5,6 +5,13 @@ detail lines). Usage::
 
     PYTHONPATH=src python -m benchmarks.run            # full suite
     PYTHONPATH=src python -m benchmarks.run fig03 tab04
+    PYTHONPATH=src python -m benchmarks.run --sweep    # scenario grid
+
+``--sweep`` runs the stock 16-cell configuration grid
+(num_parts x batch_size x fanout x controller) through the vectorized
+``repro.runtime`` engine in this single process and prints one CSV row
+per cell; extra positional args filter cells by substring of their
+label (e.g. ``--sweep p4 massivegnn``).
 """
 
 import sys
@@ -29,8 +36,42 @@ MODULES = [
 ]
 
 
+def run_sweep_cli(selected: list[str]) -> int:
+    from repro.runtime import default_grid, run_sweep
+
+    grid = default_grid()
+    if selected:
+        # AND semantics: every term must match, so extra terms narrow.
+        grid = [c for c in grid if all(s in c.label() for s in selected)]
+    if not grid:
+        print(f"no sweep cells match {selected!r}", file=sys.stderr)
+        return 1
+    t0 = time.time()
+    rows = run_sweep(grid, verbose=True)
+    print(
+        "label,variant,num_parts,batch_size,fanouts,steady_pct_hits,"
+        "comm_per_minibatch,mean_epoch_time"
+    )
+    for r in rows:
+        fan = "x".join(str(f) for f in r["fanouts"])
+        print(
+            f"{r['label']},{r['variant']},{r['num_parts']},{r['batch_size']},"
+            f"{fan},{r['steady_pct_hits']},{r['comm_per_minibatch']},"
+            f"{r['mean_epoch_time']}"
+        )
+    print(
+        f"# sweep: {len(rows)} configurations in {time.time()-t0:.1f}s "
+        f"(one process)",
+        file=sys.stderr,
+    )
+    return 0
+
+
 def main() -> int:
     selected = sys.argv[1:]
+    if "--sweep" in selected:
+        selected.remove("--sweep")
+        return run_sweep_cli(selected)
     failures = 0
     print("name,us_per_call,derived")
     for name in MODULES:

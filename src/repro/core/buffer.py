@@ -9,6 +9,11 @@ Membership and scores are host-side numpy (this mirrors the paper's
 CPU prefetcher thread); the feature payload is an optional dense array
 so the same class serves both the control-plane simulations and the
 real JAX training path (features gathered with ``kernels.ops.gather_rows``).
+
+This class is the single-PE semantic reference; the multi-trainer
+runtime batches all PEs' buffers into one array state with identical
+state transitions (:class:`repro.runtime.PrefetchEngine` — see
+``docs/ARCHITECTURE.md`` §3).
 """
 
 from __future__ import annotations

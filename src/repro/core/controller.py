@@ -11,7 +11,9 @@
                                protocol decides when to replace.
 
 Controllers see the same scoring policy (owned by the buffer); they only
-answer "should a replacement round run before the next minibatch?".
+answer "should a replacement round run before the next minibatch?". The
+vectorized runtime drives them through the double-buffered
+:class:`repro.runtime.DecisionStage` (``docs/ARCHITECTURE.md`` §3).
 """
 
 from __future__ import annotations
@@ -136,6 +138,15 @@ class AdaptiveController(Controller):
         self._tick += 1
         self._prev_metrics = metrics
         self._stall = out.stalled_ticks
+        if metrics.buffer_occupancy == 0.0 and metrics.buffer_capacity > 0:
+            # Cold-buffer bootstrap: with an empty buffer a replacement
+            # round is a pure insert into free slots (nothing to
+            # pollute), so Algorithm 1 always fills it. Deferring to the
+            # decider here can deadlock a skip-biased classifier: the
+            # buffer stays empty, the metrics never change, and every
+            # subsequent answer is the same skip. The pipe is still
+            # ticked above so latency/staleness accounting is unchanged.
+            return True
         return out.decision_available and out.replace
 
     def step_stall(self) -> float:

@@ -17,7 +17,10 @@ as a deterministic event-driven model over minibatch time:
   agent latency lands on the critical path (T_A/C + T_COMM per step).
 
 The same model produces both the decision stream and the per-step time
-accounting used by the §4.5.3 performance model.
+accounting used by the §4.5.3 performance model. In the vectorized
+runtime the queue hand-off is an explicit two-slot stage
+(:class:`repro.runtime.DecisionStage`, ``docs/ARCHITECTURE.md`` §3)
+wrapped around this pipe.
 """
 
 from __future__ import annotations

@@ -23,6 +23,17 @@ performance model driven by the exact byte counts:
 with T_COMM = alpha + fetched_bytes / link_bw per trainer and the step
 synchronised across trainers by the gradient all-reduce (max over PEs).
 Constants are documented in :class:`TimeModel`.
+
+Two interchangeable execution paths produce the run (see
+``docs/ARCHITECTURE.md``):
+
+* ``runtime="vectorized"`` (default) — the batched multi-PE
+  :class:`repro.runtime.PrefetchEngine` loop, used by every benchmark
+  and the ``--sweep`` grid runner;
+* ``runtime="legacy"`` — the original one-PE-at-a-time Python loop,
+  kept as the semantic reference; ``tests/test_runtime_parity.py``
+  asserts the two are bit-identical on hits, misses, bytes and decision
+  streams for all four variants.
 """
 
 from __future__ import annotations
@@ -39,6 +50,7 @@ from ..core.metrics import GraphMeta, Metrics
 from ..graph.generate import Graph
 from ..graph.partition import Partitioned
 from ..graph.sampler import MiniBatch, NeighborSampler, unique_remote
+from ..runtime.engine import PrefetchEngine
 from .sage import init_sage, sage_accuracy, sage_grads
 
 
@@ -67,6 +79,17 @@ class TimeModel:
         if fetched_nodes == 0:
             return 0.0
         return self.alpha + fetched_nodes * feature_dim * self.feature_bytes / self.link_bw
+
+    def t_comm_batch(self, fetched_nodes: np.ndarray, feature_dim: int) -> np.ndarray:
+        """Vectorized :meth:`t_comm` over all trainer PEs at once (the
+        single source of the formula for the vectorized runtime)."""
+        fetched_nodes = np.asarray(fetched_nodes)
+        return np.where(
+            fetched_nodes > 0,
+            self.alpha
+            + fetched_nodes * feature_dim * self.feature_bytes / self.link_bw,
+            0.0,
+        )
 
 
 @dataclass
@@ -144,10 +167,16 @@ class DistributedTrainer:
         train_model: bool = True,
         time_model: TimeModel | None = None,
         seed: int = 0,
+        runtime: str = "vectorized",
     ):
+        if runtime not in ("vectorized", "legacy"):
+            raise ValueError(
+                f"runtime must be 'vectorized' or 'legacy', got {runtime!r}"
+            )
         self.parts = parts
         self.graph: Graph = parts.graph
         self.variant = variant
+        self.runtime = runtime
         self.buffer_frac = buffer_frac
         self.batch_size = batch_size
         self.epochs = epochs
@@ -190,6 +219,8 @@ class DistributedTrainer:
             PersistentBuffer(capacity=max(int(len(self.halos[p]) * buffer_frac), 1))
             for p in range(P)
         ]
+        # Vectorized twin of the per-PE buffers: one (P, C) array state.
+        self.engine = PrefetchEngine([b.capacity for b in self.buffers])
 
         # Controllers (one per trainer, as in the paper: each trainer has
         # its own prefetcher + daemon inference thread).
@@ -219,6 +250,7 @@ class DistributedTrainer:
                 halo = self.halos[p]
                 top = halo[np.argsort(-deg[halo])][: self.buffers[p].capacity]
                 self.buffers[p].insert(top)
+                self.engine.insert(p, top)
 
         self.local_train = [parts.local_train_nodes(p) for p in range(P)]
         self.mb_per_epoch = max(
@@ -263,6 +295,19 @@ class DistributedTrainer:
 
     # ------------------------------------------------------------------ #
     def run(self) -> RunResult:
+        """Execute the experiment (vectorized runtime by default)."""
+        if self.runtime == "vectorized":
+            from ..runtime.driver import run_vectorized
+
+            return run_vectorized(self)
+        return self.run_legacy()
+
+    def run_legacy(self) -> RunResult:
+        """Reference implementation: one PE at a time, one Python loop.
+
+        Kept as the semantic oracle for the vectorized runtime
+        (``tests/test_runtime_parity.py``); benchmarks use :meth:`run`.
+        """
         P = self.parts.num_parts
         logs = [TrainerLog() for _ in range(P)]
         epoch_times: list[float] = []

@@ -61,3 +61,43 @@ def gather_rows(
         interpret=interpret,
     )(indices.astype(jnp.int32), table_p)
     return out[:, :f]
+
+
+def _batch_row_index_map(p, i, j, idx_ref):
+    return p, idx_ref[p, i], j
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_batch(
+    tables: jax.Array, indices: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """tables (P, N, F), indices (P, M) int32 -> (P, M, F).
+
+    Multi-PE variant for the vectorized runtime: every trainer PE's
+    buffer payload is one leading-axis slice of ``tables`` and its fetch
+    list one row of ``indices``; the grid gains a leading PE dimension
+    and the scalar-prefetched index map picks (PE, row) per step.
+    """
+    P, n, f = tables.shape
+    m = indices.shape[1]
+    f_pad = (F_TILE - f % F_TILE) % F_TILE
+    tables_p = (
+        jnp.pad(tables, ((0, 0), (0, 0), (0, f_pad))) if f_pad else tables
+    )
+    fp = f + f_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, m, fp // F_TILE),
+        in_specs=[
+            pl.BlockSpec((1, 1, F_TILE), _batch_row_index_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, F_TILE), lambda p, i, j, idx_ref: (p, i, j)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, m, fp), tables.dtype),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), tables_p)
+    return out[:, :, :f]

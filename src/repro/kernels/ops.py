@@ -13,15 +13,19 @@ import jax.numpy as jnp
 from . import ref
 from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
+from .gather_rows import gather_rows_batch as _gather_rows_batch
 from .mla_decode import mla_flash_decode as _mla_flash_decode
 from .score_update import score_update as _score_update
+from .score_update import score_update_batch as _score_update_batch
 from .segment_sum import segment_sum_equal as _segment_sum_equal
 
 __all__ = [
     "gather_rows",
+    "gather_rows_batch",
     "gather_mean",
     "segment_sum_equal",
     "score_update",
+    "score_update_batch",
     "mla_flash_decode",
     "ref",
 ]
@@ -41,6 +45,14 @@ def segment_sum_equal(data, k: int, *, interpret: bool = True):
 
 def score_update(scores, accessed, *, interpret: bool = True):
     return _score_update(scores, accessed, interpret=interpret)
+
+
+def gather_rows_batch(tables, indices, *, interpret: bool = True):
+    return _gather_rows_batch(tables, indices, interpret=interpret)
+
+
+def score_update_batch(scores, accessed, *, interpret: bool = True):
+    return _score_update_batch(scores, accessed, interpret=interpret)
 
 
 def mla_flash_decode(q_lat, q_rope, cache_c, cache_kr, pos, *, scale=None,

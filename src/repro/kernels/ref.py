@@ -56,3 +56,19 @@ def score_update(scores: jax.Array, accessed: jax.Array):
     )
     stale = jnp.sum((new < scoring.STALE_THRESHOLD).astype(jnp.int32))
     return new, stale
+
+
+def gather_rows_batch(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """tables (P, N, F), indices (P, M) -> (P, M, F)."""
+    return jnp.take_along_axis(tables, indices[:, :, None], axis=1)
+
+
+def score_update_batch(scores: jax.Array, accessed: jax.Array):
+    """Multi-PE scoring round: (P, N) in -> ((P, N), (P,)) out."""
+    new = jnp.where(
+        accessed,
+        scores + scoring.ACCESS_INCREMENT,
+        scores * scoring.DECAY_FACTOR,
+    )
+    stale = jnp.sum((new < scoring.STALE_THRESHOLD).astype(jnp.int32), axis=1)
+    return new, stale

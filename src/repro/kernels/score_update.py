@@ -77,3 +77,49 @@ def score_update(
     new_scores = new.reshape(-1)[:n]
     # Padded lanes were (1.0, accessed) -> 2.0, never stale.
     return new_scores, jnp.sum(stale_partial)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_update_batch(
+    scores: jax.Array, accessed: jax.Array, *, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-PE scoring round: scores (P, N) f32, accessed (P, N) bool
+    -> (new_scores (P, N), stale_count (P,)).
+
+    The multi-trainer runtime (:class:`repro.runtime.PrefetchEngine`)
+    holds every PE's buffer in one dense array; this wrapper pads each
+    PE's row to a whole number of (TILE_ROWS, LANES) tiles so the fused
+    single-buffer kernel runs unchanged over the concatenated grid, then
+    reduces the per-tile stale counts back to one count per PE.
+    """
+    P, n = scores.shape
+    row = TILE_ROWS * LANES
+    pad = (row - n % row) % row
+    s2 = jnp.pad(
+        scores.astype(jnp.float32), ((0, 0), (0, pad)), constant_values=1.0
+    )
+    a2 = jnp.pad(accessed.astype(jnp.int32), ((0, 0), (0, pad)), constant_values=1)
+    tiles_per_pe = s2.shape[1] // row
+    tiles = P * tiles_per_pe
+    s2 = s2.reshape(tiles * TILE_ROWS, LANES)
+    a2 = a2.reshape(tiles * TILE_ROWS, LANES)
+
+    new, stale_partial = pl.pallas_call(
+        _score_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * TILE_ROWS, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s2, a2)
+    new_scores = new.reshape(P, -1)[:, :n]
+    return new_scores, jnp.sum(stale_partial.reshape(P, tiles_per_pe), axis=1)

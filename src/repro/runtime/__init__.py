@@ -1,0 +1,39 @@
+"""Vectorized multi-trainer prefetch runtime.
+
+The legacy evaluation harness (:mod:`repro.gnn.train`) simulates trainer
+PEs one at a time in a Python loop — correct, but too slow for the
+scenario sweeps (graphs x partitions x policies x controllers) the
+roadmap demands. This package re-expresses the per-trainer control plane
+as batched array operations over *all* PEs at once:
+
+* :class:`PrefetchEngine` — all per-PE persistent buffers held as dense
+  ``(P, C)`` arrays; membership, hit/miss sets, scoring rounds and
+  replacement are batched (optionally via the multi-PE Pallas kernels in
+  :mod:`repro.kernels`);
+* :class:`DecisionStage` — the async/sync queue protocol as an explicit
+  double-buffered request/response stage, so controller inference
+  overlaps the modeled T_DDP step;
+* :func:`run_vectorized` — drop-in replacement for the legacy
+  minibatch loop, bit-identical on hits / misses / bytes / decision
+  streams (cross-checked by ``tests/test_runtime_parity.py``);
+* :func:`run_sweep` — one-process grid runner over
+  (num_parts, batch_size, fanout, controller) configurations.
+
+See ``docs/ARCHITECTURE.md`` for the data-flow diagram and the
+exact-vs-modeled contract the engine preserves.
+"""
+
+from .engine import EngineStats, PrefetchEngine
+from .stage import DecisionStage
+from .driver import run_vectorized
+from .sweep import SweepConfig, default_grid, run_sweep
+
+__all__ = [
+    "PrefetchEngine",
+    "EngineStats",
+    "DecisionStage",
+    "run_vectorized",
+    "SweepConfig",
+    "default_grid",
+    "run_sweep",
+]

@@ -1,0 +1,196 @@
+"""Vectorized minibatch loop: the drop-in replacement for the legacy
+per-trainer simulation in :meth:`repro.gnn.train.DistributedTrainer.run`.
+
+Per minibatch the driver runs five batched stages over all P trainer PEs
+(the legacy loop ran all five *per PE*, P times):
+
+1. **sample** — per-PE seed batches + fanout sampling (kept sequential
+   in PE order: the sampler draws from the shared RNG, and preserving
+   the draw order is what keeps minibatches identical to the legacy
+   loop);
+2. **lookup** — one batched membership query over every PE's remote
+   fetch set (:meth:`PrefetchEngine.lookup`);
+3. **decide** — per-PE metrics into the double-buffered
+   :class:`DecisionStage`; controllers (heuristics, classifiers, LLM
+   agents behind :class:`repro.core.queues.InferencePipe`) answer;
+4. **score + replace** — one batched scoring round and one batched
+   replacement round (:meth:`PrefetchEngine.end_round` /
+   :meth:`PrefetchEngine.replace_round`);
+5. **account** — the §4.5.3 time model evaluated as array ops, plus the
+   (exact) GNN training step.
+
+Every stage preserves the legacy loop's per-PE operation order, so
+hit/miss/byte counts, decision streams and modeled step times are
+bit-identical — asserted by ``tests/test_runtime_parity.py``.
+See ``docs/ARCHITECTURE.md`` for the diagram.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..core.metrics import Metrics
+from ..graph.sampler import unique_remote
+from .stage import DecisionStage
+
+
+def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
+    """Execute ``trainer``'s experiment on the vectorized runtime.
+
+    ``trainer`` is a :class:`repro.gnn.train.DistributedTrainer`; its
+    :class:`PrefetchEngine` (built in ``__init__`` alongside the legacy
+    buffers, including any warm start) carries all per-PE buffer state.
+    """
+    # Deferred: repro.gnn.train imports the engine from this package.
+    from ..gnn.sage import sage_accuracy, sage_grads
+    from ..gnn.train import RunResult, TrainerLog
+
+    engine = trainer.engine
+    stage = DecisionStage(trainer.controllers)
+    P = trainer.parts.num_parts
+    part_of = trainer.parts.part_of
+    feature_dim = trainer.graph.features.shape[1]
+    tm = trainer.tm
+    capacity = engine.capacity.astype(np.float64)
+
+    logs = [TrainerLog() for _ in range(P)]
+    epoch_times: list[float] = []
+    losses: list[float] = []
+    active = stage.uses_buffer & (engine.capacity > 0)
+    prev_missed = [np.array([], dtype=np.int64) for _ in range(P)]
+    last_replaced = np.zeros(P, dtype=np.int64)
+    have_replaced = False
+
+    for epoch in range(trainer.epochs):
+        epoch_time = 0.0
+        for mb in range(trainer.mb_per_epoch):
+            # -- stage 1: sample (shared-RNG order preserved) ---------- #
+            minibatches = [
+                trainer.sampler.sample(
+                    trainer._seed_batch(p, epoch, mb), trainer.rng
+                )
+                for p in range(P)
+            ]
+            remote = [
+                unique_remote(minibatches[p], part_of, p) for p in range(P)
+            ]
+            n_remote = np.array([len(r) for r in remote], dtype=np.int64)
+
+            # -- stage 2: batched buffer lookup ------------------------ #
+            hit_masks, missed = engine.lookup(remote, active)
+            hits = np.array([int(h.sum()) for h in hit_masks], dtype=np.int64)
+            pct_hits = np.where(
+                active,
+                np.where(n_remote > 0, 100.0 * hits / np.maximum(n_remote, 1), 100.0),
+                0.0,
+            )
+            comm = np.array([len(m) for m in missed], dtype=np.int64)
+            occupancy = engine.occupancy()
+
+            # -- stage 3: double-buffered controller decisions --------- #
+            replaced_pct = np.where(
+                have_replaced & (capacity > 0),
+                100.0 * last_replaced / np.maximum(capacity, 1.0),
+                0.0,
+            )
+            stage.submit(
+                [
+                    Metrics(
+                        minibatch=mb,
+                        total_minibatches=trainer.mb_per_epoch,
+                        epoch=epoch,
+                        total_epochs=trainer.epochs,
+                        pct_hits=float(pct_hits[p]),
+                        comm_volume=int(comm[p]),
+                        replaced_pct=float(replaced_pct[p]),
+                        buffer_occupancy=float(occupancy[p]),
+                        buffer_capacity=int(engine.capacity[p]),
+                    )
+                    for p in range(P)
+                ]
+            )
+            decisions, stalls = stage.collect()
+
+            # -- stage 4: batched scoring + replacement ---------------- #
+            engine.end_round(stage.uses_buffer)
+            replaced = engine.replace_round(
+                prev_missed, decisions & stage.uses_buffer
+            )
+            prev_missed = missed
+            last_replaced = replaced
+            have_replaced = True
+            # Replacement traffic is communication (Alg. 1 line 14).
+            total_comm = comm + replaced
+
+            # -- stage 5: time model + exact training ------------------ #
+            t_comm = tm.t_comm_batch(total_comm, feature_dim)
+            if trainer.mode == "sync":
+                t = np.where(
+                    stage.inference_cost > 0,
+                    tm.t_ddp + t_comm + stalls * tm.t_ddp,
+                    np.maximum(tm.t_ddp, t_comm),
+                )
+            else:
+                t = np.maximum(tm.t_ddp, t_comm)
+
+            occupancy_post = engine.occupancy()
+            for p in range(P):
+                logs[p].pct_hits.append(float(pct_hits[p]))
+                logs[p].comm_volume.append(int(total_comm[p]))
+                logs[p].comm_missed.append(int(comm[p]))
+                logs[p].occupancy.append(float(occupancy_post[p]))
+                logs[p].unique_remote.append(int(n_remote[p]))
+                logs[p].replaced.append(int(replaced[p]))
+                logs[p].decisions.append(bool(decisions[p]))
+                logs[p].step_time.append(float(t[p]))
+            epoch_time += float(t.max())
+
+            if trainer.train_model:
+                grads_acc = None
+                loss_acc = 0.0
+                for p in range(P):
+                    x_seed, x_n1, x_n2 = trainer._features_of(minibatches[p])
+                    loss, grads = sage_grads(
+                        trainer.params, x_seed, x_n1, x_n2, minibatches[p].labels
+                    )
+                    loss_acc += float(loss) / P
+                    grads_acc = (
+                        grads
+                        if grads_acc is None
+                        else jax.tree_util.tree_map(
+                            lambda a, b: a + b, grads_acc, grads
+                        )
+                    )
+                if grads_acc is not None:
+                    grads_mean = jax.tree_util.tree_map(
+                        lambda g: g / P, grads_acc
+                    )
+                    trainer.params = jax.tree_util.tree_map(
+                        lambda prm, g: prm - trainer.lr * g,
+                        trainer.params,
+                        grads_mean,
+                    )
+                    losses.append(loss_acc)
+        epoch_times.append(epoch_time)
+
+    accuracy = 0.0
+    if trainer.train_model:
+        batch = trainer.graph.train_nodes[
+            : min(512, len(trainer.graph.train_nodes))
+        ]
+        minibatch = trainer.sampler.sample(batch, trainer.rng)
+        x_seed, x_n1, x_n2 = trainer._features_of(minibatch)
+        accuracy = float(
+            sage_accuracy(trainer.params, x_seed, x_n1, x_n2, minibatch.labels)
+        )
+
+    return RunResult(
+        variant=trainer.variant,
+        epoch_times=epoch_times,
+        losses=losses,
+        accuracy=accuracy,
+        logs=logs,
+        controllers=trainer.controllers,
+        graph_meta=trainer.graph_meta,
+    )

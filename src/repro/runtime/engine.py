@@ -1,0 +1,266 @@
+"""Vectorized multi-PE persistent-buffer state (the prefetch engine).
+
+One :class:`PrefetchEngine` replaces the list of per-trainer
+:class:`repro.core.buffer.PersistentBuffer` objects: membership, scores,
+validity and per-round access marks for *all* P trainer PEs live in
+dense ``(P, C)`` arrays (C = max buffer capacity across PEs; slots past
+a PE's own capacity are permanent padding). Lookups across every PE are
+answered by a single sort + ``searchsorted`` over offset-disambiguated
+keys, and the scoring round is one elementwise pass — optionally the
+multi-PE Pallas kernel :func:`repro.kernels.score_update_batch`.
+
+State-transition semantics are *bit-identical* to ``PersistentBuffer``
+(same slot ordering, same float32 score arithmetic, same free-then-stale
+replacement order), which is what lets the vectorized driver reproduce
+the legacy per-trainer loop's hit/miss/byte counts and decision streams
+exactly — see ``tests/test_runtime_parity.py`` and
+``docs/ARCHITECTURE.md``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import scoring
+from ..core.buffer import _unique_preserve_order
+
+
+@dataclass
+class EngineStats:
+    """Per-PE counters, mirror of ``core.buffer.BufferStats``."""
+
+    num_pes: int
+    lookups: np.ndarray = field(default=None)
+    hits: np.ndarray = field(default=None)
+    misses: np.ndarray = field(default=None)
+    replaced_total: np.ndarray = field(default=None)
+    replacement_rounds: np.ndarray = field(default=None)
+    skipped_rounds: np.ndarray = field(default=None)
+
+    def __post_init__(self):
+        for name in (
+            "lookups",
+            "hits",
+            "misses",
+            "replaced_total",
+            "replacement_rounds",
+            "skipped_rounds",
+        ):
+            if getattr(self, name) is None:
+                setattr(self, name, np.zeros(self.num_pes, dtype=np.int64))
+
+    def hit_rate(self) -> np.ndarray:
+        return np.where(self.lookups > 0, self.hits / np.maximum(self.lookups, 1), 0.0)
+
+
+class PrefetchEngine:
+    """All trainer-PE buffers as one batched array state.
+
+    Parameters
+    ----------
+    capacities:
+        Per-PE buffer capacity. Internally padded to ``C = max(capacities)``;
+        padding slots are never valid and never free.
+    use_kernels:
+        Route the scoring round through the multi-PE Pallas kernel
+        (``repro.kernels.score_update_batch``). The numpy path is the
+        default on CPU — interpret-mode Pallas trades speed for fidelity
+        to the TPU lowering; both produce bit-identical float32 scores.
+    """
+
+    def __init__(self, capacities: list[int], use_kernels: bool = False):
+        self.capacity = np.asarray(capacities, dtype=np.int64)
+        if (self.capacity < 0).any():
+            raise ValueError("capacities must be >= 0")
+        self.num_pes = P = len(capacities)
+        self.max_capacity = C = int(self.capacity.max(initial=1)) if P else 1
+        self.use_kernels = use_kernels
+        self.ids = np.full((P, C), -1, dtype=np.int64)
+        self.scores = np.zeros((P, C), dtype=np.float32)
+        self.valid = np.zeros((P, C), dtype=bool)
+        self.accessed = np.zeros((P, C), dtype=bool)
+        # Slots at or past a PE's own capacity are permanent padding.
+        self.in_capacity = np.arange(C)[None, :] < self.capacity[:, None]
+        self.stats = EngineStats(P)
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    def size(self) -> np.ndarray:
+        return self.valid.sum(axis=1)
+
+    def occupancy(self) -> np.ndarray:
+        return np.where(
+            self.capacity > 0, self.size() / np.maximum(self.capacity, 1), 0.0
+        )
+
+    def ids_snapshot(self, p: int) -> np.ndarray:
+        return self.ids[p][self.valid[p]].copy()
+
+    def scores_snapshot(self, p: int) -> np.ndarray:
+        return self.scores[p, : int(self.capacity[p])].copy()
+
+    # ------------------------------------------------------------------ #
+    # batched membership
+    # ------------------------------------------------------------------ #
+    def _membership(
+        self, queries: np.ndarray, rows: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched multi-PE membership test.
+
+        ``queries[k]`` is a node id asked of PE ``rows[k]``. Returns
+        ``(hit_mask, flat_slots)`` where ``flat_slots[k] = p * C + slot``
+        for hits and -1 otherwise. One sort + one searchsorted answers
+        every PE's lookup at once: keys are disambiguated by a per-PE
+        offset larger than any node id, so ids never collide across PEs.
+        """
+        hit = np.zeros(len(queries), dtype=bool)
+        flat_slots = np.full(len(queries), -1, dtype=np.int64)
+        if len(queries) == 0 or not self.valid.any():
+            return hit, flat_slots
+        offset = int(max(self.ids.max(), queries.max(initial=0), 0)) + 2
+        # Invalid slots get key `offset - 1` (never a real node id).
+        keys = np.where(self.valid, self.ids, offset - 1)
+        keys = keys + np.arange(self.num_pes, dtype=np.int64)[:, None] * offset
+        order = np.argsort(keys, axis=None, kind="stable")
+        flat_keys = keys.ravel()[order]
+        q = queries.astype(np.int64) + rows.astype(np.int64) * offset
+        pos = np.searchsorted(flat_keys, q)
+        pos_c = np.minimum(pos, flat_keys.size - 1)
+        hit = flat_keys[pos_c] == q
+        flat_slots[hit] = order[pos_c[hit]]
+        return hit, flat_slots
+
+    def lookup(
+        self, remote: list[np.ndarray], active: np.ndarray
+    ) -> tuple[list[np.ndarray], list[np.ndarray]]:
+        """Batched lookup of per-PE remote fetch sets.
+
+        ``remote[p]`` is PE p's unique sampled remote ids; ``active[p]``
+        gates whether the PE consults its buffer this round (inactive
+        PEs — e.g. the no-prefetch baseline — fetch everything). Returns
+        ``(hit_masks, missed)`` per PE; hits are marked accessed for the
+        scoring round and the per-PE hit statistics are updated, exactly
+        as ``PersistentBuffer.lookup`` does one PE at a time.
+        """
+        P = self.num_pes
+        lengths = np.array(
+            [len(remote[p]) if active[p] else 0 for p in range(P)], dtype=np.int64
+        )
+        rows = np.repeat(np.arange(P, dtype=np.int64), lengths)
+        queries = (
+            np.concatenate([remote[p] for p in range(P) if active[p] and len(remote[p])])
+            if lengths.sum()
+            else np.array([], dtype=np.int64)
+        )
+        hit, flat_slots = self._membership(queries, rows)
+        if hit.any():
+            self.accessed.ravel()[flat_slots[hit]] = True
+        self.stats.lookups += lengths
+        hits_per_pe = np.bincount(rows[hit], minlength=P) if len(rows) else np.zeros(
+            P, dtype=np.int64
+        )
+        self.stats.hits += hits_per_pe
+        self.stats.misses += lengths - hits_per_pe
+        bounds = np.cumsum(lengths)[:-1]
+        hit_masks = np.split(hit, bounds)
+        out_masks, missed = [], []
+        for p in range(P):
+            if active[p]:
+                out_masks.append(hit_masks[p])
+                missed.append(remote[p][~hit_masks[p]])
+            else:
+                out_masks.append(np.zeros(len(remote[p]), dtype=bool))
+                missed.append(remote[p])
+        return out_masks, missed
+
+    # ------------------------------------------------------------------ #
+    # scoring round
+    # ------------------------------------------------------------------ #
+    def end_round(self, active: np.ndarray) -> None:
+        """Close the sampling round for ``active`` PEs: one batched
+        scoring pass (+1 on access, x0.95 idle) and reset access marks."""
+        if not active.any():
+            return
+        if self.use_kernels:
+            from ..kernels.score_update import score_update_batch
+
+            new, _ = score_update_batch(self.scores, self.accessed)
+            new = np.asarray(new, dtype=np.float32)
+        else:
+            new = scoring.update_scores(self.scores, self.accessed)
+        mask = active[:, None] & self.valid
+        self.scores = np.where(mask, new, self.scores).astype(np.float32)
+        self.accessed[active] = False
+
+    # ------------------------------------------------------------------ #
+    # insertion / replacement
+    # ------------------------------------------------------------------ #
+    def insert(self, p: int, node_ids: np.ndarray) -> int:
+        """Fill PE p's free slots (no eviction) — warm-start path."""
+        node_ids = _unique_preserve_order(np.asarray(node_ids, dtype=np.int64))
+        node_ids = node_ids[~np.isin(node_ids, self.ids[p][self.valid[p]])]
+        free = np.nonzero(~self.valid[p] & self.in_capacity[p])[0]
+        n = min(len(free), len(node_ids))
+        if n == 0:
+            return 0
+        self._place(p, free[:n], node_ids[:n])
+        return n
+
+    def replace_round(
+        self, candidates: list[np.ndarray], do_replace: np.ndarray
+    ) -> np.ndarray:
+        """One replacement round across all PEs.
+
+        ``candidates[p]`` is the admission set (the previous minibatch's
+        miss set — Algorithm 1 queues the next minibatch before the
+        decision lands); ``do_replace[p]`` is the controller's decision.
+        Free slots are filled first, then stale slots (score < 0.95), in
+        ascending slot order — the exact ``PersistentBuffer.replace``
+        semantics. Returns the number of nodes newly placed per PE.
+
+        Membership filtering of every PE's candidate set happens in one
+        batched query; the slot-mask computation (free / stale) is one
+        array pass over ``(P, C)``; only the final ragged scatter is a
+        short per-PE loop.
+        """
+        P = self.num_pes
+        replaced = np.zeros(P, dtype=np.int64)
+        todo = [p for p in range(P) if do_replace[p]]
+        if not todo:
+            return replaced
+        cands = {p: _unique_preserve_order(np.asarray(candidates[p], dtype=np.int64))
+                 for p in todo}
+        lengths = np.array([len(cands[p]) for p in todo], dtype=np.int64)
+        rows = np.repeat(np.asarray(todo, dtype=np.int64), lengths)
+        queries = (
+            np.concatenate([cands[p] for p in todo])
+            if lengths.sum()
+            else np.array([], dtype=np.int64)
+        )
+        member, _ = self._membership(queries, rows)
+        fresh = np.split(~member, np.cumsum(lengths)[:-1])
+        free_mask = ~self.valid & self.in_capacity
+        stale_m = self.valid & scoring.stale_mask(self.scores)
+        for k, p in enumerate(todo):
+            cand = cands[p][fresh[k]]
+            free = np.nonzero(free_mask[p])[0]
+            stale = np.nonzero(stale_m[p])[0]
+            slots = np.concatenate([free, stale])
+            n = min(len(slots), len(cand))
+            if n == 0:
+                self.stats.skipped_rounds[p] += 1
+                continue
+            self._place(p, slots[:n], cand[:n])
+            self.stats.replaced_total[p] += n
+            self.stats.replacement_rounds[p] += 1
+            replaced[p] = n
+        return replaced
+
+    def _place(self, p: int, slots: np.ndarray, ids: np.ndarray) -> None:
+        self.ids[p, slots] = ids
+        self.scores[p, slots] = scoring.INITIAL_SCORE
+        self.valid[p, slots] = True
+        self.accessed[p, slots] = False

@@ -1,0 +1,66 @@
+"""Explicit double-buffered controller-decision stage.
+
+The paper's prefetcher talks to the inference model (LLM agent or
+classifier) through request/response queues (§4.5, Fig. 11); the legacy
+loop buries that hand-off inside ``Controller.should_replace`` calls
+scattered through the per-trainer loop. Here the hand-off is an explicit
+two-slot stage:
+
+* ``submit(metrics)`` fills the **request buffer** with this minibatch's
+  per-PE observations — the point where, on real hardware, the trainer
+  kicks off T_DDP and the daemon inference threads start chewing;
+* ``collect()`` drains the **response buffer**: every controller is
+  ticked with its submitted metrics (the deterministic
+  :class:`repro.core.queues.InferencePipe` models the latency /
+  staleness of the queue protocol) and the per-PE decisions and sync-mode
+  stall ticks come back as arrays.
+
+Because the latency modelling lives in ``InferencePipe``, the stage is a
+pure re-plumbing: decision streams are bit-identical to the legacy loop
+(``tests/test_runtime_parity.py``), but the overlap of controller
+inference with the modeled T_DDP step is now a first-class structure the
+driver can reason about. See ``docs/ARCHITECTURE.md``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.controller import Controller
+from ..core.metrics import Metrics
+
+
+class DecisionStage:
+    """Two-slot (request, response) pipeline over the per-PE controllers."""
+
+    def __init__(self, controllers: list[Controller]):
+        self.controllers = list(controllers)
+        self.uses_buffer = np.array(
+            [c.uses_buffer for c in controllers], dtype=bool
+        )
+        self.inference_cost = np.array(
+            [c.inference_cost for c in controllers], dtype=np.float64
+        )
+        self._request: list[Metrics] | None = None
+
+    def submit(self, metrics: list[Metrics]) -> None:
+        """Fill the request buffer (one Metrics per PE)."""
+        if self._request is not None:
+            raise RuntimeError("request buffer full: collect() the previous round")
+        if len(metrics) != len(self.controllers):
+            raise ValueError(
+                f"expected {len(self.controllers)} metrics, got {len(metrics)}"
+            )
+        self._request = list(metrics)
+
+    def collect(self) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the response buffer: ``(decisions, stall_ticks)`` per PE."""
+        if self._request is None:
+            raise RuntimeError("request buffer empty: submit() metrics first")
+        pending, self._request = self._request, None
+        decisions = np.zeros(len(self.controllers), dtype=bool)
+        stalls = np.zeros(len(self.controllers), dtype=np.float64)
+        for p, (ctrl, m) in enumerate(zip(self.controllers, pending)):
+            decisions[p] = ctrl.should_replace(m)
+            stalls[p] = ctrl.step_stall()
+        return decisions, stalls

@@ -1,0 +1,130 @@
+"""One-process scenario sweeps over the vectorized runtime.
+
+The roadmap's north star is breadth: graphs x partitions x policies x
+controllers. The legacy loop made each cell expensive; the vectorized
+:class:`PrefetchEngine` makes a grid of
+``(num_parts, batch_size, fanout, controller)`` configurations cheap
+enough to run in a single process — ``python -m benchmarks.run --sweep``.
+
+Partitioned graphs are cached per ``(dataset, num_parts, seed)`` within
+a sweep, so widening the grid along batch size / fanout / controller
+axes reuses the expensive partitioning work.
+"""
+
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """One cell of the sweep grid."""
+
+    dataset: str = "products"
+    variant: str = "fixed"
+    num_parts: int = 4
+    batch_size: int = 16
+    fanouts: tuple[int, ...] = (10, 25)
+    mode: str = "async"
+    interval: int = 32
+    buffer_frac: float = 0.25
+    epochs: int = 5
+    backend: str = "gemma3-4b"
+    seed: int = 0
+
+    def label(self) -> str:
+        fan = "x".join(str(f) for f in self.fanouts)
+        return (
+            f"{self.dataset}/p{self.num_parts}/b{self.batch_size}"
+            f"/f{fan}/{self.variant}"
+        )
+
+
+def default_grid(
+    datasets: tuple[str, ...] = ("products",),
+    num_parts: tuple[int, ...] = (2, 4),
+    batch_sizes: tuple[int, ...] = (16, 32),
+    fanouts: tuple[tuple[int, ...], ...] = ((5, 10), (10, 25)),
+    variants: tuple[str, ...] = ("fixed", "massivegnn"),
+    epochs: int = 5,
+) -> list[SweepConfig]:
+    """The stock 16-cell grid (2 parts x 2 batch x 2 fanout x 2 policy)."""
+    return [
+        SweepConfig(
+            dataset=d,
+            variant=v,
+            num_parts=p,
+            batch_size=b,
+            fanouts=f,
+            epochs=epochs,
+        )
+        for d in datasets
+        for p in num_parts
+        for b in batch_sizes
+        for f in fanouts
+        for v in variants
+    ]
+
+
+def run_sweep(
+    configs: list[SweepConfig], scale: float = 0.12, verbose: bool = False
+) -> list[dict]:
+    """Run every configuration in-process; returns one result row per cell.
+
+    Rows carry the config fields plus the headline metrics every paper
+    figure is built from: steady-state %-Hits, communication per
+    minibatch, and modeled mean epoch time.
+    """
+    # Deferred: repro.gnn.train imports this package at module load.
+    from ..core import LLMAgent, make_backend
+    from ..gnn import DistributedTrainer
+    from ..graph import generate, partition_graph
+
+    parts_cache: dict[tuple, object] = {}
+    rows: list[dict] = []
+    for cfg in configs:
+        key = (cfg.dataset, cfg.num_parts, cfg.seed)
+        if key not in parts_cache:
+            g = generate(cfg.dataset, seed=cfg.seed, scale=scale)
+            parts_cache[key] = partition_graph(g, cfg.num_parts)
+        parts = parts_cache[key]
+        deciders = None
+        if cfg.variant == "rudder":
+            deciders = [
+                LLMAgent(make_backend(cfg.backend), None)
+                for _ in range(cfg.num_parts)
+            ]
+        trainer = DistributedTrainer(
+            parts,
+            variant=cfg.variant,
+            deciders=deciders,
+            buffer_frac=cfg.buffer_frac,
+            batch_size=cfg.batch_size,
+            fanouts=cfg.fanouts,
+            epochs=cfg.epochs,
+            mode=cfg.mode,
+            interval=cfg.interval,
+            train_model=False,
+            seed=cfg.seed,
+        )
+        result = trainer.run()
+        row = asdict(cfg)
+        row.update(
+            label=cfg.label(),
+            mean_pct_hits=round(result.mean_pct_hits, 2),
+            steady_pct_hits=round(result.steady_pct_hits, 2),
+            comm_per_minibatch=round(result.comm_per_minibatch, 1),
+            total_comm=result.total_comm,
+            mean_epoch_time=round(result.mean_epoch_time, 4),
+        )
+        rows.append(row)
+        if verbose:
+            # stderr: stdout stays machine-readable (the --sweep CSV).
+            print(
+                f"[sweep] {cfg.label():40s} hits={row['steady_pct_hits']:6.2f} "
+                f"comm/mb={row['comm_per_minibatch']:8.1f} "
+                f"epoch={row['mean_epoch_time']:.3f}s",
+                file=sys.stderr,
+            )
+    return rows
