@@ -7,11 +7,19 @@ detail lines). Usage::
     PYTHONPATH=src python -m benchmarks.run fig03 tab04
     PYTHONPATH=src python -m benchmarks.run --sweep    # scenario grid
 
-``--sweep`` runs the stock 16-cell configuration grid
+``--sweep`` runs the stock configuration grid
 (num_parts x batch_size x fanout x controller) through the vectorized
 ``repro.runtime`` engine in this single process and prints one CSV row
 per cell; extra positional args filter cells by substring of their
-label (e.g. ``--sweep p4 massivegnn``).
+label (e.g. ``--sweep p4 massivegnn``). Sweep options:
+
+* ``--policies=rudder,recency,...`` — widen the grid along the
+  scoring/eviction policy axis (see ``repro.core.scoring.POLICIES``;
+  ``--policies=all`` selects the whole zoo);
+* ``--json=PATH`` — additionally write the deterministic sweep artifact
+  (sorted cells, sorted keys) consumed by the CI ``bench-smoke`` job;
+* ``--gate`` — exit non-zero if any cell is NaN/empty/non-finite (the
+  perf-trajectory gate applied before the artifact is uploaded).
 """
 
 import sys
@@ -37,33 +45,75 @@ MODULES = [
 
 
 def run_sweep_cli(selected: list[str]) -> int:
-    from repro.runtime import default_grid, run_sweep
+    from repro.core.scoring import POLICIES
+    from repro.runtime import (
+        default_grid,
+        run_sweep,
+        validate_rows,
+        write_sweep_json,
+    )
 
-    grid = default_grid()
-    if selected:
+    policies = ("rudder",)
+    json_path = None
+    gate = False
+    terms = []
+    for arg in selected:
+        if arg.startswith("--policies="):
+            spec = arg.split("=", 1)[1]
+            policies = (
+                tuple(sorted(POLICIES))
+                if spec == "all"
+                else tuple(p for p in spec.split(",") if p)
+            )
+            unknown = [p for p in policies if p not in POLICIES]
+            if unknown or not policies:
+                print(
+                    f"unknown --policies {unknown or spec!r}; "
+                    f"options: {sorted(POLICIES)} or 'all'",
+                    file=sys.stderr,
+                )
+                return 2
+        elif arg.startswith("--json="):
+            json_path = arg.split("=", 1)[1]
+        elif arg == "--gate":
+            gate = True
+        else:
+            terms.append(arg)
+    grid = default_grid(policies=policies)
+    if terms:
         # AND semantics: every term must match, so extra terms narrow.
-        grid = [c for c in grid if all(s in c.label() for s in selected)]
+        grid = [c for c in grid if all(s in c.label() for s in terms)]
     if not grid:
-        print(f"no sweep cells match {selected!r}", file=sys.stderr)
+        print(f"no sweep cells match {terms!r}", file=sys.stderr)
         return 1
     t0 = time.time()
     rows = run_sweep(grid, verbose=True)
     print(
-        "label,variant,num_parts,batch_size,fanouts,steady_pct_hits,"
+        "label,variant,policy,num_parts,batch_size,fanouts,steady_pct_hits,"
         "comm_per_minibatch,mean_epoch_time"
     )
     for r in rows:
         fan = "x".join(str(f) for f in r["fanouts"])
         print(
-            f"{r['label']},{r['variant']},{r['num_parts']},{r['batch_size']},"
-            f"{fan},{r['steady_pct_hits']},{r['comm_per_minibatch']},"
-            f"{r['mean_epoch_time']}"
+            f"{r['label']},{r['variant']},{r['policy']},{r['num_parts']},"
+            f"{r['batch_size']},{fan},{r['steady_pct_hits']},"
+            f"{r['comm_per_minibatch']},{r['mean_epoch_time']}"
         )
     print(
         f"# sweep: {len(rows)} configurations in {time.time()-t0:.1f}s "
         f"(one process)",
         file=sys.stderr,
     )
+    if json_path:
+        write_sweep_json(rows, json_path)
+        print(f"# sweep artifact written to {json_path}", file=sys.stderr)
+    if gate:
+        problems = validate_rows(rows)
+        if problems:
+            for problem in problems:
+                print(f"# GATE FAIL: {problem}", file=sys.stderr)
+            return 1
+        print(f"# gate: {len(rows)} cells sound", file=sys.stderr)
     return 0
 
 

@@ -1,9 +1,11 @@
 """Scenario sweep: the vectorized runtime exploring a config grid.
 
-Runs a (num_parts x batch_size x fanout x controller) grid in this one
-process via ``repro.runtime.run_sweep`` and prints the cells ranked by
-steady-state %-Hits — the kind of design-space exploration MassiveGNN
-and RapidGNN motivate and the paper's Figs. 12-16 sample by hand.
+Runs a (num_parts x batch_size x fanout x controller x policy) grid in
+this one process via ``repro.runtime.run_sweep`` and prints the cells
+ranked by steady-state %-Hits — the kind of design-space exploration
+MassiveGNN and RapidGNN motivate and the paper's Figs. 12-16 sample by
+hand. The ``policy`` axis crosses the controller variants with the
+scoring/eviction zoo of ``repro.core.scoring``.
 
     PYTHONPATH=src python examples/sweep_scenarios.py
 """
@@ -12,7 +14,7 @@ from repro.runtime import SweepConfig, default_grid, run_sweep
 
 
 def main():
-    grid = default_grid(epochs=5) + [
+    grid = default_grid(epochs=5, policies=("rudder", "recency", "degree")) + [
         # Custom cells beyond the stock grid: the adaptive controller
         # and the no-prefetch floor at the largest fanout.
         SweepConfig(variant="rudder", num_parts=4, batch_size=32, epochs=5),
@@ -22,10 +24,10 @@ def main():
     rows = run_sweep(grid, verbose=False)
 
     rows.sort(key=lambda r: -r["steady_pct_hits"])
-    print(f"\n{'configuration':42s} {'%-Hits':>7s} {'comm/mb':>9s} {'epoch(s)':>9s}")
+    print(f"\n{'configuration':48s} {'%-Hits':>7s} {'comm/mb':>9s} {'epoch(s)':>9s}")
     for r in rows:
         print(
-            f"{r['label']:42s} {r['steady_pct_hits']:7.2f} "
+            f"{r['label']:48s} {r['steady_pct_hits']:7.2f} "
             f"{r['comm_per_minibatch']:9.1f} {r['mean_epoch_time']:9.3f}"
         )
 

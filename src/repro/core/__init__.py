@@ -2,35 +2,45 @@
 
 The paper's contribution, as a composable module:
 
-* :mod:`repro.core.scoring`     — the what-to-replace scoring policy
+* :mod:`repro.core.scoring`     — the what-to-replace policy zoo
 * :mod:`repro.core.buffer`      — the per-trainer persistent buffer
 * :mod:`repro.core.metrics`     — runtime observations shared with agents
-* :mod:`repro.core.prompt`      — structured zero-shot ICL prompts
+* :mod:`repro.core.prompt`      — structured zero-shot ICL prompts (+ batch)
 * :mod:`repro.core.backends`    — pluggable LLM decision backends
 * :mod:`repro.core.agent`       — MetricsCollector/ContextBuilder/DecisionMaker
 * :mod:`repro.core.classifiers` — offline-trained ML classifier baselines
-* :mod:`repro.core.queues`      — async/sync request-response semantics
-* :mod:`repro.core.controller`  — the evaluation variants
+* :mod:`repro.core.queues`      — async/sync request-response semantics,
+  scalar and batched across all trainer PEs
+* :mod:`repro.core.controller`  — the evaluation variants and the batched
+  :class:`DecisionPlane` the vectorized runtime drives
 * :mod:`repro.core.evaluate`    — Pass@1 %-Hits and CI reporting
 """
 
-from .agent import Decision, LLMAgent
+from .agent import Decision, LLMAgent, step_agents
 from .backends import make_backend
 from .buffer import PersistentBuffer
 from .classifiers import make_classifier
-from .controller import make_controller
+from .controller import DecisionPlane, make_controller
 from .evaluate import agent_report, pass_at_1
 from .metrics import GraphMeta, Metrics
+from .queues import BatchedInferencePipe, InferencePipe
+from .scoring import ScoringPolicy, make_policy
 
 __all__ = [
     "Decision",
+    "DecisionPlane",
     "LLMAgent",
     "PersistentBuffer",
     "GraphMeta",
     "Metrics",
+    "BatchedInferencePipe",
+    "InferencePipe",
+    "ScoringPolicy",
     "make_backend",
     "make_classifier",
     "make_controller",
+    "make_policy",
+    "step_agents",
     "agent_report",
     "pass_at_1",
 ]

@@ -15,8 +15,9 @@ Three components orchestrate decision making:
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+from . import backends as backends_mod
 from . import prompt as prompt_mod
 from .backends import DecisionBackend
 from .metrics import GraphMeta, HistoryEntry, Metrics
@@ -111,6 +112,16 @@ class DecisionMaker:
     ) -> Decision:
         text = prompt_mod.build_prompt(metrics, history, self.graph, recent_hits)
         raw = self.backend.generate(text, metrics, history, self.graph, recent_hits)
+        return self.finish(metrics, raw)
+
+    def finish(self, metrics: Metrics, raw: str) -> Decision:
+        """Parse a raw backend response into a Decision and account it.
+
+        Split out of :meth:`decide` so the batched decision plane can
+        fan prompt construction and backend queries out across PEs while
+        keeping the valid/invalid response counting (Table 2) on this
+        per-PE object, identical to the scalar path.
+        """
         parsed = parse_response(raw)
         if parsed is None:
             # Non-compliant answer: treated as skip (no action taken).
@@ -181,3 +192,62 @@ class LLMAgent:
         return 100.0 * pos / len(self.decisions), 100.0 * (
             len(self.decisions) - pos
         ) / len(self.decisions)
+
+
+def step_agents(agents: list[LLMAgent], metrics_list: list[Metrics]) -> list[Decision]:
+    """One request/response round-trip for many agents at once.
+
+    The batched twin of :meth:`LLMAgent.step`, used by the vectorized
+    decision plane when several PEs' inference requests come due on the
+    same minibatch tick. The four phases run batched across agents:
+
+    1. observe + reflect (cheap per-agent bookkeeping, PE order);
+    2. prompt construction via :func:`repro.core.prompt.
+       build_prompt_batch` (static sections shared across PEs);
+    3. backend queries grouped by backend object through
+       :func:`repro.core.backends.generate_batch`;
+    4. parse/record via :meth:`DecisionMaker.finish` (the per-PE
+       valid/invalid counters advance exactly as in the scalar path).
+
+    Each agent's own observe → contextualize → decide → reflect sequence
+    is preserved, so results are identical to calling ``step`` on each
+    agent in order. If the same agent object serves several PEs its
+    history mutates between steps — the batch degenerates to the scalar
+    sequence to keep that behaviour exact.
+    """
+    if len({id(a) for a in agents}) < len(agents):
+        return [a.step(m) for a, m in zip(agents, metrics_list)]
+    for agent, metrics in zip(agents, metrics_list):
+        agent.collector.observe(metrics)
+        agent.context.evaluate_pending(metrics)
+    prompts = prompt_mod.build_prompt_batch(
+        metrics_list,
+        [a.context.history for a in agents],
+        [a.maker.graph for a in agents],
+        [a.collector.recent_hits for a in agents],
+    )
+    raws: list[str | None] = [None] * len(agents)
+    by_backend: dict[int, tuple[DecisionBackend, list[int]]] = {}
+    for i, agent in enumerate(agents):
+        backend = agent.maker.backend
+        by_backend.setdefault(id(backend), (backend, []))[1].append(i)
+    for backend, idxs in by_backend.values():
+        requests = [
+            (
+                prompts[i],
+                metrics_list[i],
+                agents[i].context.history,
+                agents[i].maker.graph,
+                agents[i].collector.recent_hits,
+            )
+            for i in idxs
+        ]
+        for i, raw in zip(idxs, backends_mod.generate_batch(backend, requests)):
+            raws[i] = raw
+    decisions = []
+    for agent, metrics, raw in zip(agents, metrics_list, raws):
+        decision = agent.maker.finish(metrics, raw)
+        agent.context.record_decision(decision, metrics)
+        agent.decisions.append(decision)
+        decisions.append(decision)
+    return decisions

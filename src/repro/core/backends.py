@@ -294,6 +294,35 @@ class OllamaBackend:
             return json.loads(resp.read())["response"]
 
 
+# --------------------------------------------------------------------- #
+# Batched querying (the vectorized decision plane's fan-out point)
+# --------------------------------------------------------------------- #
+#: One queued request: the arguments of ``DecisionBackend.generate``.
+GenerateRequest = tuple[str, Metrics, list[HistoryEntry], GraphMeta, list[float]]
+
+
+def generate_batch(
+    backend: DecisionBackend, requests: list[GenerateRequest]
+) -> list[str]:
+    """Answer a batch of decision requests against one backend.
+
+    Backends that implement ``generate_batch(requests)`` (e.g. a server
+    with a batched completion endpoint) get the whole batch in one call;
+    everything else falls back to per-request ``generate`` in request
+    order, so decision streams are identical either way.
+    """
+    batched = getattr(backend, "generate_batch", None)
+    if batched is not None:
+        responses = list(batched(requests))
+        if len(responses) != len(requests):
+            raise ValueError(
+                f"{backend.name}.generate_batch returned {len(responses)} "
+                f"responses for {len(requests)} requests"
+            )
+        return responses
+    return [backend.generate(*req) for req in requests]
+
+
 REGISTRY: dict[str, type] = {
     "gemma3-4b": ICLSurrogateBackend,
     "gemma3-1b": AggressiveBackend,

@@ -18,7 +18,7 @@ state transitions (:class:`repro.runtime.PrefetchEngine` — see
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -56,16 +56,32 @@ class PersistentBuffer:
     feature_dim:
         If > 0, a dense feature payload ``(capacity, feature_dim)`` is
         maintained alongside membership.
+    policy:
+        Scoring/eviction policy (name or :class:`repro.core.scoring.
+        ScoringPolicy`); default is the paper's ``rudder`` policy.
+    node_weights:
+        Optional per-*node* access weights indexed by node id (the
+        ``degree`` policy's input); resolved to per-slot weights at
+        insertion time.
     """
 
-    def __init__(self, capacity: int, feature_dim: int = 0):
+    def __init__(
+        self,
+        capacity: int,
+        feature_dim: int = 0,
+        policy: str | scoring.ScoringPolicy = "rudder",
+        node_weights: np.ndarray | None = None,
+    ):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = int(capacity)
         self.feature_dim = int(feature_dim)
+        self.policy = scoring.make_policy(policy)
+        self._node_weights = node_weights
         self._slot_of: dict[int, int] = {}
         self._id_of = np.full(self.capacity, -1, dtype=np.int64)
         self._scores = np.zeros(self.capacity, dtype=np.float32)
+        self._weights = np.ones(self.capacity, dtype=np.float32)
         self._valid = np.zeros(self.capacity, dtype=bool)
         self._accessed_this_round = np.zeros(self.capacity, dtype=bool)
         if feature_dim > 0:
@@ -122,9 +138,10 @@ class PersistentBuffer:
         """Close a minibatch-sampling round: apply the scoring policy."""
         if self.capacity == 0:
             return
+        weights = self._weights if self.policy.use_weights else None
         self._scores = np.where(
             self._valid,
-            scoring.update_scores(self._scores, self._accessed_this_round),
+            self.policy.update(self._scores, self._accessed_this_round, weights),
             self._scores,
         )
         self._accessed_this_round[:] = False
@@ -133,7 +150,7 @@ class PersistentBuffer:
     # replacement
     # ------------------------------------------------------------------ #
     def stale_slots(self) -> np.ndarray:
-        return np.nonzero(scoring.stale_mask(self._scores, self._valid))[0]
+        return np.nonzero(self.policy.stale(self._scores, self._valid))[0]
 
     def free_slots(self) -> np.ndarray:
         return np.nonzero(~self._valid)[0]
@@ -189,7 +206,9 @@ class PersistentBuffer:
         for s, i in zip(slots, ids):
             self._slot_of[int(i)] = int(s)
         self._id_of[slots] = ids
-        self._scores[slots] = scoring.INITIAL_SCORE
+        self._scores[slots] = np.float32(self.policy.initial_score)
+        if self._node_weights is not None:
+            self._weights[slots] = self._node_weights[ids]
         self._valid[slots] = True
         self._accessed_this_round[slots] = False
         if self.features is not None and features is not None:

@@ -67,13 +67,26 @@ def format_history(history: list[HistoryEntry], max_entries: int = 5) -> str:
     return "\n".join(lines)
 
 
-def build_prompt(
-    metrics: Metrics,
-    history: list[HistoryEntry],
-    graph: GraphMeta,
-    recent_hits: list[float] | None = None,
-) -> str:
-    """Assemble the full structured prompt for the DECISION MAKER."""
+_TASK = (
+    "Task: decide whether to trigger a replacement round for the "
+    "next minibatch, and state your expected effect on pct_hits so "
+    "the outcome can be checked against your prediction."
+)
+
+
+def _meta_block(graph: GraphMeta) -> str:
+    meta = {
+        "graph": graph.name,
+        "num_nodes": graph.num_nodes,
+        "num_edges": graph.num_edges,
+        "partition_nodes": graph.part_nodes,
+        "partition_edges": graph.part_edges,
+        "num_partitions": graph.num_partitions,
+    }
+    return "Graph metadata (static):\n" + json.dumps(meta, indent=1)
+
+
+def _state_block(metrics: Metrics, recent_hits: list[float] | None) -> str:
     state = {
         "minibatch": metrics.minibatch,
         "total_minibatches": metrics.total_minibatches,
@@ -88,24 +101,64 @@ def build_prompt(
     }
     if recent_hits is not None:
         state["recent_pct_hits"] = [round(h, 2) for h in recent_hits[-8:]]
-    meta = {
-        "graph": graph.name,
-        "num_nodes": graph.num_nodes,
-        "num_edges": graph.num_edges,
-        "partition_nodes": graph.part_nodes,
-        "partition_edges": graph.part_edges,
-        "num_partitions": graph.num_partitions,
-    }
+    return "Current state:\n" + json.dumps(state, indent=1)
+
+
+def _assemble(meta_block: str, state_block: str, history_block: str) -> str:
     return "\n\n".join(
         [
             SYSTEM_DESCRIPTION,
             METRIC_GLOSSARY,
-            "Graph metadata (static):\n" + json.dumps(meta, indent=1),
-            "Current state:\n" + json.dumps(state, indent=1),
-            "Replacement history (most recent last):\n" + format_history(history),
-            "Task: decide whether to trigger a replacement round for the "
-            "next minibatch, and state your expected effect on pct_hits so "
-            "the outcome can be checked against your prediction.",
+            meta_block,
+            state_block,
+            history_block,
+            _TASK,
             ANSWER_FORMAT,
         ]
     )
+
+
+def build_prompt(
+    metrics: Metrics,
+    history: list[HistoryEntry],
+    graph: GraphMeta,
+    recent_hits: list[float] | None = None,
+) -> str:
+    """Assemble the full structured prompt for the DECISION MAKER."""
+    return _assemble(
+        _meta_block(graph),
+        _state_block(metrics, recent_hits),
+        "Replacement history (most recent last):\n" + format_history(history),
+    )
+
+
+def build_prompt_batch(
+    metrics_list: list[Metrics],
+    histories: list[list[HistoryEntry]],
+    graphs: list[GraphMeta],
+    recent_hits_lists: list[list[float] | None],
+) -> list[str]:
+    """Assemble one prompt per PE in a single pass.
+
+    Byte-identical to per-element :func:`build_prompt`; the static
+    sections are shared and the graph-metadata block is rendered once per
+    distinct :class:`GraphMeta` (PEs of one job share partition shapes
+    far more often than not).
+    """
+    meta_cache: dict[GraphMeta, str] = {}
+    out = []
+    for metrics, history, graph, recent_hits in zip(
+        metrics_list, histories, graphs, recent_hits_lists
+    ):
+        meta = meta_cache.get(graph)
+        if meta is None:
+            meta = meta_cache[graph] = _meta_block(graph)
+        out.append(
+            _assemble(
+                meta,
+                _state_block(metrics, recent_hits),
+                "Replacement history (most recent last):\n"
+                + format_history(history),
+            )
+        )
+    return out

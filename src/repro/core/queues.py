@@ -25,9 +25,10 @@ wrapped around this pipe.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
+
+import numpy as np
 
 from .metrics import Metrics
 
@@ -117,3 +118,119 @@ class InferencePipe:
         if not self.decision_gaps:
             return float("nan")
         return sum(self.decision_gaps) / len(self.decision_gaps)
+
+
+@dataclass
+class BatchedStepOutcome:
+    """What every PE's prefetcher learns at one minibatch tick."""
+
+    decision_available: "np.ndarray"   # (P,) bool
+    replace: "np.ndarray"              # (P,) bool
+    decision_for_minibatch: "np.ndarray"  # (P,) int64; -1 where no decision
+    stalled_ticks: "np.ndarray"        # (P,) float64 (sync mode only)
+
+
+class BatchedInferencePipe:
+    """All P trainers' inference pipes advanced as one array state.
+
+    The vectorized twin of P :class:`InferencePipe` objects: busy flags,
+    submission ticks and ready times live in dense ``(P,)`` arrays, and
+    the per-tick poll (which requests came due? which queues take fresh
+    metrics?) is a couple of vector compares instead of P Python
+    branches. ``decide_batch(indices, metrics)`` answers every due
+    request in one call — the hook the batched agent/classifier stage
+    (:func:`repro.core.agent.step_agents`) plugs into so prompt building
+    and backend queries fan out across PEs.
+
+    Per-PE latency accounting (decision gaps, the replacement interval
+    r, sync-mode stall ticks) is bit-identical to running P scalar pipes
+    side by side — asserted by ``tests/test_decision_plane.py``.
+    """
+
+    def __init__(
+        self,
+        decide_batch: Callable[["np.ndarray", list[Metrics]], "np.ndarray"],
+        latencies,
+        mode: str = "async",
+    ):
+        if mode not in ("async", "sync"):
+            raise ValueError(f"mode must be 'async' or 'sync', got {mode!r}")
+        self.decide_batch = decide_batch
+        self.latency = np.asarray(latencies, dtype=np.float64)
+        self.mode = mode
+        self.num_pes = P = len(self.latency)
+        self.busy = np.zeros(P, dtype=bool)
+        self.submitted_at = np.full(P, -1, dtype=np.int64)
+        self.ready_at = np.zeros(P, dtype=np.float64)
+        self.pending: list[Metrics | None] = [None] * P
+        self.decision_gaps: list[list[int]] = [[] for _ in range(P)]
+        self._last_decision_mb = np.full(P, -1, dtype=np.int64)
+
+    def tick_batch(self, now: int, metrics_list: list[Metrics]) -> BatchedStepOutcome:
+        """One minibatch tick for every PE: push metrics, poll decisions."""
+        P = self.num_pes
+        if len(metrics_list) != P:
+            raise ValueError(f"expected {P} metrics, got {len(metrics_list)}")
+        if self.mode == "sync":
+            # Every trainer blocks: request -> inference -> response.
+            everyone = np.arange(P, dtype=np.int64)
+            replace = np.asarray(
+                self.decide_batch(everyone, list(metrics_list)), dtype=bool
+            )
+            self._note_gaps(everyone, now)
+            return BatchedStepOutcome(
+                decision_available=np.ones(P, dtype=bool),
+                replace=replace,
+                decision_for_minibatch=np.full(P, now, dtype=np.int64),
+                stalled_ticks=self.latency.copy(),
+            )
+
+        # --- asynchronous ------------------------------------------------
+        available = np.zeros(P, dtype=bool)
+        replace = np.zeros(P, dtype=bool)
+        for_mb = np.full(P, -1, dtype=np.int64)
+        due = np.nonzero(self.busy & (now >= self.ready_at))[0]
+        if due.size:
+            # Decisions arrive on the response queues, computed for the
+            # metrics that were current at submission (staleness bound).
+            answers = np.asarray(
+                self.decide_batch(due, [self.pending[i] for i in due]),
+                dtype=bool,
+            )
+            available[due] = True
+            replace[due] = answers
+            for_mb[due] = self.submitted_at[due]
+            self._note_gaps(due, now)
+            self.busy[due] = False
+        idle = np.nonzero(~self.busy)[0]
+        if idle.size:
+            # Queues cleared of backlog; notify with the *latest* metrics.
+            for i in idle:
+                self.pending[i] = metrics_list[i]
+            self.submitted_at[idle] = now
+            self.ready_at[idle] = now + np.maximum(self.latency[idle], 1e-9)
+            self.busy[idle] = True
+        return BatchedStepOutcome(
+            decision_available=available,
+            replace=replace,
+            decision_for_minibatch=for_mb,
+            stalled_ticks=np.zeros(P, dtype=np.float64),
+        )
+
+    def _note_gaps(self, indices: "np.ndarray", now: int) -> None:
+        for i in indices:
+            last = self._last_decision_mb[i]
+            if last >= 0:
+                self.decision_gaps[i].append(int(now - last))
+        self._last_decision_mb[indices] = now
+
+    @property
+    def replacement_interval(self) -> "np.ndarray":
+        """Per-PE mean gap r between decisions; NaN before any gap."""
+        return np.array(
+            [
+                sum(g) / len(g) if g else float("nan")
+                for g in self.decision_gaps
+            ],
+            dtype=np.float64,
+        )

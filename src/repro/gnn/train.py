@@ -43,7 +43,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from ..core.agent import LLMAgent
+from ..core import scoring
 from ..core.buffer import PersistentBuffer
 from ..core.controller import Controller, make_controller
 from ..core.metrics import GraphMeta, Metrics
@@ -168,6 +168,7 @@ class DistributedTrainer:
         time_model: TimeModel | None = None,
         seed: int = 0,
         runtime: str = "vectorized",
+        policy: str | scoring.ScoringPolicy = "rudder",
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -177,6 +178,7 @@ class DistributedTrainer:
         self.graph: Graph = parts.graph
         self.variant = variant
         self.runtime = runtime
+        self.policy = scoring.make_policy(policy)
         self.buffer_frac = buffer_frac
         self.batch_size = batch_size
         self.epochs = epochs
@@ -215,12 +217,26 @@ class DistributedTrainer:
             )
             self.halos.append(nbrs[parts.part_of[nbrs] != p])
 
+        # The degree policy weighs accesses by the node's (log) degree.
+        node_weights = (
+            scoring.degree_weights(self.graph.degree())
+            if self.policy.use_weights
+            else None
+        )
         self.buffers = [
-            PersistentBuffer(capacity=max(int(len(self.halos[p]) * buffer_frac), 1))
+            PersistentBuffer(
+                capacity=max(int(len(self.halos[p]) * buffer_frac), 1),
+                policy=self.policy,
+                node_weights=node_weights,
+            )
             for p in range(P)
         ]
         # Vectorized twin of the per-PE buffers: one (P, C) array state.
-        self.engine = PrefetchEngine([b.capacity for b in self.buffers])
+        self.engine = PrefetchEngine(
+            [b.capacity for b in self.buffers],
+            policy=self.policy,
+            node_weights=node_weights,
+        )
 
         # Controllers (one per trainer, as in the paper: each trainer has
         # its own prefetcher + daemon inference thread).

@@ -15,6 +15,7 @@ from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
 from .gather_rows import gather_rows_batch as _gather_rows_batch
 from .mla_decode import mla_flash_decode as _mla_flash_decode
+from .score_update import score_policy_update_batch as _score_policy_update_batch
 from .score_update import score_update as _score_update
 from .score_update import score_update_batch as _score_update_batch
 from .segment_sum import segment_sum_equal as _segment_sum_equal
@@ -26,6 +27,7 @@ __all__ = [
     "segment_sum_equal",
     "score_update",
     "score_update_batch",
+    "score_policy_update_batch",
     "mla_flash_decode",
     "ref",
 ]
@@ -53,6 +55,31 @@ def gather_rows_batch(tables, indices, *, interpret: bool = True):
 
 def score_update_batch(scores, accessed, *, interpret: bool = True):
     return _score_update_batch(scores, accessed, interpret=interpret)
+
+
+def score_policy_update_batch(
+    scores,
+    accessed,
+    weights=None,
+    *,
+    increment: float = 1.0,
+    decay: float = 0.95,
+    threshold: float = 0.95,
+    mode: str = "accumulate",
+    score_cap: float = 4.0,
+    interpret: bool = True,
+):
+    return _score_policy_update_batch(
+        scores,
+        accessed,
+        weights,
+        increment=increment,
+        decay=decay,
+        threshold=threshold,
+        mode=mode,
+        score_cap=score_cap,
+        interpret=interpret,
+    )
 
 
 def mla_flash_decode(q_lat, q_rope, cache_c, cache_kr, pos, *, scale=None,

@@ -72,3 +72,32 @@ def score_update_batch(scores: jax.Array, accessed: jax.Array):
     )
     stale = jnp.sum((new < scoring.STALE_THRESHOLD).astype(jnp.int32), axis=1)
     return new, stale
+
+
+def score_policy_update_batch(
+    scores: jax.Array,
+    accessed: jax.Array,
+    weights: jax.Array | None = None,
+    *,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    mode: str = "accumulate",
+    score_cap: float = 4.0,
+):
+    """Policy-zoo scoring round oracle (see ``core.scoring.ScoringPolicy``)."""
+    s = scores.astype(jnp.float32)
+    gain = jnp.float32(increment)
+    if weights is not None:
+        gain = gain * weights.astype(jnp.float32)
+    if mode == "accumulate":
+        touched = s + gain
+    elif mode == "reset":
+        touched = gain + jnp.zeros_like(s)
+    elif mode == "capped":
+        touched = jnp.minimum(s + gain, jnp.float32(score_cap))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    new = jnp.where(accessed, touched, s * jnp.float32(decay))
+    stale = jnp.sum((new < jnp.float32(threshold)).astype(jnp.int32), axis=1)
+    return new, stale

@@ -26,7 +26,14 @@ exact-vs-modeled contract the engine preserves.
 from .engine import EngineStats, PrefetchEngine
 from .stage import DecisionStage
 from .driver import run_vectorized
-from .sweep import SweepConfig, default_grid, run_sweep
+from .sweep import (
+    SweepConfig,
+    default_grid,
+    run_sweep,
+    sweep_artifact,
+    validate_rows,
+    write_sweep_json,
+)
 
 __all__ = [
     "PrefetchEngine",
@@ -36,4 +43,7 @@ __all__ = [
     "SweepConfig",
     "default_grid",
     "run_sweep",
+    "sweep_artifact",
+    "validate_rows",
+    "write_sweep_json",
 ]

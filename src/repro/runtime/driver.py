@@ -11,9 +11,13 @@ Per minibatch the driver runs five batched stages over all P trainer PEs
 2. **lookup** — one batched membership query over every PE's remote
    fetch set (:meth:`PrefetchEngine.lookup`);
 3. **decide** — per-PE metrics into the double-buffered
-   :class:`DecisionStage`; controllers (heuristics, classifiers, LLM
-   agents behind :class:`repro.core.queues.InferencePipe`) answer;
-4. **score + replace** — one batched scoring round and one batched
+   :class:`DecisionStage`, which advances the batched
+   :class:`repro.core.controller.DecisionPlane`: heuristic controllers
+   are dense ``(P,)`` masks, adaptive controllers answer through the
+   batched inference pipe (prompts, backend queries and reflection
+   fanned out across PEs, per-PE async/sync latency accounting);
+4. **score + replace** — one batched scoring round under the engine's
+   scoring policy (the ``policy`` sweep axis) and one batched
    replacement round (:meth:`PrefetchEngine.end_round` /
    :meth:`PrefetchEngine.replace_round`);
 5. **account** — the §4.5.3 time model evaluated as array ops, plus the

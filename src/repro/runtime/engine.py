@@ -65,20 +65,39 @@ class PrefetchEngine:
         padding slots are never valid and never free.
     use_kernels:
         Route the scoring round through the multi-PE Pallas kernel
-        (``repro.kernels.score_update_batch``). The numpy path is the
-        default on CPU — interpret-mode Pallas trades speed for fidelity
-        to the TPU lowering; both produce bit-identical float32 scores.
+        (``repro.kernels.score_policy_update_batch``). The numpy path is
+        the default on CPU — interpret-mode Pallas trades speed for
+        fidelity to the TPU lowering; both produce bit-identical float32
+        scores.
+    policy:
+        Scoring/eviction policy (name or :class:`repro.core.scoring.
+        ScoringPolicy`) applied to every PE; default is the paper's
+        ``rudder`` policy. Same contract as
+        ``PersistentBuffer(policy=...)``.
+    node_weights:
+        Optional per-node access weights indexed by node id (the
+        ``degree`` policy's input); resolved to per-slot weights at
+        insertion time.
     """
 
-    def __init__(self, capacities: list[int], use_kernels: bool = False):
+    def __init__(
+        self,
+        capacities: list[int],
+        use_kernels: bool = False,
+        policy: str | scoring.ScoringPolicy = "rudder",
+        node_weights: np.ndarray | None = None,
+    ):
         self.capacity = np.asarray(capacities, dtype=np.int64)
         if (self.capacity < 0).any():
             raise ValueError("capacities must be >= 0")
         self.num_pes = P = len(capacities)
         self.max_capacity = C = int(self.capacity.max(initial=1)) if P else 1
         self.use_kernels = use_kernels
+        self.policy = scoring.make_policy(policy)
+        self._node_weights = node_weights
         self.ids = np.full((P, C), -1, dtype=np.int64)
         self.scores = np.zeros((P, C), dtype=np.float32)
+        self.weights = np.ones((P, C), dtype=np.float32)
         self.valid = np.zeros((P, C), dtype=bool)
         self.accessed = np.zeros((P, C), dtype=bool)
         # Slots at or past a PE's own capacity are permanent padding.
@@ -184,13 +203,23 @@ class PrefetchEngine:
         scoring pass (+1 on access, x0.95 idle) and reset access marks."""
         if not active.any():
             return
+        weights = self.weights if self.policy.use_weights else None
         if self.use_kernels:
-            from ..kernels.score_update import score_update_batch
+            from ..kernels.score_update import score_policy_update_batch
 
-            new, _ = score_update_batch(self.scores, self.accessed)
+            new, _ = score_policy_update_batch(
+                self.scores,
+                self.accessed,
+                weights,
+                increment=self.policy.access_increment,
+                decay=self.policy.decay,
+                threshold=self.policy.stale_threshold,
+                mode=self.policy.mode,
+                score_cap=self.policy.score_cap,
+            )
             new = np.asarray(new, dtype=np.float32)
         else:
-            new = scoring.update_scores(self.scores, self.accessed)
+            new = self.policy.update(self.scores, self.accessed, weights)
         mask = active[:, None] & self.valid
         self.scores = np.where(mask, new, self.scores).astype(np.float32)
         self.accessed[active] = False
@@ -243,7 +272,7 @@ class PrefetchEngine:
         member, _ = self._membership(queries, rows)
         fresh = np.split(~member, np.cumsum(lengths)[:-1])
         free_mask = ~self.valid & self.in_capacity
-        stale_m = self.valid & scoring.stale_mask(self.scores)
+        stale_m = self.valid & self.policy.stale(self.scores)
         for k, p in enumerate(todo):
             cand = cands[p][fresh[k]]
             free = np.nonzero(free_mask[p])[0]
@@ -261,6 +290,8 @@ class PrefetchEngine:
 
     def _place(self, p: int, slots: np.ndarray, ids: np.ndarray) -> None:
         self.ids[p, slots] = ids
-        self.scores[p, slots] = scoring.INITIAL_SCORE
+        self.scores[p, slots] = np.float32(self.policy.initial_score)
+        if self._node_weights is not None:
+            self.weights[p, slots] = self._node_weights[ids]
         self.valid[p, slots] = True
         self.accessed[p, slots] = False

@@ -9,38 +9,35 @@ two-slot stage:
 * ``submit(metrics)`` fills the **request buffer** with this minibatch's
   per-PE observations — the point where, on real hardware, the trainer
   kicks off T_DDP and the daemon inference threads start chewing;
-* ``collect()`` drains the **response buffer**: every controller is
-  ticked with its submitted metrics (the deterministic
-  :class:`repro.core.queues.InferencePipe` models the latency /
-  staleness of the queue protocol) and the per-PE decisions and sync-mode
-  stall ticks come back as arrays.
+* ``collect()`` drains the **response buffer**: one
+  :class:`repro.core.controller.DecisionPlane` step advances every PE's
+  controller at once — heuristics as dense ``(P,)`` masks, adaptive
+  controllers through the batched inference pipe
+  (:class:`repro.core.queues.BatchedInferencePipe`, which models the
+  daemon-thread latency / staleness per PE) — and the per-PE decisions
+  and sync-mode stall ticks come back as arrays.
 
-Because the latency modelling lives in ``InferencePipe``, the stage is a
-pure re-plumbing: decision streams are bit-identical to the legacy loop
-(``tests/test_runtime_parity.py``), but the overlap of controller
-inference with the modeled T_DDP step is now a first-class structure the
-driver can reason about. See ``docs/ARCHITECTURE.md``.
+Because the latency modelling lives in the (batched) inference pipe, the
+stage is a pure re-plumbing: decision streams are bit-identical to the
+legacy loop (``tests/test_runtime_parity.py``), but the overlap of
+controller inference with the modeled T_DDP step is now a first-class
+structure the driver can reason about. See ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from ..core.controller import Controller
+from ..core.controller import Controller, DecisionPlane
 from ..core.metrics import Metrics
 
 
 class DecisionStage:
-    """Two-slot (request, response) pipeline over the per-PE controllers."""
+    """Two-slot (request, response) pipeline over the batched decision plane."""
 
     def __init__(self, controllers: list[Controller]):
-        self.controllers = list(controllers)
-        self.uses_buffer = np.array(
-            [c.uses_buffer for c in controllers], dtype=bool
-        )
-        self.inference_cost = np.array(
-            [c.inference_cost for c in controllers], dtype=np.float64
-        )
+        self.plane = DecisionPlane(controllers)
+        self.controllers = self.plane.controllers
+        self.uses_buffer = self.plane.uses_buffer
+        self.inference_cost = self.plane.inference_cost
         self._request: list[Metrics] | None = None
 
     def submit(self, metrics: list[Metrics]) -> None:
@@ -53,14 +50,9 @@ class DecisionStage:
             )
         self._request = list(metrics)
 
-    def collect(self) -> tuple[np.ndarray, np.ndarray]:
+    def collect(self):
         """Drain the response buffer: ``(decisions, stall_ticks)`` per PE."""
         if self._request is None:
             raise RuntimeError("request buffer empty: submit() metrics first")
         pending, self._request = self._request, None
-        decisions = np.zeros(len(self.controllers), dtype=bool)
-        stalls = np.zeros(len(self.controllers), dtype=np.float64)
-        for p, (ctrl, m) in enumerate(zip(self.controllers, pending)):
-            decisions[p] = ctrl.should_replace(m)
-            stalls[p] = ctrl.step_stall()
-        return decisions, stalls
+        return self.plane.step(pending)

@@ -2,19 +2,29 @@
 
 The roadmap's north star is breadth: graphs x partitions x policies x
 controllers. The legacy loop made each cell expensive; the vectorized
-:class:`PrefetchEngine` makes a grid of
-``(num_parts, batch_size, fanout, controller)`` configurations cheap
-enough to run in a single process — ``python -m benchmarks.run --sweep``.
+:class:`PrefetchEngine` and the batched decision plane make a grid of
+``(num_parts, batch_size, fanout, controller, policy)`` configurations
+cheap enough to run in a single process —
+``python -m benchmarks.run --sweep``.
 
-Partitioned graphs are cached per ``(dataset, num_parts, seed)`` within
-a sweep, so widening the grid along batch size / fanout / controller
-axes reuses the expensive partitioning work.
+Partitioned graphs are cached per ``(dataset, num_parts, scale, seed)``
+within a sweep, so widening the grid along batch size / fanout /
+controller / policy axes reuses the expensive partitioning work.
+
+Sweep output is deterministic under a fixed seed: cells run and emit in
+sorted cell-config order (a total key over every config field — labels
+alone can collide when grids vary axes the label omits), every
+stochastic input is derived from the cell's own seed, and
+:func:`write_sweep_json` renders the row set with sorted keys — so the
+CI ``BENCH_sweep.json`` artifact is diffable across runs.
 """
 
 from __future__ import annotations
 
+import json
+import math
 import sys
-from dataclasses import dataclass, asdict
+from dataclasses import asdict, dataclass
 
 
 @dataclass(frozen=True)
@@ -31,14 +41,41 @@ class SweepConfig:
     buffer_frac: float = 0.25
     epochs: int = 5
     backend: str = "gemma3-4b"
+    policy: str = "rudder"
     seed: int = 0
 
     def label(self) -> str:
         fan = "x".join(str(f) for f in self.fanouts)
         return (
             f"{self.dataset}/p{self.num_parts}/b{self.batch_size}"
-            f"/f{fan}/{self.variant}"
+            f"/f{fan}/{self.variant}/{self.policy}"
         )
+
+
+#: Config fields that identify a cell (label is a display summary only —
+#: grids may legitimately vary axes the label omits, e.g. interval/mode).
+CONFIG_KEYS = (
+    "dataset",
+    "variant",
+    "num_parts",
+    "batch_size",
+    "fanouts",
+    "mode",
+    "interval",
+    "buffer_frac",
+    "epochs",
+    "backend",
+    "policy",
+    "seed",
+)
+
+
+def _cell_key(row: dict) -> tuple:
+    """Total, deterministic ordering/identity key for one cell."""
+    return tuple(
+        tuple(v) if isinstance(v, (list, tuple)) else v
+        for v in (row.get(k) for k in CONFIG_KEYS)
+    )
 
 
 def default_grid(
@@ -47,9 +84,12 @@ def default_grid(
     batch_sizes: tuple[int, ...] = (16, 32),
     fanouts: tuple[tuple[int, ...], ...] = ((5, 10), (10, 25)),
     variants: tuple[str, ...] = ("fixed", "massivegnn"),
+    policies: tuple[str, ...] = ("rudder",),
     epochs: int = 5,
 ) -> list[SweepConfig]:
-    """The stock 16-cell grid (2 parts x 2 batch x 2 fanout x 2 policy)."""
+    """The stock grid: 16 cells (2 parts x 2 batch x 2 fanout x 2
+    controller) by default; the ``policies`` axis multiplies it by the
+    scoring/eviction policies of :mod:`repro.core.scoring`."""
     return [
         SweepConfig(
             dataset=d,
@@ -57,6 +97,7 @@ def default_grid(
             num_parts=p,
             batch_size=b,
             fanouts=f,
+            policy=pol,
             epochs=epochs,
         )
         for d in datasets
@@ -64,6 +105,7 @@ def default_grid(
         for b in batch_sizes
         for f in fanouts
         for v in variants
+        for pol in policies
     ]
 
 
@@ -74,7 +116,10 @@ def run_sweep(
 
     Rows carry the config fields plus the headline metrics every paper
     figure is built from: steady-state %-Hits, communication per
-    minibatch, and modeled mean epoch time.
+    minibatch, and modeled mean epoch time. Cells run (and rows return)
+    in sorted cell-config order regardless of the order ``configs`` was
+    built in, so repeated sweeps over the same grid produce identical
+    output.
     """
     # Deferred: repro.gnn.train imports this package at module load.
     from ..core import LLMAgent, make_backend
@@ -83,17 +128,17 @@ def run_sweep(
 
     parts_cache: dict[tuple, object] = {}
     rows: list[dict] = []
-    for cfg in configs:
-        key = (cfg.dataset, cfg.num_parts, cfg.seed)
+    for cfg in sorted(configs, key=lambda c: _cell_key(asdict(c))):
+        key = (cfg.dataset, cfg.num_parts, float(scale), cfg.seed)
         if key not in parts_cache:
             g = generate(cfg.dataset, seed=cfg.seed, scale=scale)
             parts_cache[key] = partition_graph(g, cfg.num_parts)
         parts = parts_cache[key]
         deciders = None
         if cfg.variant == "rudder":
+            backend = cfg.backend
             deciders = [
-                LLMAgent(make_backend(cfg.backend), None)
-                for _ in range(cfg.num_parts)
+                LLMAgent(make_backend(backend), None) for _ in range(cfg.num_parts)
             ]
         trainer = DistributedTrainer(
             parts,
@@ -105,6 +150,7 @@ def run_sweep(
             epochs=cfg.epochs,
             mode=cfg.mode,
             interval=cfg.interval,
+            policy=cfg.policy,
             train_model=False,
             seed=cfg.seed,
         )
@@ -122,9 +168,74 @@ def run_sweep(
         if verbose:
             # stderr: stdout stays machine-readable (the --sweep CSV).
             print(
-                f"[sweep] {cfg.label():40s} hits={row['steady_pct_hits']:6.2f} "
+                f"[sweep] {cfg.label():48s} hits={row['steady_pct_hits']:6.2f} "
                 f"comm/mb={row['comm_per_minibatch']:8.1f} "
                 f"epoch={row['mean_epoch_time']:.3f}s",
                 file=sys.stderr,
             )
     return rows
+
+
+#: Metric fields every sweep row must carry, finite, for the CI gate.
+GATED_METRICS = (
+    "mean_pct_hits",
+    "steady_pct_hits",
+    "comm_per_minibatch",
+    "total_comm",
+    "mean_epoch_time",
+)
+
+
+def validate_rows(rows: list[dict]) -> list[str]:
+    """CI perf-trajectory gate: reject NaN, non-finite and empty cells.
+
+    Returns a list of human-readable problems (empty = artifact is
+    sound). A sweep that silently produced garbage must fail the
+    ``bench-smoke`` job, not upload a poisoned baseline.
+    """
+    problems: list[str] = []
+    if not rows:
+        return ["sweep produced 0 rows (empty grid?)"]
+    seen: set[tuple] = set()
+    for i, row in enumerate(rows):
+        label = row.get("label") or f"<row {i}>"
+        key = _cell_key(row)
+        if not row.get("label"):
+            problems.append(f"{label}: missing label")
+        elif key in seen:
+            problems.append(f"{label}: duplicate cell")
+        seen.add(key)
+        for name in GATED_METRICS:
+            value = row.get(name)
+            if value is None:
+                problems.append(f"{label}: missing metric {name}")
+            elif not math.isfinite(float(value)):
+                problems.append(f"{label}: {name} is not finite ({value})")
+        epoch_time = row.get("mean_epoch_time")
+        if epoch_time is not None and float(epoch_time) <= 0:
+            problems.append(f"{label}: mean_epoch_time <= 0")
+    return problems
+
+
+def sweep_artifact(rows: list[dict]) -> dict:
+    """The ``BENCH_sweep.json`` payload: sorted rows + grid summary."""
+    rows = sorted(rows, key=_cell_key)
+    return {
+        "schema": 1,
+        "grid": {
+            "cells": len(rows),
+            "datasets": sorted({r["dataset"] for r in rows}),
+            "variants": sorted({r["variant"] for r in rows}),
+            "policies": sorted({r["policy"] for r in rows}),
+        },
+        "rows": rows,
+    }
+
+
+def write_sweep_json(rows: list[dict], path: str) -> dict:
+    """Write the deterministic sweep artifact; returns the payload."""
+    payload = sweep_artifact(rows)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return payload

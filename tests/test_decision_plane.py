@@ -1,0 +1,239 @@
+"""Batched decision plane vs scalar controllers: bit-identical cross-check.
+
+The acceptance contract of the PR-2 decision-plane refactor: a single
+:class:`repro.core.controller.DecisionPlane` advancing all P trainers'
+controllers per minibatch — heuristics as dense masks, adaptive
+controllers through the batched inference pipe — emits exactly the
+decision/stall streams of calling every controller's ``should_replace``
+in PE order, and the batched pipe's per-PE latency accounting matches P
+scalar :class:`InferencePipe` objects run side by side.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import LLMAgent, make_backend, step_agents
+from repro.core.controller import (
+    AdaptiveController,
+    DecisionPlane,
+    FixedController,
+    make_controller,
+)
+from repro.core.metrics import GraphMeta, Metrics
+from repro.core.queues import BatchedInferencePipe, InferencePipe
+
+GRAPH = GraphMeta("toy", 1000, 5000, 250, 1300, 4)
+
+
+def mk_metrics(mb, hits, comm=100, occ=0.9, epoch=0, total=64):
+    return Metrics(
+        minibatch=mb,
+        total_minibatches=total,
+        epoch=epoch,
+        total_epochs=2,
+        pct_hits=hits,
+        comm_volume=comm,
+        replaced_pct=2.0,
+        buffer_occupancy=occ,
+        buffer_capacity=200,
+    )
+
+
+def metric_stream(n, occ=0.9):
+    """Deterministic, wiggly metrics stream (hits trend + plateau)."""
+    return [
+        mk_metrics(
+            t % 64,
+            hits=30.0 + (t * 7) % 40,
+            comm=120 + (t * 13) % 60,
+            occ=occ,
+            epoch=t // 64,
+        )
+        for t in range(n)
+    ]
+
+
+class TestBatchedInferencePipe:
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_matches_scalar_pipes(self, mode):
+        latencies = [0.5, 2.0, 3.0, 13.0]
+        threshold = 45.0
+
+        def scalar_decide(m):
+            return m.pct_hits < threshold
+
+        def batch_decide(idx, metrics):
+            return np.array([m.pct_hits < threshold for m in metrics])
+
+        scalars = [InferencePipe(scalar_decide, lt, mode=mode) for lt in latencies]
+        batched = BatchedInferencePipe(batch_decide, latencies, mode=mode)
+        stream = metric_stream(40)
+        for now, m in enumerate(stream):
+            outs = [p.tick(now, m) for p in scalars]
+            bo = batched.tick_batch(now, [m] * len(latencies))
+            for k, o in enumerate(outs):
+                assert bo.decision_available[k] == o.decision_available, (mode, now, k)
+                assert bo.replace[k] == o.replace, (mode, now, k)
+                assert bo.stalled_ticks[k] == o.stalled_ticks, (mode, now, k)
+                want = o.decision_for_minibatch
+                assert bo.decision_for_minibatch[k] == (-1 if want is None else want)
+        for k, p in enumerate(scalars):
+            assert batched.decision_gaps[k] == p.decision_gaps
+            r = batched.replacement_interval[k]
+            if p.decision_gaps:
+                assert r == pytest.approx(p.replacement_interval)
+            else:
+                assert np.isnan(r)
+
+    def test_async_decides_on_submitted_metrics(self):
+        """Decisions fire for the metrics current at submission time."""
+        seen = []
+
+        def batch_decide(idx, metrics):
+            seen.extend(m.minibatch for m in metrics)
+            return np.ones(len(idx), dtype=bool)
+
+        pipe = BatchedInferencePipe(batch_decide, [2.0], mode="async")
+        for now in range(10):
+            pipe.tick_batch(now, [mk_metrics(now, 10.0)])
+        assert seen == sorted(seen)
+        assert len(seen) < 10  # minibatches processed while busy are skipped
+
+    def test_rejects_wrong_width_and_mode(self):
+        pipe = BatchedInferencePipe(lambda i, m: np.ones(len(i), bool), [1.0, 1.0])
+        with pytest.raises(ValueError):
+            pipe.tick_batch(0, [mk_metrics(0, 10.0)])
+        with pytest.raises(ValueError):
+            BatchedInferencePipe(lambda i, m: [], [1.0], mode="turbo")
+
+
+class TestStepAgents:
+    def _twin_agents(self, names):
+        mk = lambda: [LLMAgent(make_backend(n), GRAPH) for n in names]
+        return mk(), mk()
+
+    def test_matches_scalar_steps_including_invalid_counting(self):
+        # qwen-1.5b emits invalid responses; the batched path must count
+        # them on the same per-PE DecisionMaker counters as scalar step.
+        names = ["gemma3-4b", "qwen-1.5b", "gemma3-1b", "smollm2-360m"]
+        batch_agents, scalar_agents = self._twin_agents(names)
+        stream = metric_stream(30)
+        for m in stream:
+            batch = step_agents(batch_agents, [m] * len(names))
+            scalar = [a.step(m) for a in scalar_agents]
+            for b, s in zip(batch, scalar):
+                assert (b.replace, b.expected_hits, b.valid, b.raw) == (
+                    s.replace,
+                    s.expected_hits,
+                    s.valid,
+                    s.raw,
+                )
+        for ab, asc in zip(batch_agents, scalar_agents):
+            assert ab.maker.valid_responses == asc.maker.valid_responses
+            assert ab.maker.invalid_responses == asc.maker.invalid_responses
+            assert ab.response_validity() == asc.response_validity()
+            assert ab.decision_split() == asc.decision_split()
+            assert len(ab.context.history) == len(asc.context.history)
+            for hb, hs in zip(ab.context.history, asc.context.history):
+                assert (hb.decision, hb.post_pct_hits) == (
+                    hs.decision,
+                    hs.post_pct_hits,
+                )
+
+    def test_generate_batch_length_contract(self):
+        from repro.core.backends import generate_batch
+
+        class ShortBatchBackend:
+            name = "short"
+            latency = 1.0
+
+            def generate(self, *args):
+                return "{}"
+
+            def generate_batch(self, requests):
+                return ["only one"]
+
+        request = ("prompt", mk_metrics(0, 10.0), [], GRAPH, [])
+        with pytest.raises(ValueError, match="1 responses for 2"):
+            generate_batch(ShortBatchBackend(), [request, request])
+
+    def test_shared_agent_falls_back_to_sequential(self):
+        # One agent serving two PEs mutates its history between steps;
+        # the batch must degenerate to the exact scalar sequence.
+        shared = LLMAgent(make_backend("gemma3-4b"), GRAPH)
+        twin = LLMAgent(make_backend("gemma3-4b"), GRAPH)
+        m0, m1 = mk_metrics(0, 20.0), mk_metrics(0, 80.0)
+        batch = step_agents([shared, shared], [m0, m1])
+        scalar = [twin.step(m0), twin.step(m1)]
+        assert [d.replace for d in batch] == [d.replace for d in scalar]
+        assert len(shared.decisions) == 2
+
+
+def make_controller_set(mode="async"):
+    return [
+        make_controller("distdgl"),
+        make_controller("fixed"),
+        make_controller("massivegnn", interval=4),
+        make_controller("rudder", graph=GRAPH, decider="gemma3-4b", mode=mode),
+        make_controller("rudder", graph=GRAPH, decider="qwen-1.5b", mode=mode),
+    ]
+
+
+class TestDecisionPlane:
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_matches_scalar_controllers(self, mode):
+        plane_ctrls = make_controller_set(mode)
+        scalar_ctrls = make_controller_set(mode)
+        plane = DecisionPlane(plane_ctrls)
+        stream = metric_stream(40)
+        for m in stream:
+            metrics = [m] * len(plane_ctrls)
+            dec, stalls = plane.step(metrics)
+            want_dec = [c.should_replace(m) for c in scalar_ctrls]
+            want_stall = [c.step_stall() for c in scalar_ctrls]
+            assert dec.tolist() == want_dec
+            assert stalls.tolist() == want_stall
+        # Post-run accounting read by benchmarks must match too.
+        for pc, sc in zip(plane_ctrls, scalar_ctrls):
+            assert pc.replacement_interval == pytest.approx(
+                sc.replacement_interval, nan_ok=True
+            )
+            if isinstance(pc, AdaptiveController) and pc.agent is not None:
+                assert pc.agent.response_validity() == sc.agent.response_validity()
+
+    def test_cold_buffer_bootstrap_parity(self):
+        plane_ctrls = [make_controller("rudder", graph=GRAPH, decider="gemma3-4b")]
+        scalar_ctrl = make_controller("rudder", graph=GRAPH, decider="gemma3-4b")
+        plane = DecisionPlane(plane_ctrls)
+        cold = mk_metrics(0, 0.0, occ=0.0)
+        dec, _ = plane.step([cold])
+        assert dec[0] and scalar_ctrl.should_replace(cold)
+
+    def test_mixed_modes_grouped(self):
+        mk = lambda mode: make_controller(
+            "rudder", graph=GRAPH, decider="gemma3-4b", mode=mode
+        )
+        ctrls = [mk("async"), mk("sync")]
+        plane = DecisionPlane(ctrls)
+        assert len(plane._groups) == 2
+        _, stalls = plane.step([mk_metrics(0, 30.0)] * 2)
+        assert stalls[0] == 0.0 and stalls[1] > 0.0  # sync stalls, async hides
+
+    def test_unknown_controller_uses_scalar_fallback(self):
+        class EveryOther(FixedController):
+            def __init__(self):
+                self.n = 0
+
+            def should_replace(self, metrics):
+                self.n += 1
+                return self.n % 2 == 0
+
+        plane = DecisionPlane([EveryOther(), make_controller("fixed")])
+        decisions = [plane.step([mk_metrics(t, 50.0)] * 2)[0] for t in range(4)]
+        assert [d[0] for d in decisions] == [False, True, False, True]
+        assert all(d[1] for d in decisions)
+
+    def test_periodic_mask_interval(self):
+        plane = DecisionPlane([make_controller("massivegnn", interval=3)])
+        fired = [bool(plane.step([mk_metrics(t, 50.0)])[0][0]) for t in range(9)]
+        assert fired == [False, False, True] * 3

@@ -1,0 +1,214 @@
+"""Scoring-policy zoo: semantics, kernel parity, runtime parity, sweep axis."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import scoring
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.runtime import sweep as sweep_mod
+from repro.runtime import (
+    PrefetchEngine,
+    default_grid,
+    run_sweep,
+    sweep_artifact,
+    validate_rows,
+)
+
+POLICY_NAMES = sorted(scoring.POLICIES)
+
+
+@pytest.fixture(scope="module")
+def parts():
+    g = generate("products", seed=3, scale=0.1)
+    return partition_graph(g, 2)
+
+
+class TestPolicySemantics:
+    def test_registry_and_make_policy(self):
+        assert len(POLICY_NAMES) >= 4
+        assert scoring.make_policy("rudder") is scoring.DEFAULT_POLICY
+        pol = scoring.make_policy(scoring.ScoringPolicy(name="custom", decay=0.5))
+        assert pol.name == "custom"
+        with pytest.raises(KeyError):
+            scoring.make_policy("lru-clock")
+        with pytest.raises(ValueError):
+            scoring.ScoringPolicy(name="bad", mode="teleport")
+
+    def test_default_policy_matches_module_functions(self):
+        rng = np.random.default_rng(0)
+        s = (rng.random(200) * 3).astype(np.float32)
+        a = rng.random(200) < 0.4
+        np.testing.assert_array_equal(
+            scoring.DEFAULT_POLICY.update(s, a), scoring.update_scores(s, a)
+        )
+        np.testing.assert_array_equal(
+            scoring.DEFAULT_POLICY.stale(s), scoring.stale_mask(s)
+        )
+
+    def test_recency_forgets_faster_than_rudder(self):
+        """A hot-then-idle item survives under rudder, dies under recency."""
+        hot = np.array([5.0], dtype=np.float32)
+        idle = np.array([False])
+        rudder, recency = scoring.POLICIES["rudder"], scoring.POLICIES["recency"]
+        s_rud, s_rec = hot.copy(), hot.copy()
+        rounds_rud = rounds_rec = 0
+        for _ in range(200):
+            if not rudder.stale(s_rud)[0]:
+                s_rud = rudder.update(s_rud, idle)
+                rounds_rud += 1
+            if not recency.stale(s_rec)[0]:
+                s_rec = recency.update(s_rec, idle)
+                rounds_rec += 1
+        assert rounds_rec < rounds_rud
+
+    def test_frequency_retains_longer_than_rudder(self):
+        s = np.array([3.0], dtype=np.float32)
+        idle = np.array([False])
+        freq, rudder = scoring.POLICIES["frequency"], scoring.POLICIES["rudder"]
+        decay_rounds = lambda pol: next(
+            n
+            for n in range(1, 500)
+            if pol.stale(np.float32(3.0) * np.float32(pol.decay) ** n)
+        )
+        assert decay_rounds(freq) > decay_rounds(rudder)
+        assert not freq.stale(freq.update(s, idle))[0]
+
+    def test_hybrid_caps_accumulation(self):
+        pol = scoring.POLICIES["hybrid"]
+        s = np.array([pol.score_cap], dtype=np.float32)
+        accessed = np.array([True])
+        np.testing.assert_array_equal(pol.update(s, accessed), s)
+
+    def test_degree_weights_monotone_and_float32(self):
+        w = scoring.degree_weights(np.array([0, 1, 10, 1000]))
+        assert w.dtype == np.float32
+        assert w[0] == 1.0 and np.all(np.diff(w) > 0)
+
+    def test_reset_mode_restarts_age(self):
+        pol = scoring.POLICIES["recency"]
+        aged = pol.update(np.array([2.0], np.float32), np.array([False]))
+        refreshed = pol.update(aged, np.array([True]))
+        assert refreshed[0] == np.float32(pol.access_increment)
+
+
+class TestEngineKernelParity:
+    @pytest.mark.parametrize("name", POLICY_NAMES)
+    def test_numpy_and_pallas_paths_identical(self, name):
+        rng = np.random.default_rng(7)
+        weights = (
+            scoring.degree_weights(rng.integers(0, 500, size=2000))
+            if scoring.POLICIES[name].use_weights
+            else None
+        )
+        engines = [
+            PrefetchEngine([96, 64], use_kernels=k, policy=name, node_weights=weights)
+            for k in (False, True)
+        ]
+        ids = rng.choice(2000, size=120, replace=False)
+        for eng in engines:
+            eng.insert(0, ids[:70])
+            eng.insert(1, ids[70:])
+        active = np.array([True, True])
+        for _ in range(4):
+            remote = [rng.choice(2000, size=40), rng.choice(2000, size=40)]
+            state = rng.bit_generator.state
+            for eng in engines:
+                rng.bit_generator.state = state
+                eng.lookup(remote, active)
+                eng.end_round(active)
+                eng.replace_round(remote, np.array([True, True]))
+        np.testing.assert_array_equal(engines[0].scores, engines[1].scores)
+        np.testing.assert_array_equal(engines[0].ids, engines[1].ids)
+        np.testing.assert_array_equal(engines[0].valid, engines[1].valid)
+
+
+class TestRuntimePolicyParity:
+    @pytest.mark.parametrize("name", POLICY_NAMES)
+    def test_legacy_vs_vectorized_bit_identical(self, parts, name):
+        kw = dict(
+            epochs=2,
+            batch_size=16,
+            train_model=False,
+            buffer_frac=0.25,
+            policy=name,
+        )
+        legacy = DistributedTrainer(
+            parts, variant="massivegnn", runtime="legacy", interval=4, **kw
+        ).run()
+        vector = DistributedTrainer(
+            parts, variant="massivegnn", runtime="vectorized", interval=4, **kw
+        ).run()
+        for a, b in zip(legacy.logs, vector.logs):
+            assert a.pct_hits == b.pct_hits
+            assert a.comm_volume == b.comm_volume
+            assert a.replaced == b.replaced
+            assert a.decisions == b.decisions
+        assert legacy.epoch_times == vector.epoch_times
+
+    def test_policies_change_behaviour(self, parts):
+        """The axis is real: at least two policies disagree on comm."""
+        totals = set()
+        for name in POLICY_NAMES:
+            result = DistributedTrainer(
+                parts,
+                variant="fixed",
+                policy=name,
+                epochs=2,
+                batch_size=16,
+                train_model=False,
+            ).run()
+            totals.add(result.total_comm)
+        assert len(totals) > 1
+
+
+class TestSweepPolicyAxis:
+    def test_grid_multiplies_along_policy_axis(self):
+        grid = default_grid(policies=tuple(POLICY_NAMES))
+        assert len(grid) == 16 * len(POLICY_NAMES)
+        assert {c.policy for c in grid} == set(POLICY_NAMES)
+        assert all(c.policy in c.label() for c in grid)
+
+    def test_rows_deterministic_and_sorted(self):
+        grid = default_grid(
+            num_parts=(2,),
+            batch_sizes=(16,),
+            fanouts=((5, 10),),
+            variants=("fixed",),
+            policies=("rudder", "recency"),
+            epochs=2,
+        )
+        rows_a = run_sweep(grid)
+        rows_b = run_sweep(list(reversed(grid)))
+        assert rows_a == rows_b  # input order must not matter
+        assert rows_a == sorted(rows_a, key=sweep_mod._cell_key)
+        assert {r["policy"] for r in rows_a} == {"rudder", "recency"}
+        art = sweep_artifact(rows_a)
+        assert art["grid"]["cells"] == len(rows_a)
+        assert art["grid"]["policies"] == ["recency", "rudder"]
+
+    def test_gate_accepts_sound_and_rejects_poisoned(self):
+        grid = default_grid(
+            num_parts=(2,),
+            batch_sizes=(16,),
+            fanouts=((5, 10),),
+            variants=("fixed",),
+            epochs=2,
+        )
+        rows = run_sweep(grid)
+        assert validate_rows(rows) == []
+        assert validate_rows([]) != []
+        poisoned = copy.deepcopy(rows)
+        poisoned[0]["steady_pct_hits"] = float("nan")
+        assert any("not finite" in p for p in validate_rows(poisoned))
+        missing = copy.deepcopy(rows)
+        del missing[0]["mean_epoch_time"]
+        assert any("missing metric" in p for p in validate_rows(missing))
+        dup = rows + rows[:1]
+        assert any("duplicate" in p for p in validate_rows(dup))
+        # Same label but a different off-label axis is NOT a duplicate.
+        twin = copy.deepcopy(rows[:1])
+        twin[0]["interval"] = rows[0]["interval"] + 32
+        assert validate_rows(rows[:1] + twin) == []
