@@ -1,8 +1,23 @@
 """Microbenchmarks for the Pallas kernels (interpret mode on CPU — the
 numbers are correctness-path timings, not TPU performance; real-TPU
-blocks are sized in the kernel files)."""
+blocks are sized in the kernel files) plus the batched sampling plane.
 
+Standalone usage::
+
+    PYTHONPATH=src python -m benchmarks.kernels_micro [--quick] [--json=PATH]
+
+``--quick`` is the CI smoke leg: fewer iterations and the cheap kernels
+only (it still covers ``frontier_unique_batch`` and reports the
+sampler-plane speedup — the gating assert on that speedup lives in
+``tests/test_sampler_plane.py``). ``--json`` writes a machine-readable
+artifact uploaded by CI next to ``BENCH_sweep.json``.
+"""
+
+import json
+import sys
 import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +25,8 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 from .common import csv_line
+
+_ROWS: list[dict] = []
 
 
 def _time(fn, *args, iters=5):
@@ -20,38 +37,121 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def _emit(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
+    print(csv_line(name, us, derived))
+
+
+def _best_of(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _sampler_plane_speedup(iters: int = 5) -> None:
+    """The tentpole claim: batched P-trainer sampling beats the scalar
+    per-trainer loop. Times P=8 trainers x one minibatch, numpy-path
+    plane vs P sequential ``NeighborSampler.sample`` + remote filters."""
+    from repro.graph import NeighborSampler, SamplerPlane, generate, partition_graph
+    from repro.graph.sampler import unique_remote
+
+    P, B = 8, 16  # the sweep grid's trainer/batch regime
+    g = generate("products", seed=0, scale=0.25)
+    parts = partition_graph(g, P)
+    blocks = [parts.local_train_nodes(p)[:B] for p in range(P)]
+    if len({len(b) for b in blocks}) != 1:
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+    scalar = NeighborSampler(g, (10, 25))
+    plane = SamplerPlane(g, (10, 25))
+
+    def run_scalar():
+        rng = np.random.default_rng(0)
+        mbs = [scalar.sample(b, rng) for b in blocks]
+        return [unique_remote(mb, parts.part_of, p) for p, mb in enumerate(mbs)]
+
+    def run_plane():
+        rng = np.random.default_rng(0)
+        return plane.sample_all(blocks, rng, part_of=parts.part_of)
+
+    t_scalar = _best_of(run_scalar, iters)
+    t_plane = _best_of(run_plane, iters)
+    speedup = t_scalar / t_plane if t_plane > 0 else float("inf")
+    _emit(
+        f"sampler_plane_p{P}_b{B}_f10x25",
+        t_plane * 1e6,
+        f"scalar_us={t_scalar * 1e6:.1f} speedup={speedup:.2f}x",
+    )
+
+
+def run(quick: bool = False):
+    _ROWS.clear()
+    iters = 2 if quick else 5
+
     table = jax.random.normal(jax.random.PRNGKey(0), (4096, 512), jnp.float32)
     idx = jax.random.randint(jax.random.PRNGKey(1), (256,), 0, 4096)
-    us = _time(lambda: ops.gather_rows(table, idx))
-    print(csv_line("kernel_gather_rows_4096x512_g256", us, "interpret=True"))
+    us = _time(lambda: ops.gather_rows(table, idx), iters=iters)
+    _emit("kernel_gather_rows_4096x512_g256", us, "interpret=True")
 
     idx2 = jax.random.randint(jax.random.PRNGKey(2), (64, 10), 0, 4096)
-    us = _time(lambda: ops.gather_mean(table, idx2))
-    print(csv_line("kernel_gather_mean_b64_k10", us, "interpret=True"))
-
-    data = jax.random.normal(jax.random.PRNGKey(3), (64 * 25, 256), jnp.float32)
-    us = _time(lambda: ops.segment_sum_equal(data, 25))
-    print(csv_line("kernel_segment_sum_s64_k25", us, "interpret=True"))
+    us = _time(lambda: ops.gather_mean(table, idx2), iters=iters)
+    _emit("kernel_gather_mean_b64_k10", us, "interpret=True")
 
     scores = jax.random.uniform(jax.random.PRNGKey(4), (65536,), maxval=3.0)
     acc = jax.random.bernoulli(jax.random.PRNGKey(5), 0.4, (65536,))
-    us = _time(lambda: ops.score_update(scores, acc))
-    print(csv_line("kernel_score_update_64k", us, "interpret=True"))
+    us = _time(lambda: ops.score_update(scores, acc), iters=iters)
+    _emit("kernel_score_update_64k", us, "interpret=True")
 
-    ks = jax.random.split(jax.random.PRNGKey(6), 4)
-    q_lat = jax.random.normal(ks[0], (2, 16, 128)) * 0.3
-    q_rope = jax.random.normal(ks[1], (2, 16, 64)) * 0.3
-    c = jax.random.normal(ks[2], (2, 1024, 128)) * 0.3
-    kr = jax.random.normal(ks[3], (2, 1024, 64)) * 0.3
-    us = _time(
-        lambda: ops.mla_flash_decode(
-            q_lat, q_rope, c, kr, jnp.int32(1023), scale=1 / 13.86
-        )
+    # The sampling plane's fused dedup: 8 PEs x 4k-slot sorted frontiers.
+    rng = np.random.default_rng(6)
+    keys = jnp.asarray(
+        np.sort(rng.integers(0, 3000, (8, 4224)), axis=1).astype(np.int32)
     )
-    print(csv_line("kernel_mla_flash_decode_s1024", us, "interpret=True"))
+    rem = jnp.asarray(rng.random((8, 4224)) < 0.5)
+    us = _time(lambda: ops.frontier_unique_batch(keys, rem), iters=iters)
+    _emit("kernel_frontier_unique_batch_p8_m4224", us, "interpret=True")
+
+    _sampler_plane_speedup(iters=3 if quick else 5)
+
+    if not quick:
+        data = jax.random.normal(
+            jax.random.PRNGKey(3), (64 * 25, 256), jnp.float32
+        )
+        us = _time(lambda: ops.segment_sum_equal(data, 25), iters=iters)
+        _emit("kernel_segment_sum_s64_k25", us, "interpret=True")
+
+        ks = jax.random.split(jax.random.PRNGKey(6), 4)
+        q_lat = jax.random.normal(ks[0], (2, 16, 128)) * 0.3
+        q_rope = jax.random.normal(ks[1], (2, 16, 64)) * 0.3
+        c = jax.random.normal(ks[2], (2, 1024, 128)) * 0.3
+        kr = jax.random.normal(ks[3], (2, 1024, 64)) * 0.3
+        us = _time(
+            lambda: ops.mla_flash_decode(
+                q_lat, q_rope, c, kr, jnp.int32(1023), scale=1 / 13.86
+            ),
+            iters=iters,
+        )
+        _emit("kernel_mla_flash_decode_s1024", us, "interpret=True")
     return True
 
 
+def main(argv: list[str]) -> int:
+    quick = "--quick" in argv
+    json_path = None
+    for arg in argv:
+        if arg.startswith("--json="):
+            json_path = arg.split("=", 1)[1]
+    run(quick=quick)
+    if json_path:
+        payload = {"schema": 1, "quick": quick, "rows": _ROWS}
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# kernels-micro artifact written to {json_path}", file=sys.stderr)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    sys.exit(main(sys.argv[1:]))

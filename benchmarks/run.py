@@ -16,6 +16,13 @@ label (e.g. ``--sweep p4 massivegnn``). Sweep options:
 * ``--policies=rudder,recency,...`` — widen the grid along the
   scoring/eviction policy axis (see ``repro.core.scoring.POLICIES``;
   ``--policies=all`` selects the whole zoo);
+* ``--graphs=products,rmat,powerlaw,...`` — the graph-scenario axis
+  (dataset presets of ``repro.graph.generate.DATASET_PRESETS``,
+  including the RMAT / power-law families; ``--graphs=all`` sweeps
+  every preset);
+* ``--topology=none,rack,torus,...`` — the cluster cost-model axis
+  (``repro.graph.generate.TOPOLOGIES``; ``none`` is the flat §4.5.3
+  model, ``--topology=all`` adds every named topology);
 * ``--json=PATH`` — additionally write the deterministic sweep artifact
   (sorted cells, sorted keys) consumed by the CI ``bench-smoke`` job;
 * ``--gate`` — exit non-zero if any cell is NaN/empty/non-finite (the
@@ -44,8 +51,24 @@ MODULES = [
 ]
 
 
+def _parse_axis(arg: str, options, all_value: tuple) -> tuple | None:
+    """Parse ``--axis=a,b,c`` against valid options ('all' = every one)."""
+    name, spec = arg.split("=", 1)
+    values = all_value if spec == "all" else tuple(v for v in spec.split(",") if v)
+    unknown = [v for v in values if v not in options]
+    if unknown or not values:
+        print(
+            f"unknown {name} {unknown or spec!r}; "
+            f"options: {sorted(options)} or 'all'",
+            file=sys.stderr,
+        )
+        return None
+    return values
+
+
 def run_sweep_cli(selected: list[str]) -> int:
     from repro.core.scoring import POLICIES
+    from repro.graph import DATASET_PRESETS, TOPOLOGIES
     from repro.runtime import (
         default_grid,
         run_sweep,
@@ -54,24 +77,26 @@ def run_sweep_cli(selected: list[str]) -> int:
     )
 
     policies = ("rudder",)
+    datasets = ("products",)
+    topologies = ("none",)
     json_path = None
     gate = False
     terms = []
     for arg in selected:
         if arg.startswith("--policies="):
-            spec = arg.split("=", 1)[1]
-            policies = (
-                tuple(sorted(POLICIES))
-                if spec == "all"
-                else tuple(p for p in spec.split(",") if p)
+            policies = _parse_axis(arg, POLICIES, tuple(sorted(POLICIES)))
+            if policies is None:
+                return 2
+        elif arg.startswith("--graphs="):
+            datasets = _parse_axis(
+                arg, DATASET_PRESETS, tuple(sorted(DATASET_PRESETS))
             )
-            unknown = [p for p in policies if p not in POLICIES]
-            if unknown or not policies:
-                print(
-                    f"unknown --policies {unknown or spec!r}; "
-                    f"options: {sorted(POLICIES)} or 'all'",
-                    file=sys.stderr,
-                )
+            if datasets is None:
+                return 2
+        elif arg.startswith("--topology="):
+            options = ("none",) + tuple(TOPOLOGIES)
+            topologies = _parse_axis(arg, options, options)
+            if topologies is None:
                 return 2
         elif arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
@@ -79,7 +104,9 @@ def run_sweep_cli(selected: list[str]) -> int:
             gate = True
         else:
             terms.append(arg)
-    grid = default_grid(policies=policies)
+    grid = default_grid(
+        datasets=datasets, policies=policies, topologies=topologies
+    )
     if terms:
         # AND semantics: every term must match, so extra terms narrow.
         grid = [c for c in grid if all(s in c.label() for s in terms)]
@@ -89,15 +116,16 @@ def run_sweep_cli(selected: list[str]) -> int:
     t0 = time.time()
     rows = run_sweep(grid, verbose=True)
     print(
-        "label,variant,policy,num_parts,batch_size,fanouts,steady_pct_hits,"
-        "comm_per_minibatch,mean_epoch_time"
+        "label,dataset,variant,policy,topology,num_parts,batch_size,fanouts,"
+        "steady_pct_hits,comm_per_minibatch,mean_epoch_time"
     )
     for r in rows:
         fan = "x".join(str(f) for f in r["fanouts"])
         print(
-            f"{r['label']},{r['variant']},{r['policy']},{r['num_parts']},"
-            f"{r['batch_size']},{fan},{r['steady_pct_hits']},"
-            f"{r['comm_per_minibatch']},{r['mean_epoch_time']}"
+            f"{r['label']},{r['dataset']},{r['variant']},{r['policy']},"
+            f"{r['topology']},{r['num_parts']},{r['batch_size']},{fan},"
+            f"{r['steady_pct_hits']},{r['comm_per_minibatch']},"
+            f"{r['mean_epoch_time']}"
         )
     print(
         f"# sweep: {len(rows)} configurations in {time.time()-t0:.1f}s "

@@ -88,6 +88,9 @@ class PersistentBuffer:
             self.features = np.zeros((self.capacity, feature_dim), dtype=np.float32)
         else:
             self.features = None
+        # Nodes admitted by the most recent replace() round (the topology
+        # cost model prices their fetch RPCs by home partition).
+        self.last_placed = np.array([], dtype=np.int64)
         self.stats = BufferStats()
 
     # ------------------------------------------------------------------ #
@@ -185,6 +188,7 @@ class PersistentBuffer:
         free = self.free_slots()
         slots = np.concatenate([free, stale])
         n = min(len(slots), len(node_ids))
+        self.last_placed = node_ids[:n]
         if n == 0:
             self.stats.skipped_rounds += 1
             return 0

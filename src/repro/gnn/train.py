@@ -22,7 +22,10 @@ performance model driven by the exact byte counts:
 
 with T_COMM = alpha + fetched_bytes / link_bw per trainer and the step
 synchronised across trainers by the gradient all-reduce (max over PEs).
-Constants are documented in :class:`TimeModel`.
+Constants are documented in :class:`TimeModel`. With ``topology=...``
+the flat constants are replaced by the per-pair cluster cost model of
+:class:`repro.graph.generate.Topology` (fetch RPCs priced by home
+partition); the exact byte counts are unchanged.
 
 Two interchangeable execution paths produce the run (see
 ``docs/ARCHITECTURE.md``):
@@ -47,9 +50,9 @@ from ..core import scoring
 from ..core.buffer import PersistentBuffer
 from ..core.controller import Controller, make_controller
 from ..core.metrics import GraphMeta, Metrics
-from ..graph.generate import Graph
+from ..graph.generate import Graph, Topology, make_topology
 from ..graph.partition import Partitioned
-from ..graph.sampler import MiniBatch, NeighborSampler, unique_remote
+from ..graph.sampler import MiniBatch, NeighborSampler, SamplerPlane, unique_remote
 from ..runtime.engine import PrefetchEngine
 from .sage import init_sage, sage_accuracy, sage_grads
 
@@ -115,14 +118,18 @@ class RunResult:
     graph_meta: list[GraphMeta]
 
     # ---- aggregates used across the benchmark suite ------------------- #
+    # Aggregates over an *empty* run (zero epochs / zero logged
+    # minibatches) are NaN, not 0.0: a silent zero looks like a perfect
+    # run in sweep artifacts, while NaN trips the CI gate
+    # (``runtime.sweep.validate_rows``).
     @property
     def mean_epoch_time(self) -> float:
-        return float(np.mean(self.epoch_times))
+        return float(np.mean(self.epoch_times)) if self.epoch_times else float("nan")
 
     @property
     def mean_pct_hits(self) -> float:
         vals = [h for log in self.logs for h in log.pct_hits]
-        return float(np.mean(vals)) if vals else 0.0
+        return float(np.mean(vals)) if vals else float("nan")
 
     @property
     def total_comm(self) -> int:
@@ -131,7 +138,7 @@ class RunResult:
     @property
     def comm_per_minibatch(self) -> float:
         n = sum(len(log.comm_volume) for log in self.logs)
-        return self.total_comm / n if n else 0.0
+        return self.total_comm / n if n else float("nan")
 
     @property
     def steady_pct_hits(self) -> float:
@@ -140,11 +147,11 @@ class RunResult:
         for log in self.logs:
             n = len(log.pct_hits)
             vals.extend(log.pct_hits[max(n - n // 4, 1):])
-        return float(np.mean(vals)) if vals else 0.0
+        return float(np.mean(vals)) if vals else float("nan")
 
     def comm_p99(self) -> float:
         vals = [c for log in self.logs for c in log.comm_volume]
-        return float(np.percentile(vals, 99)) if vals else 0.0
+        return float(np.percentile(vals, 99)) if vals else float("nan")
 
 
 class DistributedTrainer:
@@ -169,6 +176,7 @@ class DistributedTrainer:
         seed: int = 0,
         runtime: str = "vectorized",
         policy: str | scoring.ScoringPolicy = "rudder",
+        topology: str | Topology | None = None,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -186,8 +194,23 @@ class DistributedTrainer:
         self.mode = mode
         self.train_model = train_model
         self.tm = time_model or TimeModel()
+        # Per-pair comm pricing (None keeps the flat §4.5.3 constants).
+        if isinstance(topology, str):
+            topology = make_topology(
+                topology, parts.num_parts,
+                link_bw=self.tm.link_bw, alpha=self.tm.alpha,
+            )
+        if topology is not None and topology.num_parts != parts.num_parts:
+            raise ValueError(
+                f"topology is {topology.num_parts}-way but the graph is "
+                f"partitioned {parts.num_parts}-way"
+            )
+        self.topology = topology
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanouts)
+        # Batched twin of the per-PE sampler: all P trainers' minibatches
+        # advance in one pass (bit-identical draws; see SamplerPlane).
+        self.sampler_plane = SamplerPlane(self.graph, fanouts)
 
         P = parts.num_parts
         self.graph_meta = [
@@ -400,8 +423,23 @@ class DistributedTrainer:
                     logs[p].replaced.append(replaced)
                     logs[p].decisions.append(bool(replace))
 
-                    # §4.5.3 time model.
-                    t_comm = self.tm.t_comm(comm, feature_dim)
+                    # §4.5.3 time model (per-pair costs when a cluster
+                    # topology is configured, flat constants otherwise).
+                    if self.topology is not None:
+                        placed = (
+                            buf.last_placed
+                            if replace and ctrl.uses_buffer
+                            else np.array([], dtype=np.int64)
+                        )
+                        fetched = np.bincount(
+                            self.parts.part_of[np.concatenate([missed, placed])],
+                            minlength=P,
+                        )
+                        t_comm = self.topology.t_comm_row(
+                            p, fetched, feature_dim, self.tm.feature_bytes
+                        )
+                    else:
+                        t_comm = self.tm.t_comm(comm, feature_dim)
                     if self.mode == "sync" and ctrl.inference_cost:
                         t = self.tm.t_ddp + t_comm + ctrl.step_stall() * self.tm.t_ddp
                     else:

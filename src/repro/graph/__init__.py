@@ -1,13 +1,26 @@
 """Graph substrate: generation, partitioning, neighbor sampling."""
 
-from .generate import Graph, generate, DATASET_PRESETS
+from .generate import (
+    DATASET_PRESETS,
+    TOPOLOGIES,
+    Graph,
+    Topology,
+    generate,
+    make_topology,
+    validate_csr,
+)
 from .partition import partition_graph
-from .sampler import NeighborSampler
+from .sampler import NeighborSampler, SamplerPlane
 
 __all__ = [
     "Graph",
     "generate",
     "DATASET_PRESETS",
+    "Topology",
+    "TOPOLOGIES",
+    "make_topology",
+    "validate_csr",
     "partition_graph",
     "NeighborSampler",
+    "SamplerPlane",
 ]

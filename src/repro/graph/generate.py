@@ -26,6 +26,30 @@ from dataclasses import dataclass
 import numpy as np
 
 
+def validate_csr(indptr: np.ndarray, indices: np.ndarray) -> None:
+    """Assert the CSR invariants every consumer relies on.
+
+    The samplers index ``indices[indptr[u] + k]`` with ``k < degree(u)``
+    and no bounds clamping, so a truncated / non-monotone / out-of-range
+    CSR must fail loudly at construction, not silently redirect draws to
+    the global last edge (the old ``np.minimum`` clamp bias).
+    """
+    if len(indptr) < 1 or indptr[0] != 0:
+        raise ValueError("CSR indptr must start at 0")
+    if indptr[-1] != len(indices):
+        raise ValueError(
+            f"CSR indptr[-1]={indptr[-1]} must equal len(indices)={len(indices)}"
+        )
+    if np.any(np.diff(indptr) < 0):
+        raise ValueError("CSR indptr must be non-decreasing")
+    n = len(indptr) - 1
+    if len(indices) and (indices.min() < 0 or indices.max() >= n):
+        raise ValueError(
+            f"CSR indices must lie in [0, {n}); got "
+            f"[{indices.min()}, {indices.max()}]"
+        )
+
+
 @dataclass
 class Graph:
     """Undirected graph in CSR form, with node features and labels."""
@@ -38,6 +62,9 @@ class Graph:
     train_nodes: np.ndarray     # (T,) int64
     num_classes: int
     communities: np.ndarray | None = None  # (N,) int32 ground-truth blocks
+
+    def __post_init__(self):
+        validate_csr(self.indptr, self.indices)
 
     @property
     def num_nodes(self) -> int:
@@ -67,6 +94,7 @@ class DatasetPreset:
     intra_prob: float           # community locality (higher = easier cut)
     zipf_s: float               # degree skew within a community
     source: str                 # what it stands in for
+    family: str = "dcsbm"       # edge generator: dcsbm | rmat | powerlaw
 
 
 # Paper Table 1(a), scaled ~1000x (papers100M/friendster ~2000x) so a
@@ -88,6 +116,17 @@ DATASET_PRESETS: dict[str, DatasetPreset] = {
                           "yelp 716K nodes / 13.9M edges"),
     "arxiv": DatasetPreset("arxiv", 17_000, 6.5, 128, 40, 0.20, 0.90, 0.75,
                            "ogbn-arxiv 169K nodes / 1.1M edges"),
+    # Scenario-axis families beyond DC-SBM: R-MAT reproduces the Graph500
+    # self-similar adjacency (hubs, no clean communities — the worst case
+    # for locality-preserving partitioners), Chung-Lu power-law gives
+    # heavy-tailed degrees with fully independent endpoints. Both leave
+    # ``communities=None``, so partitioning exercises the BFS grower.
+    "rmat": DatasetPreset("rmat", 20_000, 16.0, 64, 16, 0.10, 0.0, 0.0,
+                          "Graph500 R-MAT (a,b,c)=(0.57,0.19,0.19)",
+                          family="rmat"),
+    "powerlaw": DatasetPreset("powerlaw", 20_000, 12.0, 64, 16, 0.10, 0.0, 0.9,
+                              "Chung-Lu power-law, Zipf weights",
+                              family="powerlaw"),
 }
 
 
@@ -151,6 +190,63 @@ def _dcsbm_edges(
     return np.stack([src, dst], axis=1), comm
 
 
+def _rmat_edges(
+    n: int,
+    num_edges: int,
+    rng: np.random.Generator,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+) -> np.ndarray:
+    """Graph500-style R-MAT edge list (vectorised over all edges).
+
+    Each of ``ceil(log2 n)`` bit levels picks the (src, dst) quadrant
+    with probabilities (a, b, c, 1-a-b-c). Endpoints landing past ``n``
+    (the power-of-two overshoot) are dropped; batches are redrawn until
+    the requested edge count is met, so the preset's average degree
+    holds for every ``n`` (the drop rate depends on how far ``n`` sits
+    below the next power of two).
+    """
+    bits = max(int(np.ceil(np.log2(max(n, 2)))), 1)
+    d = 1.0 - a - b - c
+    p_src1 = c + d                     # P(src bit = 1)
+    p_dst1_src0 = b / (a + b)          # P(dst bit = 1 | src bit = 0)
+    p_dst1_src1 = d / (c + d)          # P(dst bit = 1 | src bit = 1)
+    chunks: list[np.ndarray] = []
+    kept = 0
+    draw = int(num_edges * 1.4) + 16
+    while kept < num_edges:
+        src = np.zeros(draw, dtype=np.int64)
+        dst = np.zeros(draw, dtype=np.int64)
+        for _ in range(bits):
+            src_bit = rng.random(draw) < p_src1
+            dst_bit = rng.random(draw) < np.where(
+                src_bit, p_dst1_src1, p_dst1_src0
+            )
+            src = (src << 1) | src_bit
+            dst = (dst << 1) | dst_bit
+        keep = (src < n) & (dst < n)
+        chunk = np.stack([src[keep], dst[keep]], axis=1)
+        chunks.append(chunk)
+        kept += len(chunk)
+        draw = max(int((num_edges - kept) * 1.6) + 16, 16)
+    return np.concatenate(chunks)[:num_edges]
+
+
+def _powerlaw_edges(
+    n: int, num_edges: int, zipf_s: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Chung-Lu power-law edges: both endpoints drawn independently from
+    Zipf rank weights (ranks shuffled so node id carries no degree
+    information). Heavy-tailed degrees, zero community structure."""
+    ranks = rng.permutation(n) + 1
+    weights = ranks.astype(np.float64) ** (-zipf_s)
+    p = weights / weights.sum()
+    src = rng.choice(n, size=num_edges, p=p)
+    dst = rng.choice(n, size=num_edges, p=p)
+    return np.stack([src, dst], axis=1).astype(np.int64)
+
+
 def generate(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
     """Generate the named dataset preset (``scale`` shrinks node count)."""
     if name not in DATASET_PRESETS:
@@ -159,17 +255,26 @@ def generate(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
     rng = np.random.default_rng(seed)
     n = max(int(p.num_nodes * scale), 256)
     num_edges = int(n * p.avg_degree / 2)
-    num_comm = max(16, n // 300)
-    edges, comm = _dcsbm_edges(
-        n, num_edges, num_comm, p.intra_prob, p.zipf_s, rng
-    )
+    if p.family == "rmat":
+        edges, comm = _rmat_edges(n, num_edges, rng), None
+    elif p.family == "powerlaw":
+        edges, comm = _powerlaw_edges(n, num_edges, p.zipf_s, rng), None
+    else:
+        num_comm = max(16, n // 300)
+        edges, comm = _dcsbm_edges(
+            n, num_edges, num_comm, p.intra_prob, p.zipf_s, rng
+        )
     indptr, indices = _to_csr(n, edges)
 
     # Labels correlate with communities (as in real citation/co-purchase
-    # graphs) so GraphSAGE actually benefits from neighborhoods.
-    labels = (comm % p.num_classes).astype(np.int32)
-    flip = rng.random(n) < 0.1
-    labels[flip] = rng.integers(0, p.num_classes, size=int(flip.sum()))
+    # graphs) so GraphSAGE actually benefits from neighborhoods. The
+    # community-free families (rmat / powerlaw) get uniform labels.
+    if comm is not None:
+        labels = (comm % p.num_classes).astype(np.int32)
+        flip = rng.random(n) < 0.1
+        labels[flip] = rng.integers(0, p.num_classes, size=int(flip.sum()))
+    else:
+        labels = rng.integers(0, p.num_classes, size=n).astype(np.int32)
     centroids = rng.normal(0, 1, size=(p.num_classes, p.feature_dim)).astype(
         np.float32
     )
@@ -189,3 +294,111 @@ def generate(name: str, seed: int = 0, scale: float = 1.0) -> Graph:
         num_classes=p.num_classes,
         communities=comm,
     )
+
+
+# --------------------------------------------------------------------- #
+# Cluster topology cost model
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class Topology:
+    """Per-pair communication cost model for the trainer cluster.
+
+    The flat §4.5.3 model (``TimeModel.t_comm``) prices every fetched
+    byte identically; real clusters do not — a trainer pulling features
+    from a partition across the rack switch (or across the torus) pays a
+    different latency/bandwidth than from its neighbor. ``Topology``
+    replaces the flat constants with ``(P, P)`` matrices and prices each
+    trainer's per-peer aggregated fetch RPCs separately.
+
+    ``reduce='max'`` models per-peer RPCs issued in parallel (the step
+    waits for the slowest peer); ``'sum'`` models a serialized fetch
+    loop. ``topology=None`` on the trainer keeps the legacy flat model
+    bit-for-bit.
+    """
+
+    name: str
+    alpha: np.ndarray            # (P, P) per-RPC latency, seconds
+    bw: np.ndarray               # (P, P) bandwidth, bytes/s
+    reduce: str = "max"
+
+    def __post_init__(self):
+        if self.reduce not in ("max", "sum"):
+            raise ValueError(f"reduce must be 'max' or 'sum', got {self.reduce!r}")
+        if self.alpha.shape != self.bw.shape or self.alpha.ndim != 2:
+            raise ValueError("alpha and bw must be matching (P, P) matrices")
+
+    @property
+    def num_parts(self) -> int:
+        return self.alpha.shape[0]
+
+    def t_comm_row(
+        self, p: int, fetched: np.ndarray, feature_dim: int, feature_bytes: int = 4
+    ) -> float:
+        """Step comm time for trainer ``p``; ``fetched[q]`` = nodes pulled
+        from partition q this step (``fetched[p]`` is ignored)."""
+        return float(
+            self.t_comm_pairs(
+                fetched[None, :], feature_dim, feature_bytes, rows=np.array([p])
+            )[0]
+        )
+
+    def t_comm_pairs(
+        self,
+        fetched: np.ndarray,
+        feature_dim: int,
+        feature_bytes: int = 4,
+        rows: np.ndarray | None = None,
+    ) -> np.ndarray:
+        """Vectorized comm time for all trainers: ``fetched`` is
+        ``(P, P)`` with ``fetched[p, q]`` = nodes trainer p pulls from
+        partition q. Returns ``(P,)`` step comm times."""
+        fetched = np.asarray(fetched, dtype=np.float64)
+        alpha = self.alpha if rows is None else self.alpha[rows]
+        bw = self.bw if rows is None else self.bw[rows]
+        cost = np.where(
+            fetched > 0,
+            alpha + fetched * feature_dim * feature_bytes / bw,
+            0.0,
+        )
+        # A trainer never fetches from its own partition.
+        if rows is None:
+            np.fill_diagonal(cost, 0.0)
+        else:
+            cost[np.arange(len(rows)), rows] = 0.0
+        return cost.max(axis=1) if self.reduce == "max" else cost.sum(axis=1)
+
+
+#: Named topology families for the ``--topology`` sweep axis.
+TOPOLOGIES = ("flat", "rack", "torus")
+
+
+def make_topology(
+    name: str,
+    num_parts: int,
+    link_bw: float = 1e6,
+    alpha: float = 5e-4,
+) -> Topology:
+    """Build a named ``(P, P)`` topology.
+
+    * ``flat``  — homogeneous full bisection (every pair at ``link_bw``);
+    * ``rack``  — two racks (first/second half of the trainers):
+      cross-rack pairs pay 4x the latency at 1/4 the bandwidth;
+    * ``torus`` — 1-D torus: cost scales with ring hop distance.
+    """
+    P = int(num_parts)
+    ones = np.ones((P, P), dtype=np.float64)
+    if name == "flat":
+        return Topology("flat", alpha * ones, link_bw * ones)
+    if name == "rack":
+        rack = (np.arange(P) >= (P + 1) // 2).astype(np.int64)
+        cross = rack[:, None] != rack[None, :]
+        return Topology(
+            "rack",
+            np.where(cross, 4.0 * alpha, alpha),
+            np.where(cross, link_bw / 4.0, link_bw),
+        )
+    if name == "torus":
+        d = np.abs(np.arange(P)[:, None] - np.arange(P)[None, :])
+        hops = np.maximum(np.minimum(d, P - d), 1).astype(np.float64)
+        return Topology("torus", alpha * hops, link_bw / hops)
+    raise KeyError(f"unknown topology {name!r}; options: {TOPOLOGIES}")

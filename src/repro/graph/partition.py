@@ -77,12 +77,15 @@ def partition_graph(
         seeds.append(int(u))
         banned.update(int(v) for v in graph.neighbors(int(u)))
         banned.add(int(u))
-    while len(seeds) < num_parts:  # pathological small graphs
+    # Pathological small graphs: at most one seed per node — when
+    # num_parts > num_nodes the surplus partitions stay (validly) empty.
+    while len(seeds) < min(num_parts, n):
         u = int(rng.integers(0, n))
         if u not in seeds:
             seeds.append(u)
 
-    queues = [deque([s]) for s in seeds]
+    queues = [deque([seeds[p]]) if p < len(seeds) else deque()
+              for p in range(num_parts)]
     for p, s in enumerate(seeds):
         part_of[s] = p
         sizes[p] = 1

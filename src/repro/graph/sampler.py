@@ -28,6 +28,26 @@ class MiniBatch:
     labels: np.ndarray           # (B,)
 
 
+def _gather_neighbors(
+    g: Graph, nodes: np.ndarray, deg: np.ndarray, offs: np.ndarray
+) -> np.ndarray:
+    """Resolve per-node fanout offsets against the CSR (any leading shape).
+
+    ``offs[..., k] < deg`` whenever ``deg > 0`` (the uniform draw is
+    scaled by the degree) and :class:`repro.graph.generate.Graph` asserts
+    the CSR invariants at construction, so no bounds clamping is applied
+    — a corrupt CSR fails there instead of silently redirecting draws to
+    the global last edge. Degree-0 nodes read slot 0 and are overwritten
+    by the self-loop fallback.
+    """
+    has_nbrs = deg[..., None] > 0
+    if len(g.indices) == 0:  # edgeless graph: everything self-loops
+        return np.broadcast_to(nodes[..., None], offs.shape).copy()
+    idx = g.indptr[nodes][..., None] + offs
+    nbrs = g.indices[np.where(has_nbrs, idx, 0)]
+    return np.where(has_nbrs, nbrs, nodes[..., None])
+
+
 class NeighborSampler:
     def __init__(self, graph: Graph, fanouts: tuple[int, ...] = (10, 25)):
         """``fanouts[0]`` applies to the seeds' hop, ``fanouts[1]`` to the
@@ -45,11 +65,7 @@ class NeighborSampler:
         offs = (rng.random((len(nodes), fanout)) * np.maximum(deg, 1)[:, None]).astype(
             np.int64
         )
-        starts = g.indptr[nodes][:, None]
-        idx = starts + offs
-        nbrs = g.indices[np.minimum(idx, len(g.indices) - 1)]
-        nbrs = np.where(deg[:, None] > 0, nbrs, nodes[:, None])
-        return nbrs
+        return _gather_neighbors(g, nodes, deg, offs)
 
     def sample(self, seeds: np.ndarray, rng: np.random.Generator) -> MiniBatch:
         seeds = np.asarray(seeds, dtype=np.int64)
@@ -74,3 +90,198 @@ def unique_remote(minibatch: MiniBatch, part_of: np.ndarray, part: int) -> np.nd
     """Unique sampled nodes homed on other partitions (the fetch set)."""
     nodes = minibatch.unique_nodes
     return nodes[part_of[nodes] != part]
+
+
+def frontier_dedup(
+    sorted_keys: np.ndarray, is_remote: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray | None]:
+    """First-occurrence mask over row-sorted frontiers (numpy reference).
+
+    ``sorted_keys`` is ``(P, M)``, each row sorted ascending; the mask
+    selects each row's sorted-unique elements. With ``is_remote`` the
+    remote extraction fuses into the same pass:
+    ``remote_mask = first & is_remote``. The Pallas twin is
+    :func:`repro.kernels.ops.frontier_unique_batch`.
+    """
+    first = np.ones(sorted_keys.shape, dtype=bool)
+    if sorted_keys.shape[1] > 1:
+        first[:, 1:] = sorted_keys[:, 1:] != sorted_keys[:, :-1]
+    remote = (first & is_remote) if is_remote is not None else None
+    return first, remote
+
+
+class SamplerPlane:
+    """Batched multi-trainer sampler: every PE's minibatch in one pass.
+
+    The legacy hot path calls :meth:`NeighborSampler.sample` once per
+    trainer — P sequential fanout expansions and P ``np.unique`` passes
+    per minibatch, the last scalar loop in the vectorized runtime. The
+    plane advances all P trainers at once:
+
+    * per-trainer seed blocks stack into a dense ``(P, B)`` array and
+      fanout expansion runs on the shared CSR as ``(P, B, f1)`` /
+      ``(P, B*f1, f2)`` blocks;
+    * the per-trainer ``np.unique`` + remote filter is one fused pass:
+      row-sort all P frontiers, then a single first-occurrence +
+      remote-membership mask (numpy, or the fused Pallas kernel
+      ``kernels.ops.frontier_unique_batch`` when ``use_kernels``).
+
+    Bit-identical to P sequential ``NeighborSampler.sample`` calls on
+    the shared RNG: the uniform blocks are pre-drawn PE-major in the
+    legacy consumption order (one flat draw per PE covers that PE's
+    layer draws exactly), and every arithmetic step reuses the scalar
+    sampler's formulas. Ragged seed blocks (trainers with unequal batch
+    sizes) fall back to the scalar sampler, which preserves the same
+    draw order trivially.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        fanouts: tuple[int, ...] = (10, 25),
+        use_kernels: bool = False,
+    ):
+        self.graph = graph
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.use_kernels = use_kernels
+        self._scalar = NeighborSampler(graph, self.fanouts)
+
+    # ------------------------------------------------------------------ #
+    def _layer_sizes(self, batch: int) -> list[tuple[int, int]]:
+        sizes = []
+        n = batch
+        for f in self.fanouts:
+            sizes.append((n, f))
+            n *= f
+        return sizes
+
+    def _dedup(
+        self, sorted_keys: np.ndarray, is_remote: np.ndarray | None
+    ) -> tuple[np.ndarray, np.ndarray | None]:
+        if self.use_kernels:
+            from ..kernels import ops
+
+            if sorted_keys.size and sorted_keys.max() >= np.iinfo(np.int32).max:
+                return frontier_dedup(sorted_keys, is_remote)  # i32 overflow
+            rem = (
+                np.zeros(sorted_keys.shape, dtype=bool)
+                if is_remote is None
+                else is_remote
+            )
+            first, remote, _, _ = ops.frontier_unique_batch(
+                sorted_keys.astype(np.int32), rem
+            )
+            first = np.asarray(first, dtype=bool)
+            remote = np.asarray(remote, dtype=bool) if is_remote is not None else None
+            return first, remote
+        return frontier_dedup(sorted_keys, is_remote)
+
+    # ------------------------------------------------------------------ #
+    def sample_all(
+        self,
+        seed_blocks: list[np.ndarray],
+        rng: np.random.Generator,
+        part_of: np.ndarray | None = None,
+    ) -> tuple[list[MiniBatch], list[np.ndarray] | None]:
+        """Sample one minibatch per trainer PE in one batched pass.
+
+        Returns ``(minibatches, remote)``; ``remote[p]`` is PE p's
+        unique remote fetch set (sorted), or ``None`` when ``part_of``
+        is not given. Identical to calling ``NeighborSampler.sample``
+        once per PE in order on the same ``rng`` (and, for ``remote``,
+        :func:`unique_remote` per PE).
+        """
+        P = len(seed_blocks)
+        seeds = [np.asarray(s, dtype=np.int64) for s in seed_blocks]
+        lengths = {len(s) for s in seeds}
+        if P == 0 or len(lengths) != 1:
+            return self._sample_ragged(seeds, rng, part_of)
+        B = lengths.pop()
+        g = self.graph
+        sizes = self._layer_sizes(B)
+        total = sum(n * f for n, f in sizes)
+
+        # Pre-draw each PE's uniform blocks in the legacy order (PE-major,
+        # layer-minor): one flat draw per PE consumes the generator stream
+        # exactly as that PE's sequence of per-layer draws would.
+        draws = np.stack([rng.random(total) for _ in range(P)])  # (P, total)
+        layer_u, off = [], 0
+        for n, f in sizes:
+            layer_u.append(draws[:, off : off + n * f].reshape(P, n, f))
+            off += n * f
+
+        # Batched fanout expansion on the shared CSR.
+        seed_mat = np.stack(seeds)                               # (P, B)
+        frontier = seed_mat
+        layers: list[np.ndarray] = []
+        for (n, f), u in zip(sizes, layer_u):
+            deg = g.indptr[frontier + 1] - g.indptr[frontier]    # (P, n)
+            offs = (u * np.maximum(deg, 1)[..., None]).astype(np.int64)
+            nbrs = _gather_neighbors(g, frontier, deg, offs)     # (P, n, f)
+            layers.append(nbrs)
+            frontier = nbrs.reshape(P, -1)
+
+        # Fused unique + remote across all P frontiers: one row-sort,
+        # one first-occurrence/remote mask, one ragged extraction. The
+        # sort runs in int32 when ids fit (half the bandwidth of the
+        # int64 ``np.unique`` the scalar path pays per PE).
+        touched = np.concatenate(
+            [seed_mat] + [nb.reshape(P, -1) for nb in layers], axis=1
+        )                                                        # (P, M)
+        if g.num_nodes <= np.iinfo(np.int32).max:
+            touched = touched.astype(np.int32)
+        sorted_keys = np.sort(touched, axis=1)
+        if self.use_kernels and part_of is not None:
+            is_remote = (
+                part_of[sorted_keys] != np.arange(P, dtype=part_of.dtype)[:, None]
+            )
+            first, remote_mask = self._dedup(sorted_keys, is_remote)
+        else:
+            first, _ = self._dedup(sorted_keys, None)
+            remote_mask = None
+        counts = first.sum(axis=1)
+        bounds = np.cumsum(counts)[:-1]
+        flat_uniq = sorted_keys.ravel()[first.ravel()].astype(np.int64)
+        uniq = np.split(flat_uniq, bounds)
+        remote = None
+        if part_of is not None:
+            if remote_mask is not None:  # kernel path: masks came fused
+                rcounts = remote_mask.sum(axis=1)
+                remote = np.split(
+                    sorted_keys.ravel()[remote_mask.ravel()].astype(np.int64),
+                    np.cumsum(rcounts)[:-1],
+                )
+            else:
+                # Numpy path: filter remoteness post-dedup — the gather
+                # touches only the unique ids, not the full (P, M) block.
+                rows = np.repeat(np.arange(P, dtype=part_of.dtype), counts)
+                rem_flat = part_of[flat_uniq] != rows
+                remote = [
+                    u[m] for u, m in zip(uniq, np.split(rem_flat, bounds))
+                ]
+
+        minibatches = [
+            MiniBatch(
+                seeds=seeds[p],
+                layer_nbrs=[nb[p] for nb in layers],
+                unique_nodes=uniq[p],
+                labels=g.labels[seeds[p]],
+            )
+            for p in range(P)
+        ]
+        return minibatches, remote
+
+    def _sample_ragged(
+        self,
+        seeds: list[np.ndarray],
+        rng: np.random.Generator,
+        part_of: np.ndarray | None,
+    ) -> tuple[list[MiniBatch], list[np.ndarray] | None]:
+        """Unequal per-PE batch sizes: scalar per-PE path (same draws)."""
+        minibatches = [self._scalar.sample(s, rng) for s in seeds]
+        remote = None
+        if part_of is not None:
+            remote = [
+                unique_remote(mb, part_of, p) for p, mb in enumerate(minibatches)
+            ]
+        return minibatches, remote

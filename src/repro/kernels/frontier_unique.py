@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused multi-PE frontier dedup + remote extraction.
+
+The sampling plane (:class:`repro.graph.sampler.SamplerPlane`) row-sorts
+all P trainers' sampled frontiers into one ``(P, M)`` block; what
+remains per minibatch is the dedup/membership pass the legacy path did
+P times with ``np.unique`` + a partition filter: mark each row's
+first occurrences (the sorted-unique elements) and, fused in the same
+pass, the unique elements homed on another partition (the remote fetch
+set), plus the per-PE counts used to split the ragged extraction.
+
+One VMEM pass computes all four outputs — on GPU/TPU this is otherwise
+two elementwise launches and two reductions over a block that, at
+production scale (P trainers x batch x f1 x f2 frontier slots), no
+longer fits L2/VMEM at once.
+
+Inputs are the *sorted* keys; the neighbor-shift operand is built by the
+wrapper (a roll at the jnp level), so the kernel body is purely
+elementwise + reduce and tiles exactly like the scoring kernels.
+
+Grid: (tiles,) over an (8, 128)-aligned 2-D view, one partial count per
+tile reduced back to one count per PE.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+TILE_ROWS = 64  # (64, 128) i32 tile = 32 KiB VMEM per operand
+
+#: Padding key: equal in ``keys`` and ``prev`` so padded lanes are never
+#: "first". Real keys (node ids) are >= 0.
+_PAD_KEY = -2
+
+
+def _frontier_kernel(keys_ref, prev_ref, remote_ref, first_ref, rmask_ref,
+                     ucount_ref, rcount_ref):
+    k = keys_ref[...]
+    first = (k != prev_ref[...]).astype(jnp.int32)
+    rmask = first * remote_ref[...]
+    first_ref[...] = first
+    rmask_ref[...] = rmask
+    ucount_ref[0, 0] = jnp.sum(first)
+    rcount_ref[0, 0] = jnp.sum(rmask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_unique_batch(
+    sorted_keys: jax.Array, is_remote: jax.Array, *, interpret: bool = True
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused unique + remote masks over row-sorted frontiers.
+
+    ``sorted_keys`` is ``(P, M)`` int32, each row ascending, keys >= 0;
+    ``is_remote`` is ``(P, M)`` bool/int32 (``part_of[key] != p`` per
+    row). Returns ``(first_mask (P, M) bool, remote_mask (P, M) bool,
+    unique_count (P,) int32, remote_count (P,) int32)`` where
+    ``first_mask`` selects each row's sorted-unique elements and
+    ``remote_mask = first_mask & is_remote``.
+    """
+    P, M = sorted_keys.shape
+    if M == 0:
+        empty = jnp.zeros((P, 0), dtype=bool)
+        zeros = jnp.zeros((P,), dtype=jnp.int32)
+        return empty, empty, zeros, zeros
+    k = sorted_keys.astype(jnp.int32)
+    prev = jnp.concatenate(
+        [jnp.full((P, 1), -1, dtype=jnp.int32), k[:, :-1]], axis=1
+    )
+    row = TILE_ROWS * LANES
+    pad = (row - M % row) % row
+    k2 = jnp.pad(k, ((0, 0), (0, pad)), constant_values=_PAD_KEY)
+    p2 = jnp.pad(prev, ((0, 0), (0, pad)), constant_values=_PAD_KEY)
+    r2 = jnp.pad(
+        is_remote.astype(jnp.int32), ((0, 0), (0, pad)), constant_values=0
+    )
+    tiles_per_pe = k2.shape[1] // row
+    tiles = P * tiles_per_pe
+    k2 = k2.reshape(tiles * TILE_ROWS, LANES)
+    p2 = p2.reshape(tiles * TILE_ROWS, LANES)
+    r2 = r2.reshape(tiles * TILE_ROWS, LANES)
+
+    block = pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))
+    count = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    first, rmask, ucount, rcount = pl.pallas_call(
+        _frontier_kernel,
+        grid=(tiles,),
+        in_specs=[block, block, block],
+        out_specs=[block, block, count, count],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * TILE_ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((tiles * TILE_ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(k2, p2, r2)
+    first = first.reshape(P, -1)[:, :M].astype(bool)
+    rmask = rmask.reshape(P, -1)[:, :M].astype(bool)
+    ucount = jnp.sum(ucount.reshape(P, tiles_per_pe), axis=1)
+    rcount = jnp.sum(rcount.reshape(P, tiles_per_pe), axis=1)
+    return first, rmask, ucount, rcount

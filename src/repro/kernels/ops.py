@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
 from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
 from .gather_rows import gather_rows_batch as _gather_rows_batch
@@ -28,9 +29,14 @@ __all__ = [
     "score_update",
     "score_update_batch",
     "score_policy_update_batch",
+    "frontier_unique_batch",
     "mla_flash_decode",
     "ref",
 ]
+
+
+def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):
+    return _frontier_unique_batch(sorted_keys, is_remote, interpret=interpret)
 
 
 def gather_rows(table, indices, *, interpret: bool = True):

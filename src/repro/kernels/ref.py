@@ -63,6 +63,25 @@ def gather_rows_batch(tables: jax.Array, indices: jax.Array) -> jax.Array:
     return jnp.take_along_axis(tables, indices[:, :, None], axis=1)
 
 
+def frontier_unique_batch(sorted_keys: jax.Array, is_remote: jax.Array):
+    """Fused frontier dedup oracle: row-sorted keys (P, M) int32 (>= 0)
+    + remote flags -> (first_mask, remote_mask, unique_count,
+    remote_count). Mirrors ``repro.graph.sampler.frontier_dedup``."""
+    P = sorted_keys.shape[0]
+    k = sorted_keys.astype(jnp.int32)
+    prev = jnp.concatenate(
+        [jnp.full((P, 1), -1, dtype=jnp.int32), k[:, :-1]], axis=1
+    )
+    first = k != prev
+    remote = first & (is_remote.astype(jnp.int32) != 0)
+    return (
+        first,
+        remote,
+        jnp.sum(first.astype(jnp.int32), axis=1),
+        jnp.sum(remote.astype(jnp.int32), axis=1),
+    )
+
+
 def score_update_batch(scores: jax.Array, accessed: jax.Array):
     """Multi-PE scoring round: (P, N) in -> ((P, N), (P,)) out."""
     new = jnp.where(

@@ -6,6 +6,9 @@ scenario sweeps (graphs x partitions x policies x controllers) the
 roadmap demands. This package re-expresses the per-trainer control plane
 as batched array operations over *all* PEs at once:
 
+* :class:`SampleStage` — all P trainers' minibatches advanced by one
+  batched :class:`repro.graph.sampler.SamplerPlane` pass (dense
+  ``(P, B)`` fanout expansion + fused unique/remote extraction);
 * :class:`PrefetchEngine` — all per-PE persistent buffers held as dense
   ``(P, C)`` arrays; membership, hit/miss sets, scoring rounds and
   replacement are batched (optionally via the multi-PE Pallas kernels in
@@ -13,18 +16,22 @@ as batched array operations over *all* PEs at once:
 * :class:`DecisionStage` — the async/sync queue protocol as an explicit
   double-buffered request/response stage, so controller inference
   overlaps the modeled T_DDP step;
+* :class:`FetchStage` — the engine's probe / scoring / replacement
+  round plus the §4.5.3 accounting (flat ``TimeModel`` or per-pair
+  :class:`repro.graph.generate.Topology` costs);
 * :func:`run_vectorized` — drop-in replacement for the legacy
   minibatch loop, bit-identical on hits / misses / bytes / decision
   streams (cross-checked by ``tests/test_runtime_parity.py``);
 * :func:`run_sweep` — one-process grid runner over
-  (num_parts, batch_size, fanout, controller) configurations.
+  (graph, num_parts, batch_size, fanout, controller, policy, topology)
+  configurations.
 
 See ``docs/ARCHITECTURE.md`` for the data-flow diagram and the
 exact-vs-modeled contract the engine preserves.
 """
 
 from .engine import EngineStats, PrefetchEngine
-from .stage import DecisionStage
+from .stage import DecisionStage, FetchStage, SampleStage
 from .driver import run_vectorized
 from .sweep import (
     SweepConfig,
@@ -38,7 +45,9 @@ from .sweep import (
 __all__ = [
     "PrefetchEngine",
     "EngineStats",
+    "SampleStage",
     "DecisionStage",
+    "FetchStage",
     "run_vectorized",
     "SweepConfig",
     "default_grid",

@@ -1,26 +1,25 @@
 """Vectorized minibatch loop: the drop-in replacement for the legacy
 per-trainer simulation in :meth:`repro.gnn.train.DistributedTrainer.run`.
 
-Per minibatch the driver runs five batched stages over all P trainer PEs
-(the legacy loop ran all five *per PE*, P times):
+Per minibatch the driver pushes the whole cluster through the explicit
+three-stage pipeline of :mod:`repro.runtime.stage` (the legacy loop ran
+the same dataflow inline, per PE, P times):
 
-1. **sample** — per-PE seed batches + fanout sampling (kept sequential
-   in PE order: the sampler draws from the shared RNG, and preserving
-   the draw order is what keeps minibatches identical to the legacy
-   loop);
-2. **lookup** — one batched membership query over every PE's remote
-   fetch set (:meth:`PrefetchEngine.lookup`);
-3. **decide** — per-PE metrics into the double-buffered
-   :class:`DecisionStage`, which advances the batched
-   :class:`repro.core.controller.DecisionPlane`: heuristic controllers
-   are dense ``(P,)`` masks, adaptive controllers answer through the
-   batched inference pipe (prompts, backend queries and reflection
-   fanned out across PEs, per-PE async/sync latency accounting);
-4. **score + replace** — one batched scoring round under the engine's
-   scoring policy (the ``policy`` sweep axis) and one batched
-   replacement round (:meth:`PrefetchEngine.end_round` /
-   :meth:`PrefetchEngine.replace_round`);
-5. **account** — the §4.5.3 time model evaluated as array ops, plus the
+1. **sample** — :class:`SampleStage` advances all P trainers' fanout
+   expansions in one batched pass over the shared CSR
+   (:class:`repro.graph.sampler.SamplerPlane`: dense ``(P, B)`` seed
+   blocks, ``(P, B, f1)`` / ``(P, B*f1, f2)`` neighbor blocks, fused
+   sort/first-mask unique + remote extraction across all P frontiers);
+2. **decide** — :class:`FetchStage.probe` answers every PE's buffer
+   membership in one batched query, and the probe metrics feed the
+   double-buffered :class:`DecisionStage` over the batched
+   :class:`repro.core.controller.DecisionPlane` (heuristics as dense
+   ``(P,)`` masks, adaptive controllers behind the batched inference
+   pipe with per-PE async/sync latency accounting);
+3. **fetch** — :class:`FetchStage.commit` closes the round: one batched
+   scoring pass under the engine's policy, one batched replacement
+   round, and the §4.5.3 time model (flat ``TimeModel`` constants or
+   per-pair :class:`repro.graph.generate.Topology` costs) — plus the
    (exact) GNN training step.
 
 Every stage preserves the legacy loop's per-PE operation order, so
@@ -35,8 +34,7 @@ import jax
 import numpy as np
 
 from ..core.metrics import Metrics
-from ..graph.sampler import unique_remote
-from .stage import DecisionStage
+from .stage import DecisionStage, FetchStage, SampleStage
 
 
 def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
@@ -50,105 +48,65 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     from ..gnn.sage import sage_accuracy, sage_grads
     from ..gnn.train import RunResult, TrainerLog
 
-    engine = trainer.engine
-    stage = DecisionStage(trainer.controllers)
     P = trainer.parts.num_parts
-    part_of = trainer.parts.part_of
-    feature_dim = trainer.graph.features.shape[1]
-    tm = trainer.tm
-    capacity = engine.capacity.astype(np.float64)
+    sample = SampleStage(
+        trainer.sampler_plane, P, trainer._seed_batch, trainer.parts.part_of
+    )
+    decide = DecisionStage(trainer.controllers)
+    fetch = FetchStage(
+        trainer.engine,
+        decide.uses_buffer,
+        decide.inference_cost,
+        trainer.tm,
+        trainer.graph.features.shape[1],
+        trainer.mode,
+        part_of=trainer.parts.part_of,
+        topology=trainer.topology,
+    )
 
     logs = [TrainerLog() for _ in range(P)]
     epoch_times: list[float] = []
     losses: list[float] = []
-    active = stage.uses_buffer & (engine.capacity > 0)
-    prev_missed = [np.array([], dtype=np.int64) for _ in range(P)]
-    last_replaced = np.zeros(P, dtype=np.int64)
-    have_replaced = False
 
     for epoch in range(trainer.epochs):
         epoch_time = 0.0
         for mb in range(trainer.mb_per_epoch):
-            # -- stage 1: sample (shared-RNG order preserved) ---------- #
-            minibatches = [
-                trainer.sampler.sample(
-                    trainer._seed_batch(p, epoch, mb), trainer.rng
-                )
-                for p in range(P)
-            ]
-            remote = [
-                unique_remote(minibatches[p], part_of, p) for p in range(P)
-            ]
-            n_remote = np.array([len(r) for r in remote], dtype=np.int64)
+            # -- stage 1: batched sampling ----------------------------- #
+            minibatches, remote, n_remote = sample.run(epoch, mb, trainer.rng)
 
-            # -- stage 2: batched buffer lookup ------------------------ #
-            hit_masks, missed = engine.lookup(remote, active)
-            hits = np.array([int(h.sum()) for h in hit_masks], dtype=np.int64)
-            pct_hits = np.where(
-                active,
-                np.where(n_remote > 0, 100.0 * hits / np.maximum(n_remote, 1), 100.0),
-                0.0,
-            )
-            comm = np.array([len(m) for m in missed], dtype=np.int64)
-            occupancy = engine.occupancy()
-
-            # -- stage 3: double-buffered controller decisions --------- #
-            replaced_pct = np.where(
-                have_replaced & (capacity > 0),
-                100.0 * last_replaced / np.maximum(capacity, 1.0),
-                0.0,
-            )
-            stage.submit(
+            # -- stage 2: batched probe + controller decisions --------- #
+            probe = fetch.probe(remote, n_remote)
+            decide.submit(
                 [
                     Metrics(
                         minibatch=mb,
                         total_minibatches=trainer.mb_per_epoch,
                         epoch=epoch,
                         total_epochs=trainer.epochs,
-                        pct_hits=float(pct_hits[p]),
-                        comm_volume=int(comm[p]),
-                        replaced_pct=float(replaced_pct[p]),
-                        buffer_occupancy=float(occupancy[p]),
-                        buffer_capacity=int(engine.capacity[p]),
+                        pct_hits=float(probe.pct_hits[p]),
+                        comm_volume=int(probe.comm[p]),
+                        replaced_pct=float(probe.replaced_pct[p]),
+                        buffer_occupancy=float(probe.occupancy[p]),
+                        buffer_capacity=int(trainer.engine.capacity[p]),
                     )
                     for p in range(P)
                 ]
             )
-            decisions, stalls = stage.collect()
+            decisions, stalls = decide.collect()
 
-            # -- stage 4: batched scoring + replacement ---------------- #
-            engine.end_round(stage.uses_buffer)
-            replaced = engine.replace_round(
-                prev_missed, decisions & stage.uses_buffer
-            )
-            prev_missed = missed
-            last_replaced = replaced
-            have_replaced = True
-            # Replacement traffic is communication (Alg. 1 line 14).
-            total_comm = comm + replaced
+            # -- stage 3: scoring + replacement + accounting ----------- #
+            commit = fetch.commit(decisions, stalls)
 
-            # -- stage 5: time model + exact training ------------------ #
-            t_comm = tm.t_comm_batch(total_comm, feature_dim)
-            if trainer.mode == "sync":
-                t = np.where(
-                    stage.inference_cost > 0,
-                    tm.t_ddp + t_comm + stalls * tm.t_ddp,
-                    np.maximum(tm.t_ddp, t_comm),
-                )
-            else:
-                t = np.maximum(tm.t_ddp, t_comm)
-
-            occupancy_post = engine.occupancy()
             for p in range(P):
-                logs[p].pct_hits.append(float(pct_hits[p]))
-                logs[p].comm_volume.append(int(total_comm[p]))
-                logs[p].comm_missed.append(int(comm[p]))
-                logs[p].occupancy.append(float(occupancy_post[p]))
+                logs[p].pct_hits.append(float(probe.pct_hits[p]))
+                logs[p].comm_volume.append(int(commit.total_comm[p]))
+                logs[p].comm_missed.append(int(probe.comm[p]))
+                logs[p].occupancy.append(float(commit.occupancy[p]))
                 logs[p].unique_remote.append(int(n_remote[p]))
-                logs[p].replaced.append(int(replaced[p]))
+                logs[p].replaced.append(int(commit.replaced[p]))
                 logs[p].decisions.append(bool(decisions[p]))
-                logs[p].step_time.append(float(t[p]))
-            epoch_time += float(t.max())
+                logs[p].step_time.append(float(commit.step_time[p]))
+            epoch_time += float(commit.step_time.max())
 
             if trainer.train_model:
                 grads_acc = None

@@ -103,6 +103,11 @@ class PrefetchEngine:
         # Slots at or past a PE's own capacity are permanent padding.
         self.in_capacity = np.arange(C)[None, :] < self.capacity[:, None]
         self.stats = EngineStats(P)
+        # Nodes admitted by the most recent replace_round (per PE): the
+        # topology cost model prices their fetch RPCs by home partition.
+        self.last_placed: list[np.ndarray] = [
+            np.array([], dtype=np.int64) for _ in range(P)
+        ]
 
     # ------------------------------------------------------------------ #
     # introspection
@@ -257,6 +262,7 @@ class PrefetchEngine:
         """
         P = self.num_pes
         replaced = np.zeros(P, dtype=np.int64)
+        self.last_placed = [np.array([], dtype=np.int64) for _ in range(P)]
         todo = [p for p in range(P) if do_replace[p]]
         if not todo:
             return replaced
@@ -283,6 +289,7 @@ class PrefetchEngine:
                 self.stats.skipped_rounds[p] += 1
                 continue
             self._place(p, slots[:n], cand[:n])
+            self.last_placed[p] = cand[:n]
             self.stats.replaced_total[p] += n
             self.stats.replacement_rounds[p] += 1
             replaced[p] = n

@@ -1,33 +1,39 @@
-"""Explicit double-buffered controller-decision stage.
+"""The vectorized runtime's explicit three-stage pipeline.
 
-The paper's prefetcher talks to the inference model (LLM agent or
-classifier) through request/response queues (§4.5, Fig. 11); the legacy
-loop buries that hand-off inside ``Controller.should_replace`` calls
-scattered through the per-trainer loop. Here the hand-off is an explicit
-two-slot stage:
+One minibatch of the whole cluster flows through three stage objects —
+**sample → decide → fetch** — each advancing all P trainer PEs in one
+batched pass (see ``docs/ARCHITECTURE.md`` §3):
 
-* ``submit(metrics)`` fills the **request buffer** with this minibatch's
-  per-PE observations — the point where, on real hardware, the trainer
-  kicks off T_DDP and the daemon inference threads start chewing;
-* ``collect()`` drains the **response buffer**: one
-  :class:`repro.core.controller.DecisionPlane` step advances every PE's
-  controller at once — heuristics as dense ``(P,)`` masks, adaptive
-  controllers through the batched inference pipe
-  (:class:`repro.core.queues.BatchedInferencePipe`, which models the
-  daemon-thread latency / staleness per PE) — and the per-PE decisions
-  and sync-mode stall ticks come back as arrays.
+* :class:`SampleStage` — per-PE seed blocks through the batched
+  :class:`repro.graph.sampler.SamplerPlane`: dense ``(P, B)`` fanout
+  expansion on the shared CSR plus the fused unique/remote extraction
+  across all P frontiers;
+* :class:`DecisionStage` — the paper's request/response queue hand-off
+  (§4.5, Fig. 11) as a double-buffered two-slot stage over the batched
+  :class:`repro.core.controller.DecisionPlane`;
+* :class:`FetchStage` — the data movement the decisions steer: one
+  batched buffer probe (`PrefetchEngine.lookup`), then the scoring /
+  replacement round and the §4.5.3 communication accounting (flat
+  `TimeModel` or per-pair :class:`repro.graph.generate.Topology`).
 
-Because the latency modelling lives in the (batched) inference pipe, the
-stage is a pure re-plumbing: decision streams are bit-identical to the
-legacy loop (``tests/test_runtime_parity.py``), but the overlap of
-controller inference with the modeled T_DDP step is now a first-class
-structure the driver can reason about. See ``docs/ARCHITECTURE.md``.
+Each stage preserves the legacy per-trainer loop's operation order, so
+hit/miss/byte counts, decision streams and modeled step times stay
+bit-identical (``tests/test_runtime_parity.py``); what changes is that
+the overlap structure — sampling feeding the probe, inference
+overlapping T_DDP, replacement trailing the decision — is first-class
+and the Python hot path no longer widens with P.
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
+import numpy as np
+
 from ..core.controller import Controller, DecisionPlane
 from ..core.metrics import Metrics
+from ..graph.generate import Topology
+from ..graph.sampler import MiniBatch, SamplerPlane
 
 
 class DecisionStage:
@@ -56,3 +62,185 @@ class DecisionStage:
             raise RuntimeError("request buffer empty: submit() metrics first")
         pending, self._request = self._request, None
         return self.plane.step(pending)
+
+
+class SampleStage:
+    """Batched sampling stage: per-PE seed blocks → minibatches + fetch sets.
+
+    Wraps the :class:`repro.graph.sampler.SamplerPlane`: one call per
+    minibatch advances every trainer's fanout expansion and the fused
+    unique/remote extraction. ``seed_fn(p, epoch, mb)`` supplies PE p's
+    seed block (seed permutations are derived per (epoch, p), so blocks
+    are order-independent; only the fanout draws consume the shared RNG,
+    in the legacy PE-major order the plane preserves).
+    """
+
+    def __init__(self, plane: SamplerPlane, num_pes: int, seed_fn, part_of):
+        self.plane = plane
+        self.num_pes = num_pes
+        self.seed_fn = seed_fn
+        self.part_of = part_of
+
+    def run(
+        self, epoch: int, mb: int, rng: np.random.Generator
+    ) -> tuple[list[MiniBatch], list[np.ndarray], np.ndarray]:
+        """Returns ``(minibatches, remote, n_remote)`` for all P PEs."""
+        seed_blocks = [self.seed_fn(p, epoch, mb) for p in range(self.num_pes)]
+        minibatches, remote = self.plane.sample_all(
+            seed_blocks, rng, part_of=self.part_of
+        )
+        n_remote = np.array([len(r) for r in remote], dtype=np.int64)
+        return minibatches, remote, n_remote
+
+
+@dataclass
+class ProbeResult:
+    """Per-PE outputs of the buffer probe (stage-3 metrics inputs)."""
+
+    hit_masks: list[np.ndarray]
+    missed: list[np.ndarray]
+    hits: np.ndarray          # (P,) int64
+    pct_hits: np.ndarray      # (P,) float64
+    comm: np.ndarray          # (P,) int64 — miss fetches only
+    occupancy: np.ndarray     # (P,) float64, pre-replacement
+    replaced_pct: np.ndarray  # (P,) float64, previous round's churn
+
+
+@dataclass
+class CommitResult:
+    """Per-PE outputs of the scoring/replacement/accounting half."""
+
+    replaced: np.ndarray      # (P,) int64
+    total_comm: np.ndarray    # (P,) int64 — misses + replacement traffic
+    step_time: np.ndarray     # (P,) float64, §4.5.3 model
+    occupancy: np.ndarray     # (P,) float64, post-replacement
+
+
+class FetchStage:
+    """Two-phase batched fetch plane: probe → (decisions) → commit.
+
+    ``probe(remote, n_remote)`` answers every PE's buffer membership
+    query in one batched pass and buffers the miss sets; after the
+    decision stage, ``commit(decisions, stalls)`` closes the round —
+    batched scoring, batched replacement (admitting the *previous*
+    minibatch's misses; Algorithm 1 queues the next minibatch before the
+    decision lands), and the communication/step-time accounting.
+
+    With ``topology`` set, fetch RPCs are priced per (trainer, home
+    partition) pair via :meth:`Topology.t_comm_pairs` — replacement
+    admissions included (``engine.last_placed``) — instead of the flat
+    ``TimeModel.t_comm`` constants.
+    """
+
+    def __init__(
+        self,
+        engine,
+        uses_buffer: np.ndarray,
+        inference_cost: np.ndarray,
+        time_model,
+        feature_dim: int,
+        mode: str,
+        part_of: np.ndarray | None = None,
+        topology: Topology | None = None,
+    ):
+        if topology is not None and part_of is None:
+            raise ValueError("topology accounting needs part_of")
+        P = engine.num_pes
+        self.engine = engine
+        self.uses_buffer = uses_buffer
+        self.inference_cost = inference_cost
+        self.tm = time_model
+        self.feature_dim = feature_dim
+        self.mode = mode
+        self.part_of = part_of
+        self.topology = topology
+        self.active = uses_buffer & (engine.capacity > 0)
+        self._capacity = engine.capacity.astype(np.float64)
+        self._prev_missed: list[np.ndarray] = [
+            np.array([], dtype=np.int64) for _ in range(P)
+        ]
+        self._missed: list[np.ndarray] | None = None
+        self._last_replaced = np.zeros(P, dtype=np.int64)
+        self._have_replaced = False
+
+    def probe(self, remote: list[np.ndarray], n_remote: np.ndarray) -> ProbeResult:
+        """Batched buffer lookup; buffers the miss sets for commit()."""
+        if self._missed is not None:
+            raise RuntimeError("probe already pending: commit() the round first")
+        hit_masks, missed = self.engine.lookup(remote, self.active)
+        hits = np.array([int(h.sum()) for h in hit_masks], dtype=np.int64)
+        pct_hits = np.where(
+            self.active,
+            np.where(n_remote > 0, 100.0 * hits / np.maximum(n_remote, 1), 100.0),
+            0.0,
+        )
+        comm = np.array([len(m) for m in missed], dtype=np.int64)
+        replaced_pct = np.where(
+            self._have_replaced & (self._capacity > 0),
+            100.0 * self._last_replaced / np.maximum(self._capacity, 1.0),
+            0.0,
+        )
+        self._missed = missed
+        return ProbeResult(
+            hit_masks=hit_masks,
+            missed=missed,
+            hits=hits,
+            pct_hits=pct_hits,
+            comm=comm,
+            occupancy=self.engine.occupancy(),
+            replaced_pct=replaced_pct,
+        )
+
+    def commit(self, decisions: np.ndarray, stalls: np.ndarray) -> CommitResult:
+        """Scoring + replacement round + §4.5.3 accounting."""
+        if self._missed is None:
+            raise RuntimeError("nothing probed: probe() the round first")
+        engine = self.engine
+        engine.end_round(self.uses_buffer)
+        replaced = engine.replace_round(
+            self._prev_missed, decisions & self.uses_buffer
+        )
+        missed, self._missed = self._missed, None
+        self._prev_missed = missed
+        self._last_replaced = replaced
+        self._have_replaced = True
+        comm = np.array([len(m) for m in missed], dtype=np.int64)
+        # Replacement traffic is communication (Alg. 1 line 14).
+        total_comm = comm + replaced
+        t_comm = self._t_comm(missed, total_comm)
+        if self.mode == "sync":
+            t = np.where(
+                self.inference_cost > 0,
+                self.tm.t_ddp + t_comm + stalls * self.tm.t_ddp,
+                np.maximum(self.tm.t_ddp, t_comm),
+            )
+        else:
+            t = np.maximum(self.tm.t_ddp, t_comm)
+        return CommitResult(
+            replaced=replaced,
+            total_comm=total_comm,
+            step_time=t,
+            occupancy=engine.occupancy(),
+        )
+
+    def _t_comm(
+        self, missed: list[np.ndarray], total_comm: np.ndarray
+    ) -> np.ndarray:
+        if self.topology is None:
+            return self.tm.t_comm_batch(total_comm, self.feature_dim)
+        # One flattened bincount builds the whole (P, P) fetch matrix:
+        # this round's miss fetches plus replacement admissions, keyed
+        # by trainer row * P + home partition.
+        P = self.engine.num_pes
+        placed = self.engine.last_placed
+        lengths = [len(missed[p]) + len(placed[p]) for p in range(P)]
+        rows = np.repeat(np.arange(P, dtype=np.int64), lengths)
+        nodes = np.concatenate(
+            [x for p in range(P) for x in (missed[p], placed[p])]
+        )
+        pairs = np.bincount(
+            rows * P + self.part_of[nodes], minlength=P * P
+        ).reshape(P, P)
+        return self.topology.t_comm_pairs(
+            pairs, self.feature_dim, self.tm.feature_bytes
+        )

@@ -1,11 +1,12 @@
 """One-process scenario sweeps over the vectorized runtime.
 
 The roadmap's north star is breadth: graphs x partitions x policies x
-controllers. The legacy loop made each cell expensive; the vectorized
-:class:`PrefetchEngine` and the batched decision plane make a grid of
-``(num_parts, batch_size, fanout, controller, policy)`` configurations
-cheap enough to run in a single process —
-``python -m benchmarks.run --sweep``.
+controllers x topologies. The legacy loop made each cell expensive; the
+vectorized :class:`PrefetchEngine`, the batched decision plane and the
+batched sampling plane make a grid of ``(graph, num_parts, batch_size,
+fanout, controller, policy, topology)`` configurations cheap enough to
+run in a single process — ``python -m benchmarks.run --sweep``
+(``--graphs`` / ``--topology`` open the scenario axes).
 
 Partitioned graphs are cached per ``(dataset, num_parts, scale, seed)``
 within a sweep, so widening the grid along batch size / fanout /
@@ -42,14 +43,18 @@ class SweepConfig:
     epochs: int = 5
     backend: str = "gemma3-4b"
     policy: str = "rudder"
+    topology: str = "none"  # per-pair comm pricing; "none" = flat model
     seed: int = 0
 
     def label(self) -> str:
         fan = "x".join(str(f) for f in self.fanouts)
-        return (
+        label = (
             f"{self.dataset}/p{self.num_parts}/b{self.batch_size}"
             f"/f{fan}/{self.variant}/{self.policy}"
         )
+        if self.topology != "none":
+            label += f"/t-{self.topology}"
+        return label
 
 
 #: Config fields that identify a cell (label is a display summary only —
@@ -66,6 +71,7 @@ CONFIG_KEYS = (
     "epochs",
     "backend",
     "policy",
+    "topology",
     "seed",
 )
 
@@ -85,11 +91,15 @@ def default_grid(
     fanouts: tuple[tuple[int, ...], ...] = ((5, 10), (10, 25)),
     variants: tuple[str, ...] = ("fixed", "massivegnn"),
     policies: tuple[str, ...] = ("rudder",),
+    topologies: tuple[str, ...] = ("none",),
     epochs: int = 5,
 ) -> list[SweepConfig]:
     """The stock grid: 16 cells (2 parts x 2 batch x 2 fanout x 2
     controller) by default; the ``policies`` axis multiplies it by the
-    scoring/eviction policies of :mod:`repro.core.scoring`."""
+    scoring/eviction policies of :mod:`repro.core.scoring`, the
+    ``datasets`` axis by the graph-scenario families of
+    :mod:`repro.graph.generate` (``--graphs``) and the ``topologies``
+    axis by the cluster cost models (``--topology``)."""
     return [
         SweepConfig(
             dataset=d,
@@ -98,6 +108,7 @@ def default_grid(
             batch_size=b,
             fanouts=f,
             policy=pol,
+            topology=t,
             epochs=epochs,
         )
         for d in datasets
@@ -106,6 +117,7 @@ def default_grid(
         for f in fanouts
         for v in variants
         for pol in policies
+        for t in topologies
     ]
 
 
@@ -151,6 +163,7 @@ def run_sweep(
             mode=cfg.mode,
             interval=cfg.interval,
             policy=cfg.policy,
+            topology=None if cfg.topology == "none" else cfg.topology,
             train_model=False,
             seed=cfg.seed,
         )
@@ -227,6 +240,7 @@ def sweep_artifact(rows: list[dict]) -> dict:
             "datasets": sorted({r["dataset"] for r in rows}),
             "variants": sorted({r["variant"] for r in rows}),
             "policies": sorted({r["policy"] for r in rows}),
+            "topologies": sorted({r.get("topology", "none") for r in rows}),
         },
         "rows": rows,
     }

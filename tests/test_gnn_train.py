@@ -103,6 +103,34 @@ class TestClassifierController:
         )
 
 
+class TestEmptyRunAggregates:
+    def test_zero_epoch_run_returns_nan_not_zero(self, parts):
+        """Aggregates over an empty run are NaN (a silent 0.0 reads as a
+        perfect run in sweep artifacts; NaN trips the CI gate)."""
+        r = DistributedTrainer(
+            parts, variant="fixed", epochs=0, batch_size=16, train_model=False
+        ).run()
+        assert np.isnan(r.mean_epoch_time)
+        assert np.isnan(r.steady_pct_hits)
+        assert np.isnan(r.comm_p99())
+        assert np.isnan(r.mean_pct_hits)
+        assert np.isnan(r.comm_per_minibatch)
+
+    def test_zero_epoch_legacy_matches(self, parts):
+        r = DistributedTrainer(
+            parts, variant="fixed", epochs=0, batch_size=16,
+            train_model=False, runtime="legacy",
+        ).run()
+        assert np.isnan(r.mean_epoch_time)
+        assert np.isnan(r.steady_pct_hits)
+        assert np.isnan(r.comm_p99())
+
+    def test_nonempty_run_aggregates_stay_finite(self, results):
+        for r in results.values():
+            assert np.isfinite(r.mean_epoch_time)
+            assert np.isfinite(r.comm_p99())
+
+
 class TestTrainingIntegrity:
     def test_model_learns_and_accuracy_unaffected_by_variant(self):
         """Rudder does not alter sampling or training math (§4.5):

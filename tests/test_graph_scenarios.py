@@ -1,0 +1,194 @@
+"""Graph-scenario axis + substrate edge cases (hypothesis-free).
+
+Covers the PR-3 additions: CSR invariants asserted at Graph
+construction (replacing the sampler's silent bounds clamp), the
+community-free RMAT / power-law generator families, partitioner edge
+cases (num_parts=1, num_parts > num_nodes, community determinism), and
+the per-pair Topology cost model.
+"""
+
+import numpy as np
+import pytest
+
+from repro.graph import (
+    Topology,
+    generate,
+    make_topology,
+    partition_graph,
+)
+from repro.graph.generate import Graph
+from repro.graph.partition import _partition_by_communities
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate("arxiv", seed=0, scale=0.1)
+
+
+class TestScenarioFamilies:
+    @pytest.mark.parametrize("name", ["rmat", "powerlaw"])
+    def test_families_generate_valid_graphs(self, name):
+        """Community-free families: valid symmetric CSR, heavy degree
+        tail, no ground-truth blocks (exercises the BFS partitioner)."""
+        g = generate(name, seed=0, scale=0.1)
+        assert g.communities is None
+        assert g.indptr[-1] == len(g.indices)
+        deg = g.degree()
+        assert deg.max() > 8 * max(deg.mean(), 1)
+        parts = partition_graph(g, 4)
+        assert sum(len(n) for n in parts.local_nodes) == g.num_nodes
+
+    @pytest.mark.parametrize("name", ["rmat", "powerlaw"])
+    def test_families_deterministic(self, name):
+        a = generate(name, seed=2, scale=0.05)
+        b = generate(name, seed=2, scale=0.05)
+        np.testing.assert_array_equal(a.indices, b.indices)
+        np.testing.assert_array_equal(a.train_nodes, b.train_nodes)
+
+
+class TestCSRInvariants:
+    def _fields(self, n=4):
+        return dict(
+            name="t",
+            features=np.zeros((n, 2), dtype=np.float32),
+            labels=np.zeros(n, dtype=np.int32),
+            train_nodes=np.arange(n, dtype=np.int64),
+            num_classes=2,
+        )
+
+    def test_valid_csr_constructs(self):
+        g = Graph(
+            indptr=np.array([0, 1, 2, 2, 2], dtype=np.int64),
+            indices=np.array([1, 0], dtype=np.int64),
+            **self._fields(),
+        )
+        assert g.num_nodes == 4
+
+    def test_truncated_indices_raise(self):
+        """The bug the old np.minimum clamp hid: indptr promising more
+        edges than indices holds must fail at construction, not
+        silently redirect out-of-range draws to the global last edge."""
+        with pytest.raises(ValueError, match="len\\(indices\\)"):
+            Graph(
+                indptr=np.array([0, 2, 3, 3, 3], dtype=np.int64),
+                indices=np.array([1, 0], dtype=np.int64),
+                **self._fields(),
+            )
+
+    def test_non_monotone_indptr_raises(self):
+        with pytest.raises(ValueError, match="non-decreasing"):
+            Graph(
+                indptr=np.array([0, 2, 1, 2, 2], dtype=np.int64),
+                indices=np.array([1, 0], dtype=np.int64),
+                **self._fields(),
+            )
+
+    def test_out_of_range_indices_raise(self):
+        with pytest.raises(ValueError, match="lie in"):
+            Graph(
+                indptr=np.array([0, 1, 2, 2, 2], dtype=np.int64),
+                indices=np.array([1, 9], dtype=np.int64),
+                **self._fields(),
+            )
+
+    def test_indptr_must_start_at_zero(self):
+        with pytest.raises(ValueError, match="start at 0"):
+            Graph(
+                indptr=np.array([1, 1, 2, 2, 3], dtype=np.int64),
+                indices=np.array([0, 1], dtype=np.int64),
+                **self._fields(),
+            )
+
+
+class TestPartitionEdgeCases:
+    def test_single_partition(self, graph):
+        parts = partition_graph(graph, 1)
+        assert parts.edge_cut == 0
+        assert len(parts.local_nodes) == 1
+        assert len(parts.local_nodes[0]) == graph.num_nodes
+        np.testing.assert_array_equal(parts.part_of, 0)
+
+    @pytest.mark.parametrize("method", ["community", "bfs"])
+    def test_more_parts_than_nodes(self, method):
+        """num_parts > num_nodes must terminate: every node assigned
+        exactly once, surplus partitions validly empty."""
+        g = generate("rmat" if method == "bfs" else "arxiv", seed=1, scale=0.01)
+        num_parts = g.num_nodes + 10
+        parts = partition_graph(g, num_parts, method=method)
+        assert parts.num_parts == num_parts
+        sizes = np.array([len(n) for n in parts.local_nodes])
+        assert sizes.sum() == g.num_nodes
+        assert (sizes == 0).sum() >= 10
+        all_nodes = np.concatenate(parts.local_nodes)
+        assert len(np.unique(all_nodes)) == g.num_nodes
+        # Per-partition accessors stay usable on empty partitions.
+        empty = int(np.nonzero(sizes == 0)[0][0])
+        assert parts.part_edges(empty) == 0
+        assert len(parts.local_train_nodes(empty)) == 0
+
+    def test_community_partition_deterministic_across_seeds(self, graph):
+        """_partition_by_communities is seed-independent: the packing is
+        a pure function of the graph's ground-truth blocks."""
+        a = partition_graph(graph, 4, seed=0, method="community")
+        b = partition_graph(graph, 4, seed=1234, method="community")
+        np.testing.assert_array_equal(a.part_of, b.part_of)
+        assert a.edge_cut == b.edge_cut
+        direct = _partition_by_communities(graph, 4)
+        np.testing.assert_array_equal(a.part_of, direct.part_of)
+
+
+class TestTopology:
+    def test_known_families(self):
+        for name in ("flat", "rack", "torus"):
+            t = make_topology(name, 4)
+            assert t.num_parts == 4
+            assert t.alpha.shape == t.bw.shape == (4, 4)
+
+    def test_unknown_family_raises(self):
+        with pytest.raises(KeyError, match="unknown topology"):
+            make_topology("hypercube", 4)
+
+    def test_flat_prices_every_pair_equally(self):
+        t = make_topology("flat", 3, link_bw=1e6, alpha=1e-3)
+        f = np.array([[0, 100, 100], [100, 0, 0], [0, 0, 0]])
+        out = t.t_comm_pairs(f, feature_dim=10, feature_bytes=4)
+        expected = 1e-3 + 100 * 10 * 4 / 1e6
+        assert out[0] == pytest.approx(expected)   # max over equal peers
+        assert out[1] == pytest.approx(expected)
+        assert out[2] == 0.0                       # nothing fetched
+
+    def test_rack_cross_traffic_costs_more(self):
+        t = make_topology("rack", 4)
+        intra = np.zeros((4, 4))
+        intra[0, 1] = 50   # same rack {0,1}
+        cross = np.zeros((4, 4))
+        cross[0, 2] = 50   # rack {0,1} -> rack {2,3}
+        assert t.t_comm_pairs(cross, 10)[0] > t.t_comm_pairs(intra, 10)[0]
+
+    def test_diagonal_is_free(self):
+        t = make_topology("flat", 3)
+        f = np.zeros((3, 3))
+        f[1, 1] = 1000  # a trainer never pays for its own partition
+        assert t.t_comm_pairs(f, 10)[1] == 0.0
+
+    def test_row_matches_pairs(self):
+        t = make_topology("torus", 5)
+        rng = np.random.default_rng(0)
+        f = rng.integers(0, 200, (5, 5))
+        full = t.t_comm_pairs(f, 64)
+        for p in range(5):
+            assert t.t_comm_row(p, f[p], 64) == full[p]
+
+    def test_sum_reduce_serializes(self):
+        ones = np.ones((3, 3))
+        t_max = Topology("t", 1e-3 * ones, 1e6 * ones, reduce="max")
+        t_sum = Topology("t", 1e-3 * ones, 1e6 * ones, reduce="sum")
+        f = np.array([[0, 10, 10], [0, 0, 0], [0, 0, 0]])
+        assert t_sum.t_comm_pairs(f, 10)[0] == pytest.approx(
+            2 * t_max.t_comm_pairs(f, 10)[0]
+        )
+
+    def test_bad_reduce_raises(self):
+        ones = np.ones((2, 2))
+        with pytest.raises(ValueError, match="reduce"):
+            Topology("t", ones, ones, reduce="mean")

@@ -58,6 +58,29 @@ class TestRuntimeParity:
             assert a.decisions == b.decisions
         assert legacy.epoch_times == vector.epoch_times
 
+    @pytest.mark.parametrize("topology", ["flat", "rack", "torus"])
+    def test_topology_parity(self, parts, topology):
+        """Per-pair comm pricing must agree bit-for-bit across runtimes
+        (misses and replacement admissions priced by home partition)."""
+        legacy = _run(parts, "fixed", "legacy", topology=topology, epochs=3)
+        vector = _run(parts, "fixed", "vectorized", topology=topology, epochs=3)
+        for a, b in zip(legacy.logs, vector.logs):
+            assert a.step_time == b.step_time
+            assert a.comm_volume == b.comm_volume
+        assert legacy.epoch_times == vector.epoch_times
+
+    def test_topology_changes_only_modeled_time(self, parts):
+        """Topology prices the same exact byte counts: hits/misses/bytes
+        are identical to the flat model, only step times differ."""
+        flat = _run(parts, "fixed", "vectorized", epochs=3)
+        rack = _run(parts, "fixed", "vectorized", topology="rack", epochs=3)
+        for a, b in zip(flat.logs, rack.logs):
+            assert a.pct_hits == b.pct_hits
+            assert a.comm_volume == b.comm_volume
+            assert a.decisions == b.decisions
+            assert a.step_time != b.step_time
+        assert flat.accuracy == rack.accuracy
+
     def test_training_math_parity(self):
         g = generate("arxiv", seed=1, scale=0.08)
         parts2 = partition_graph(g, 2)
@@ -184,3 +207,21 @@ class TestSweep:
         assert by_variant["fixed"]["mean_pct_hits"] > 0.0
         assert by_variant["massivegnn"]["mean_pct_hits"] > 0.0
         assert all("mean_epoch_time" in r for r in rows)
+
+    def test_graph_and_topology_axes(self):
+        grid = default_grid(
+            datasets=("products", "rmat"), num_parts=(2,), batch_sizes=(16,),
+            fanouts=((5, 10),), variants=("fixed",),
+            topologies=("none", "rack"), epochs=2,
+        )
+        assert len(grid) == 4
+        rows = run_sweep(grid)
+        assert {r["dataset"] for r in rows} == {"products", "rmat"}
+        by_key = {(r["dataset"], r["topology"]): r for r in rows}
+        for d in ("products", "rmat"):
+            none_row = by_key[(d, "none")]
+            rack_row = by_key[(d, "rack")]
+            # Same exact byte counts, different pricing.
+            assert none_row["comm_per_minibatch"] == rack_row["comm_per_minibatch"]
+            assert none_row["mean_epoch_time"] != rack_row["mean_epoch_time"]
+            assert rack_row["label"].endswith("/t-rack")

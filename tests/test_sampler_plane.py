@@ -1,0 +1,207 @@
+"""SamplerPlane vs scalar NeighborSampler: bit-identical cross-check.
+
+The acceptance contract of the batched sampling plane: for any graph
+family and fanout configuration, one ``sample_all`` call reproduces P
+sequential ``NeighborSampler.sample`` calls on the shared RNG exactly —
+same seeds, same per-layer neighbor blocks, same unique nodes, same
+remote fetch sets — and the fused dedup agrees across its numpy,
+Pallas-kernel and jnp-oracle implementations.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import (
+    NeighborSampler,
+    SamplerPlane,
+    generate,
+    partition_graph,
+)
+from repro.graph.sampler import frontier_dedup, unique_remote
+
+
+def _scalar_reference(graph, parts, blocks, fanouts, seed):
+    rng = np.random.default_rng(seed)
+    sampler = NeighborSampler(graph, fanouts)
+    mbs = [sampler.sample(b, rng) for b in blocks]
+    remote = [unique_remote(mb, parts.part_of, p) for p, mb in enumerate(mbs)]
+    return mbs, remote
+
+
+def _assert_identical(mbs_a, rem_a, mbs_b, rem_b):
+    for p, (a, b) in enumerate(zip(mbs_a, mbs_b)):
+        np.testing.assert_array_equal(a.seeds, b.seeds, err_msg=f"PE {p} seeds")
+        assert len(a.layer_nbrs) == len(b.layer_nbrs)
+        for layer, (la, lb) in enumerate(zip(a.layer_nbrs, b.layer_nbrs)):
+            np.testing.assert_array_equal(
+                la, lb, err_msg=f"PE {p} layer {layer}"
+            )
+        np.testing.assert_array_equal(
+            a.unique_nodes, b.unique_nodes, err_msg=f"PE {p} unique"
+        )
+        assert b.unique_nodes.dtype == np.int64
+        np.testing.assert_array_equal(a.labels, b.labels)
+    for p, (ra, rb) in enumerate(zip(rem_a, rem_b)):
+        np.testing.assert_array_equal(ra, rb, err_msg=f"PE {p} remote")
+        assert rb.dtype == np.int64
+
+
+class TestPlaneParity:
+    @pytest.mark.parametrize("dataset", ["products", "rmat", "powerlaw"])
+    def test_bit_identical_across_families(self, dataset):
+        g = generate(dataset, seed=0, scale=0.1)
+        parts = partition_graph(g, 4)
+        blocks = [parts.local_train_nodes(p)[:12] for p in range(4)]
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+        mbs_s, rem_s = _scalar_reference(g, parts, blocks, (4, 6), seed=3)
+        plane = SamplerPlane(g, (4, 6))
+        mbs_v, rem_v = plane.sample_all(
+            blocks, np.random.default_rng(3), part_of=parts.part_of
+        )
+        _assert_identical(mbs_s, rem_s, mbs_v, rem_v)
+
+    def test_paper_fanouts(self):
+        g = generate("products", seed=0, scale=0.12)
+        parts = partition_graph(g, 4)
+        blocks = [parts.local_train_nodes(p)[:16] for p in range(4)]
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+        mbs_s, rem_s = _scalar_reference(g, parts, blocks, (10, 25), seed=7)
+        mbs_v, rem_v = SamplerPlane(g, (10, 25)).sample_all(
+            blocks, np.random.default_rng(7), part_of=parts.part_of
+        )
+        _assert_identical(mbs_s, rem_s, mbs_v, rem_v)
+
+    def test_three_layer_fanouts(self):
+        g = generate("arxiv", seed=1, scale=0.1)
+        parts = partition_graph(g, 2)
+        blocks = [parts.local_train_nodes(p)[:8] for p in range(2)]
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+        mbs_s, rem_s = _scalar_reference(g, parts, blocks, (3, 4, 5), seed=11)
+        mbs_v, rem_v = SamplerPlane(g, (3, 4, 5)).sample_all(
+            blocks, np.random.default_rng(11), part_of=parts.part_of
+        )
+        _assert_identical(mbs_s, rem_s, mbs_v, rem_v)
+
+    def test_ragged_blocks_fall_back_bit_identically(self):
+        g = generate("arxiv", seed=0, scale=0.1)
+        parts = partition_graph(g, 3)
+        blocks = [parts.local_train_nodes(p)[: 4 + 3 * p] for p in range(3)]
+        assert len({len(b) for b in blocks}) > 1  # genuinely ragged
+        mbs_s, rem_s = _scalar_reference(g, parts, blocks, (4, 6), seed=5)
+        mbs_v, rem_v = SamplerPlane(g, (4, 6)).sample_all(
+            blocks, np.random.default_rng(5), part_of=parts.part_of
+        )
+        _assert_identical(mbs_s, rem_s, mbs_v, rem_v)
+
+    def test_without_part_of_returns_no_remote(self):
+        g = generate("arxiv", seed=0, scale=0.1)
+        blocks = [g.train_nodes[:8], g.train_nodes[8:16]]
+        mbs, remote = SamplerPlane(g, (4, 6)).sample_all(
+            blocks, np.random.default_rng(0)
+        )
+        assert remote is None
+        assert len(mbs) == 2
+
+    def test_rng_stream_advances_identically(self):
+        """After sample_all the shared generator must sit at the same
+        stream position as after P scalar samples (the end-of-run
+        accuracy eval draws from the same generator)."""
+        g = generate("arxiv", seed=0, scale=0.1)
+        blocks = [g.train_nodes[:8], g.train_nodes[8:16]]
+        r1, r2 = np.random.default_rng(9), np.random.default_rng(9)
+        s = NeighborSampler(g, (4, 6))
+        for b in blocks:
+            s.sample(b, r1)
+        SamplerPlane(g, (4, 6)).sample_all(blocks, r2)
+        assert r1.bit_generator.state == r2.bit_generator.state
+
+
+class TestFrontierKernel:
+    def test_kernel_matches_numpy_and_ref(self):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(0)
+        keys = np.sort(rng.integers(0, 400, (4, 900)), axis=1).astype(np.int32)
+        is_rem = rng.random((4, 900)) < 0.4
+        f_np, r_np = frontier_dedup(keys, is_rem)
+        for fn in (ops.frontier_unique_batch, ops.ref.frontier_unique_batch):
+            first, remote, uc, rc = fn(jnp.asarray(keys), jnp.asarray(is_rem))
+            np.testing.assert_array_equal(np.asarray(first), f_np)
+            np.testing.assert_array_equal(np.asarray(remote), r_np)
+            np.testing.assert_array_equal(np.asarray(uc), f_np.sum(axis=1))
+            np.testing.assert_array_equal(np.asarray(rc), r_np.sum(axis=1))
+
+    def test_kernel_handles_duplicate_runs_and_single_row(self):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        keys = np.array([[0, 0, 0, 1, 5, 5, 9, 9]], dtype=np.int32)
+        rem = np.array([[1, 1, 1, 0, 1, 0, 0, 0]], dtype=np.int32)
+        first, remote, uc, rc = ops.frontier_unique_batch(
+            jnp.asarray(keys), jnp.asarray(rem)
+        )
+        assert np.asarray(first).tolist() == [
+            [True, False, False, True, True, False, True, False]
+        ]
+        assert np.asarray(remote).tolist() == [
+            [True, False, False, False, True, False, False, False]
+        ]
+        assert int(uc[0]) == 4 and int(rc[0]) == 2
+
+    def test_plane_kernel_path_bit_identical(self):
+        g = generate("products", seed=0, scale=0.1)
+        parts = partition_graph(g, 4)
+        blocks = [parts.local_train_nodes(p)[:12] for p in range(4)]
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+        a, rem_a = SamplerPlane(g, (4, 6)).sample_all(
+            blocks, np.random.default_rng(2), part_of=parts.part_of
+        )
+        b, rem_b = SamplerPlane(g, (4, 6), use_kernels=True).sample_all(
+            blocks, np.random.default_rng(2), part_of=parts.part_of
+        )
+        _assert_identical(a, rem_a, b, rem_b)
+
+
+class TestPlaneSpeed:
+    def test_plane_not_slower_than_scalar_loop_at_p8(self):
+        """The tentpole perf claim, conservatively: at P=8 (the sweep
+        regime) the batched plane must at least match the per-trainer
+        loop; kernels_micro reports the actual speedup."""
+        P, B = 8, 16
+        g = generate("products", seed=0, scale=0.2)
+        parts = partition_graph(g, P)
+        blocks = [parts.local_train_nodes(p)[:B] for p in range(P)]
+        blocks = [b[: min(len(x) for x in blocks)] for b in blocks]
+        scalar = NeighborSampler(g, (10, 25))
+        plane = SamplerPlane(g, (10, 25))
+
+        def run_scalar():
+            rng = np.random.default_rng(0)
+            mbs = [scalar.sample(b, rng) for b in blocks]
+            [unique_remote(mb, parts.part_of, p) for p, mb in enumerate(mbs)]
+
+        def run_plane():
+            rng = np.random.default_rng(0)
+            plane.sample_all(blocks, rng, part_of=parts.part_of)
+
+        def best_of(fn, iters=7):
+            best = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        t_scalar = best_of(run_scalar)
+        t_plane = best_of(run_plane)
+        # Gross-regression check only: locally the plane is ~1.2-1.6x
+        # faster, but CI boxes are noisy — the precise speedup number is
+        # measured and uploaded by the kernels-micro CI leg instead.
+        assert t_plane < t_scalar * 1.5, (
+            f"plane {t_plane * 1e6:.0f}us vs scalar {t_scalar * 1e6:.0f}us"
+        )
