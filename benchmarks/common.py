@@ -53,6 +53,9 @@ def run_variant(
     interval: int = 32,
     warm_start: bool = True,
     seed: int = 0,
+    time_engine: str = "closed_form",
+    stragglers: str | None = None,
+    congestion: str | None = None,
 ):
     parts = parts_for(dataset, num_parts, seed)
     deciders = None
@@ -72,6 +75,9 @@ def run_variant(
         warm_start=warm_start,
         train_model=False,
         seed=seed,
+        time_engine=time_engine,
+        stragglers=stragglers,
+        congestion=congestion,
     )
     result = tr.run()
     return tr, result

@@ -23,6 +23,16 @@ label (e.g. ``--sweep p4 massivegnn``). Sweep options:
 * ``--topology=none,rack,torus,...`` — the cluster cost-model axis
   (``repro.graph.generate.TOPOLOGIES``; ``none`` is the flat §4.5.3
   model, ``--topology=all`` adds every named topology);
+* ``--time-engine=closed_form,event`` — the wall-clock model axis
+  (``repro.sim``; ``event`` is the discrete-event cluster simulator,
+  bit-identical to ``closed_form`` until a scenario is injected);
+* ``--stragglers=none,one-slow,...`` / ``--congestion=none,hot-home,...``
+  — scenario presets for the event engine (per-PE compute multipliers
+  and seeded jitter; max–min fair home-egress sharing and transient
+  degradation). Scenario cells are generated for event-engine cells
+  only — the closed form cannot express them;
+* ``--quick`` — shrink the grid (1 partition count x 1 batch x 1
+  fanout, 2 epochs) for the CI smoke legs;
 * ``--json=PATH`` — additionally write the deterministic sweep artifact
   (sorted cells, sorted keys) consumed by the CI ``bench-smoke`` job;
 * ``--gate`` — exit non-zero if any cell is NaN/empty/non-finite (the
@@ -68,19 +78,29 @@ def _parse_axis(arg: str, options, all_value: tuple) -> tuple | None:
 
 def run_sweep_cli(selected: list[str]) -> int:
     from repro.core.scoring import POLICIES
-    from repro.graph import DATASET_PRESETS, TOPOLOGIES
+    from repro.graph import (
+        CONGESTION_PRESETS,
+        DATASET_PRESETS,
+        STRAGGLER_PRESETS,
+        TOPOLOGIES,
+    )
     from repro.runtime import (
         default_grid,
         run_sweep,
         validate_rows,
         write_sweep_json,
     )
+    from repro.sim import TIME_ENGINES
 
     policies = ("rudder",)
     datasets = ("products",)
     topologies = ("none",)
+    time_engines = ("closed_form",)
+    stragglers = ("none",)
+    congestions = ("none",)
     json_path = None
     gate = False
+    quick = False
     terms = []
     for arg in selected:
         if arg.startswith("--policies="):
@@ -98,14 +118,53 @@ def run_sweep_cli(selected: list[str]) -> int:
             topologies = _parse_axis(arg, options, options)
             if topologies is None:
                 return 2
+        elif arg.startswith("--time-engine="):
+            time_engines = _parse_axis(arg, TIME_ENGINES, tuple(TIME_ENGINES))
+            if time_engines is None:
+                return 2
+        elif arg.startswith("--stragglers="):
+            options = ("none",) + tuple(STRAGGLER_PRESETS)
+            stragglers = _parse_axis(arg, options, options)
+            if stragglers is None:
+                return 2
+        elif arg.startswith("--congestion="):
+            options = ("none",) + tuple(CONGESTION_PRESETS)
+            congestions = _parse_axis(arg, options, options)
+            if congestions is None:
+                return 2
+        elif arg == "--quick":
+            quick = True
         elif arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
         elif arg == "--gate":
             gate = True
         else:
             terms.append(arg)
+    wants_scenarios = stragglers != ("none",) or congestions != ("none",)
+    if wants_scenarios and "event" not in time_engines:
+        print(
+            "--stragglers/--congestion need --time-engine=event (or =all)",
+            file=sys.stderr,
+        )
+        return 2
+    shrink = (
+        dict(
+            num_parts=(4,),
+            batch_sizes=(16,),
+            fanouts=((5, 10),),
+            epochs=2,
+        )
+        if quick
+        else {}
+    )
     grid = default_grid(
-        datasets=datasets, policies=policies, topologies=topologies
+        datasets=datasets,
+        policies=policies,
+        topologies=topologies,
+        time_engines=time_engines,
+        stragglers=stragglers,
+        congestions=congestions,
+        **shrink,
     )
     if terms:
         # AND semantics: every term must match, so extra terms narrow.
@@ -116,14 +175,16 @@ def run_sweep_cli(selected: list[str]) -> int:
     t0 = time.time()
     rows = run_sweep(grid, verbose=True)
     print(
-        "label,dataset,variant,policy,topology,num_parts,batch_size,fanouts,"
+        "label,dataset,variant,policy,topology,time_engine,stragglers,"
+        "congestion,num_parts,batch_size,fanouts,"
         "steady_pct_hits,comm_per_minibatch,mean_epoch_time"
     )
     for r in rows:
         fan = "x".join(str(f) for f in r["fanouts"])
         print(
             f"{r['label']},{r['dataset']},{r['variant']},{r['policy']},"
-            f"{r['topology']},{r['num_parts']},{r['batch_size']},{fan},"
+            f"{r['topology']},{r['time_engine']},{r['stragglers']},"
+            f"{r['congestion']},{r['num_parts']},{r['batch_size']},{fan},"
             f"{r['steady_pct_hits']},{r['comm_per_minibatch']},"
             f"{r['mean_epoch_time']}"
         )

@@ -1,0 +1,109 @@
+"""Straggler / congestion scenarios under the event time engine.
+
+Prices the *same* exact fetch streams two ways — the closed-form §4.5.3
+model and the discrete-event cluster simulator (``repro.sim``) under a
+dynamic scenario: trainer 0 computing 3x slower and home partition 0's
+egress link oversubscribed (``one-slow`` + ``hot-home`` presets). The
+byte/hit/decision streams are bit-identical across the two pricings;
+only the wall-clock model moves.
+
+Two things the closed form cannot show:
+
+* the *divergence* — barrier skew from one slow trainer plus max–min
+  egress sharing inflate real epoch time ~3x past the closed-form
+  estimate, variant by variant;
+* the *async-hiding win* — the closed form hides agent inference in
+  async mode **by assumption** (an unconditional ``max``); the event
+  engine hides it **by measurement**. Pricing the inference daemon in
+  wall-clock (``SimConfig(t_agent=...)``) shows a 5x-slower agent
+  costs async *nothing* under this scenario — the contention-inflated
+  steps cover it — while sync pays for every tick of it; and shows
+  exactly where the hiding breaks (a 20x agent outruns the steps).
+
+    PYTHONPATH=src python examples/straggler_scenarios.py
+"""
+
+import numpy as np
+
+from repro.core import LLMAgent, make_backend
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.sim import SimConfig
+
+SCENARIO = dict(stragglers="one-slow", congestion="hot-home")
+
+
+def run(parts, variant, mode="async", **kw):
+    deciders = None
+    if variant == "rudder":
+        deciders = [LLMAgent(make_backend("gemma3-4b"), None) for _ in range(4)]
+    result = DistributedTrainer(
+        parts,
+        variant=variant,
+        deciders=deciders,
+        batch_size=16,
+        epochs=5,
+        mode=mode,
+        train_model=False,
+        **kw,
+    ).run()
+    return float(np.mean(result.epoch_times)), result
+
+
+def main():
+    g = generate("products", seed=0, scale=0.12)
+    parts = partition_graph(g, 4)
+
+    print("one slow trainer (3x) + congested home partition (4x egress):\n")
+    print(
+        f"{'variant':14s} {'closed-form':>12s} {'event+scenario':>15s} "
+        f"{'divergence':>11s}"
+    )
+    for variant in ("distdgl", "fixed", "rudder"):
+        closed, base = run(parts, variant)
+        event, scen = run(parts, variant, time_engine="event", **SCENARIO)
+        # Same exact streams, different pricing.
+        assert [log.comm_volume for log in base.logs] == [
+            log.comm_volume for log in scen.logs
+        ]
+        print(
+            f"{variant:14s} {closed:11.3f}s {event:14.3f}s "
+            f"{event / closed:10.2f}x"
+        )
+
+    print(
+        "\nasync-hiding win (rudder under the scenario, agent daemon "
+        "priced in wall-clock):"
+    )
+    print(f"{'t_agent/tick':>12s} {'async':>9s} {'sync':>9s} {'sync pays':>10s}")
+    hidden, base_async = None, None
+    for t_agent in (None, 0.25, 1.0):
+        sim = SimConfig(t_agent=t_agent) if t_agent is not None else None
+        t_async, _ = run(
+            parts, "rudder", mode="async", time_engine="event", sim=sim,
+            **SCENARIO,
+        )
+        t_sync, _ = run(
+            parts, "rudder", mode="sync", time_engine="event", sim=sim,
+            **SCENARIO,
+        )
+        tag = "closed-form pricing" if t_agent is None else f"{t_agent:.2f}s"
+        print(
+            f"{tag:>19s} {t_async:8.3f}s {t_sync:8.3f}s "
+            f"{t_sync / t_async:9.2f}x"
+        )
+        if t_agent is None:
+            base_async = t_async
+        elif hidden is None:
+            hidden = t_async
+    print(
+        f"\na 5x-slower agent (0.25s/tick) costs async "
+        f"{hidden / base_async:.3f}x — fully hidden beneath the "
+        "contention-inflated steps, while sync pays every tick; at "
+        "1.0s/tick the daemon outruns the steps and even async pays. "
+        "The closed form asserts the hiding; the event engine measures it."
+    )
+
+
+if __name__ == "__main__":
+    main()

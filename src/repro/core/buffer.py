@@ -43,7 +43,10 @@ class BufferStats:
 
     @property
     def hit_rate(self) -> float:
-        return self.hits / self.lookups if self.lookups else 0.0
+        # NaN-on-empty, matching the vectorized twin
+        # (runtime.engine.EngineStats.hit_rate) and the RunResult
+        # aggregates: no lookups means "no data", not "all misses".
+        return self.hits / self.lookups if self.lookups else float("nan")
 
 
 class PersistentBuffer:

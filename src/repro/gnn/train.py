@@ -27,6 +27,15 @@ the flat constants are replaced by the per-pair cluster cost model of
 :class:`repro.graph.generate.Topology` (fetch RPCs priced by home
 partition); the exact byte counts are unchanged.
 
+With ``time_engine="event"`` the same exact streams are priced by the
+discrete-event cluster simulator of :mod:`repro.sim` instead: per-trainer
+and per-link timelines with max–min fair home-egress contention
+(``congestion=...``), per-PE straggler/jitter compute multipliers
+(``stragglers=...``), a wall-clock agent-daemon lane and
+prefetcher-thread replacement overlap (``sim=SimConfig(...)``). With no
+scenario injected the event engine reproduces the closed form
+bit-identically (the parity contract of ``tests/test_runtime_parity.py``).
+
 Two interchangeable execution paths produce the run (see
 ``docs/ARCHITECTURE.md``):
 
@@ -50,7 +59,15 @@ from ..core import scoring
 from ..core.buffer import PersistentBuffer
 from ..core.controller import Controller, make_controller
 from ..core.metrics import GraphMeta, Metrics
-from ..graph.generate import Graph, Topology, make_topology
+from ..graph.generate import (
+    CongestionModel,
+    Graph,
+    StragglerModel,
+    Topology,
+    make_congestion,
+    make_stragglers,
+    make_topology,
+)
 from ..graph.partition import Partitioned
 from ..graph.sampler import MiniBatch, NeighborSampler, SamplerPlane, unique_remote
 from ..runtime.engine import PrefetchEngine
@@ -94,6 +111,39 @@ class TimeModel:
             0.0,
         )
 
+    def step_time_batch(
+        self,
+        t_comm: np.ndarray,
+        stalls: np.ndarray,
+        inference_cost: np.ndarray,
+        mode: str,
+        t_ddp: np.ndarray | float | None = None,
+        t_stall: float | None = None,
+    ) -> np.ndarray:
+        """The §4.5.3 async/sync step-time composition, all PEs at once.
+
+        This is the **single** statement of the paper's formulas —
+        ``async = max(T_DDP, T_COMM)`` (inference hidden) and
+        ``sync = T_DDP + T_COMM + stalls * T_A/C`` for PEs whose
+        controller pays inference (non-adaptive PEs overlap comm with
+        compute in either mode). The legacy loop, the vectorized
+        :class:`repro.runtime.stage.FetchStage` and the event engine's
+        parity path all price steps through here, so the three cannot
+        drift. ``t_ddp`` admits per-PE compute durations (the event
+        engine's straggler axis) and ``t_stall`` re-prices one stall
+        tick (its wall-clock agent axis); both default to the closed
+        form's flat ``t_ddp`` constant.
+        """
+        t_ddp = self.t_ddp if t_ddp is None else t_ddp
+        t_stall = self.t_ddp if t_stall is None else t_stall
+        if mode == "sync":
+            return np.where(
+                np.asarray(inference_cost) > 0,
+                t_ddp + t_comm + np.asarray(stalls) * t_stall,
+                np.maximum(t_ddp, t_comm),
+            )
+        return np.maximum(t_ddp, t_comm)
+
 
 @dataclass
 class TrainerLog:
@@ -116,6 +166,9 @@ class RunResult:
     logs: list[TrainerLog]
     controllers: list[Controller]
     graph_meta: list[GraphMeta]
+    #: Event timeline of the run (``repro.sim.EventLog``) when priced by
+    #: the event engine; None under the closed-form model.
+    sim_events: object | None = None
 
     # ---- aggregates used across the benchmark suite ------------------- #
     # Aggregates over an *empty* run (zero epochs / zero logged
@@ -177,10 +230,19 @@ class DistributedTrainer:
         runtime: str = "vectorized",
         policy: str | scoring.ScoringPolicy = "rudder",
         topology: str | Topology | None = None,
+        time_engine: str = "closed_form",
+        stragglers: str | StragglerModel | None = None,
+        congestion: str | CongestionModel | None = None,
+        sim=None,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
                 f"runtime must be 'vectorized' or 'legacy', got {runtime!r}"
+            )
+        if time_engine not in ("closed_form", "event"):
+            raise ValueError(
+                "time_engine must be 'closed_form' or 'event', "
+                f"got {time_engine!r}"
             )
         self.parts = parts
         self.graph: Graph = parts.graph
@@ -206,6 +268,36 @@ class DistributedTrainer:
                 f"partitioned {parts.num_parts}-way"
             )
         self.topology = topology
+        # Wall-clock model: closed-form §4.5.3 (default) or the event
+        # simulator of repro.sim. Scenario presets resolve here so the
+        # sweep can pass plain strings; a fresh engine is built per run
+        # (make_time_engine) so event logs never leak across runs.
+        if isinstance(stragglers, str):
+            stragglers = (
+                None
+                if stragglers == "none"
+                else make_stragglers(stragglers, parts.num_parts, seed=seed)
+            )
+        if isinstance(congestion, str):
+            congestion = (
+                None
+                if congestion == "none"
+                else make_congestion(
+                    congestion, parts.num_parts, link_bw=self.tm.link_bw
+                )
+            )
+        if time_engine == "closed_form" and (
+            stragglers is not None or congestion is not None
+        ):
+            raise ValueError(
+                "stragglers/congestion scenarios require time_engine='event' "
+                "(the closed-form model cannot express them)"
+            )
+        self.time_engine = time_engine
+        self.stragglers = stragglers
+        self.congestion = congestion
+        self.sim = sim
+        self.last_time_engine = None
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanouts)
         # Batched twin of the per-PE sampler: all P trainers' minibatches
@@ -333,6 +425,35 @@ class DistributedTrainer:
         return x_seed, x_n1, x_n2
 
     # ------------------------------------------------------------------ #
+    def make_time_engine(self):
+        """Build a fresh per-run wall-clock engine (``repro.sim``).
+
+        Both runtimes call this at the top of a run; the returned engine
+        also stays reachable as ``self.last_time_engine`` so callers can
+        inspect the event timeline after ``run()``.
+        """
+        from .. import sim
+
+        engine = sim.make_time_engine(
+            self.time_engine,
+            tm=self.tm,
+            mode=self.mode,
+            inference_cost=np.array(
+                [c.inference_cost for c in self.controllers],
+                dtype=np.float64,
+            ),
+            feature_dim=self.graph.features.shape[1],
+            num_pes=self.parts.num_parts,
+            topology=self.topology,
+            stragglers=self.stragglers,
+            congestion=self.congestion,
+            config=self.sim,
+            total_steps=self.epochs * self.mb_per_epoch,
+        )
+        self.last_time_engine = engine
+        return engine
+
+    # ------------------------------------------------------------------ #
     def run(self) -> RunResult:
         """Execute the experiment (vectorized runtime by default)."""
         if self.runtime == "vectorized":
@@ -347,11 +468,13 @@ class DistributedTrainer:
         Kept as the semantic oracle for the vectorized runtime
         (``tests/test_runtime_parity.py``); benchmarks use :meth:`run`.
         """
+        from ..sim import build_step_comm
+
         P = self.parts.num_parts
         logs = [TrainerLog() for _ in range(P)]
         epoch_times: list[float] = []
         losses: list[float] = []
-        feature_dim = self.graph.features.shape[1]
+        time_engine = self.make_time_engine()
 
         # Pipeline staleness: ReplaceandFetch overlaps with training, so a
         # replacement round admits the miss set of the *previous*
@@ -359,13 +482,16 @@ class DistributedTrainer:
         # decision lands). Frequent replacement therefore keeps admitting
         # one-round-old tail nodes — churn the adaptive controller avoids.
         prev_missed = [np.array([], dtype=np.int64) for _ in range(P)]
+        empty = np.array([], dtype=np.int64)
 
         for epoch in range(self.epochs):
             epoch_time = 0.0
             for mb in range(self.mb_per_epoch):
                 grads_acc = None
                 loss_acc = 0.0
-                step_times = []
+                missed_sets: list[np.ndarray] = []
+                placed_sets: list[np.ndarray] = []
+                stall_ticks: list[float] = []
                 for p in range(P):
                     ctrl = self.controllers[p]
                     buf = self.buffers[p]
@@ -423,29 +549,16 @@ class DistributedTrainer:
                     logs[p].replaced.append(replaced)
                     logs[p].decisions.append(bool(replace))
 
-                    # §4.5.3 time model (per-pair costs when a cluster
-                    # topology is configured, flat constants otherwise).
-                    if self.topology is not None:
-                        placed = (
-                            buf.last_placed
-                            if replace and ctrl.uses_buffer
-                            else np.array([], dtype=np.int64)
-                        )
-                        fetched = np.bincount(
-                            self.parts.part_of[np.concatenate([missed, placed])],
-                            minlength=P,
-                        )
-                        t_comm = self.topology.t_comm_row(
-                            p, fetched, feature_dim, self.tm.feature_bytes
-                        )
-                    else:
-                        t_comm = self.tm.t_comm(comm, feature_dim)
-                    if self.mode == "sync" and ctrl.inference_cost:
-                        t = self.tm.t_ddp + t_comm + ctrl.step_stall() * self.tm.t_ddp
-                    else:
-                        t = max(self.tm.t_ddp, t_comm)
-                    logs[p].step_time.append(t)
-                    step_times.append(t)
+                    # Exact per-PE communication artifacts for the time
+                    # engine (priced after the PE loop, whole cluster at
+                    # once — link contention couples the PEs).
+                    missed_sets.append(missed)
+                    placed_sets.append(
+                        buf.last_placed
+                        if replace and ctrl.uses_buffer
+                        else empty
+                    )
+                    stall_ticks.append(ctrl.step_stall())
 
                     if self.train_model:
                         x_seed, x_n1, x_n2 = self._features_of(minibatch)
@@ -461,8 +574,22 @@ class DistributedTrainer:
                             )
                         )
 
-                # Gradient sync across trainers (bulk-synchronous step).
-                epoch_time += max(step_times)
+                # Wall-clock pricing of the exact streams (§4.5.3 closed
+                # form or the event simulator), then the gradient sync
+                # across trainers (bulk-synchronous step barrier).
+                step_times = time_engine.step(
+                    build_step_comm(
+                        missed_sets,
+                        placed_sets,
+                        self.parts.part_of,
+                        P,
+                        time_engine.needs_pairs,
+                    ),
+                    np.asarray(stall_ticks, dtype=np.float64),
+                )
+                for p in range(P):
+                    logs[p].step_time.append(float(step_times[p]))
+                epoch_time += float(step_times.max())
                 if self.train_model and grads_acc is not None:
                     grads_mean = jax.tree_util.tree_map(
                         lambda g: g / P, grads_acc
@@ -490,6 +617,7 @@ class DistributedTrainer:
             logs=logs,
             controllers=self.controllers,
             graph_meta=self.graph_meta,
+            sim_events=time_engine.events,
         )
 
 

@@ -372,6 +372,146 @@ class Topology:
 TOPOLOGIES = ("flat", "rack", "torus")
 
 
+# --------------------------------------------------------------------- #
+# Dynamic-condition scenario models (event time engine inputs)
+# --------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class StragglerModel:
+    """Per-PE compute perturbation for the event time engine.
+
+    ``compute_mult[p]`` scales trainer p's per-minibatch compute time
+    (T_DDP); ``jitter`` adds a seeded lognormal multiplicative
+    perturbation per (PE, step) on top. The closed-form §4.5.3 model has
+    no per-PE compute axis at all, so any non-trivial straggler model
+    requires ``time_engine="event"`` — the all-reduce barrier then turns
+    one slow trainer into cluster-wide skew, which is exactly the regime
+    the paper's adaptive control targets.
+    """
+
+    name: str
+    compute_mult: np.ndarray     # (P,) per-PE base compute multipliers
+    jitter: float = 0.0          # lognormal sigma per (PE, step); 0 = none
+    seed: int = 0
+
+    def __post_init__(self):
+        if np.any(np.asarray(self.compute_mult) <= 0):
+            raise ValueError("compute multipliers must be > 0")
+        if self.jitter < 0:
+            raise ValueError("jitter sigma must be >= 0")
+
+    @property
+    def num_parts(self) -> int:
+        return len(self.compute_mult)
+
+
+@dataclass(frozen=True)
+class CongestionModel:
+    """Home-partition egress contention for the event time engine.
+
+    Each partition serves feature-fetch RPCs through one egress link of
+    capacity ``egress_bw[q]`` bytes/s, max–min fairly shared by every
+    trainer pulling from it concurrently (the closed-form model prices
+    each trainer's fetches independently, as if every home partition had
+    infinite egress). ``window`` optionally degrades ``window_parts`` by
+    ``window_factor`` during a fraction-of-run interval — a transient
+    link brown-out.
+    """
+
+    name: str
+    egress_bw: np.ndarray                    # (P,) bytes/s per home partition
+    window: tuple[float, float] | None = None  # (start_frac, end_frac) of run
+    window_factor: float = 1.0               # egress divided by this in window
+    window_parts: np.ndarray | None = None   # partitions hit by the window
+
+    def __post_init__(self):
+        if np.any(np.asarray(self.egress_bw) <= 0):
+            raise ValueError("egress bandwidths must be > 0")
+        if self.window is not None:
+            lo, hi = self.window
+            if not (0.0 <= lo < hi <= 1.0):
+                raise ValueError("window must satisfy 0 <= start < end <= 1")
+        if self.window_factor < 1.0:
+            raise ValueError("window_factor must be >= 1")
+
+    @property
+    def num_parts(self) -> int:
+        return len(self.egress_bw)
+
+    def egress_at(self, step: int, total_steps: int) -> np.ndarray:
+        """Effective per-partition egress capacity at ``step``."""
+        bw = np.asarray(self.egress_bw, dtype=np.float64).copy()
+        if self.window is not None and total_steps > 0:
+            frac = step / total_steps
+            lo, hi = self.window
+            if lo <= frac < hi:
+                parts = (
+                    self.window_parts
+                    if self.window_parts is not None
+                    else np.arange(len(bw))
+                )
+                bw[parts] = bw[parts] / self.window_factor
+        return bw
+
+
+#: Named scenario presets for the ``--stragglers`` / ``--congestion``
+#: sweep axes (``"none"`` on the CLI maps to no model at all).
+STRAGGLER_PRESETS = ("one-slow", "two-slow", "jitter")
+CONGESTION_PRESETS = ("egress-share", "hot-home", "transient")
+
+
+def make_stragglers(name: str, num_parts: int, seed: int = 0) -> StragglerModel:
+    """Build a named straggler preset.
+
+    * ``one-slow`` — trainer 0 computes 3x slower (a throttled host);
+    * ``two-slow`` — trainers 0 and 1 at 2x (a slow rack half);
+    * ``jitter``   — all trainers nominal with lognormal sigma=0.25
+      per-step compute jitter (OS noise), drawn from ``seed``.
+    """
+    P = int(num_parts)
+    mult = np.ones(P, dtype=np.float64)
+    if name == "one-slow":
+        mult[0] = 3.0
+        return StragglerModel("one-slow", mult, seed=seed)
+    if name == "two-slow":
+        mult[: min(2, P)] = 2.0
+        return StragglerModel("two-slow", mult, seed=seed)
+    if name == "jitter":
+        return StragglerModel("jitter", mult, jitter=0.25, seed=seed)
+    raise KeyError(f"unknown straggler preset {name!r}; options: {STRAGGLER_PRESETS}")
+
+
+def make_congestion(
+    name: str, num_parts: int, link_bw: float = 1e6
+) -> CongestionModel:
+    """Build a named congestion preset (egress capacities in bytes/s).
+
+    * ``egress-share`` — every home partition serves all pullers through
+      one ``link_bw`` egress link (pure max–min sharing, no degradation);
+    * ``hot-home``     — egress sharing plus partition 0's link degraded
+      4x for the whole run (an oversubscribed home);
+    * ``transient``    — egress sharing plus partition 0 degraded 8x
+      during the middle third of the run (a link brown-out).
+    """
+    P = int(num_parts)
+    bw = np.full(P, float(link_bw), dtype=np.float64)
+    if name == "egress-share":
+        return CongestionModel("egress-share", bw)
+    if name == "hot-home":
+        bw[0] = link_bw / 4.0
+        return CongestionModel("hot-home", bw)
+    if name == "transient":
+        return CongestionModel(
+            "transient",
+            bw,
+            window=(1.0 / 3.0, 2.0 / 3.0),
+            window_factor=8.0,
+            window_parts=np.array([0]),
+        )
+    raise KeyError(
+        f"unknown congestion preset {name!r}; options: {CONGESTION_PRESETS}"
+    )
+
+
 def make_topology(
     name: str,
     num_parts: int,

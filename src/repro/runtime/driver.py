@@ -18,9 +18,10 @@ the same dataflow inline, per PE, P times):
    pipe with per-PE async/sync latency accounting);
 3. **fetch** — :class:`FetchStage.commit` closes the round: one batched
    scoring pass under the engine's policy, one batched replacement
-   round, and the §4.5.3 time model (flat ``TimeModel`` constants or
-   per-pair :class:`repro.graph.generate.Topology` costs) — plus the
-   (exact) GNN training step.
+   round, and the run's wall-clock time engine (:mod:`repro.sim` —
+   closed-form §4.5.3 constants / per-pair
+   :class:`repro.graph.generate.Topology` costs, or the discrete-event
+   cluster simulator) — plus the (exact) GNN training step.
 
 Every stage preserves the legacy loop's per-PE operation order, so
 hit/miss/byte counts, decision streams and modeled step times are
@@ -53,15 +54,15 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         trainer.sampler_plane, P, trainer._seed_batch, trainer.parts.part_of
     )
     decide = DecisionStage(trainer.controllers)
+    time_engine = trainer.make_time_engine()
     fetch = FetchStage(
         trainer.engine,
         decide.uses_buffer,
         decide.inference_cost,
-        trainer.tm,
+        time_engine,
         trainer.graph.features.shape[1],
         trainer.mode,
         part_of=trainer.parts.part_of,
-        topology=trainer.topology,
     )
 
     logs = [TrainerLog() for _ in range(P)]
@@ -155,4 +156,5 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         logs=logs,
         controllers=trainer.controllers,
         graph_meta=trainer.graph_meta,
+        sim_events=time_engine.events,
     )

@@ -52,7 +52,12 @@ class EngineStats:
                 setattr(self, name, np.zeros(self.num_pes, dtype=np.int64))
 
     def hit_rate(self) -> np.ndarray:
-        return np.where(self.lookups > 0, self.hits / np.maximum(self.lookups, 1), 0.0)
+        # NaN (not 0.0) for PEs that never looked anything up — the
+        # NaN-on-empty policy of RunResult's aggregates: a silent zero
+        # reads as "all misses", NaN trips the sweep gate.
+        return np.where(
+            self.lookups > 0, self.hits / np.maximum(self.lookups, 1), np.nan
+        )
 
 
 class PrefetchEngine:

@@ -13,8 +13,10 @@ batched pass (see ``docs/ARCHITECTURE.md`` §3):
   :class:`repro.core.controller.DecisionPlane`;
 * :class:`FetchStage` — the data movement the decisions steer: one
   batched buffer probe (`PrefetchEngine.lookup`), then the scoring /
-  replacement round and the §4.5.3 communication accounting (flat
-  `TimeModel` or per-pair :class:`repro.graph.generate.Topology`).
+  replacement round and the wall-clock accounting via the run's
+  time engine (:mod:`repro.sim`: closed-form §4.5.3 — flat `TimeModel`
+  constants or per-pair :class:`repro.graph.generate.Topology` — or the
+  discrete-event cluster simulator).
 
 Each stage preserves the legacy per-trainer loop's operation order, so
 hit/miss/byte counts, decision streams and modeled step times stay
@@ -32,8 +34,8 @@ import numpy as np
 
 from ..core.controller import Controller, DecisionPlane
 from ..core.metrics import Metrics
-from ..graph.generate import Topology
 from ..graph.sampler import MiniBatch, SamplerPlane
+from ..sim import build_step_comm
 
 
 class DecisionStage:
@@ -126,10 +128,12 @@ class FetchStage:
     minibatch's misses; Algorithm 1 queues the next minibatch before the
     decision lands), and the communication/step-time accounting.
 
-    With ``topology`` set, fetch RPCs are priced per (trainer, home
-    partition) pair via :meth:`Topology.t_comm_pairs` — replacement
-    admissions included (``engine.last_placed``) — instead of the flat
-    ``TimeModel.t_comm`` constants.
+    Wall-clock pricing is delegated to the run's ``time_engine``
+    (:mod:`repro.sim`): the closed-form §4.5.3 model (flat constants or
+    per-pair :class:`Topology` costs) or the discrete-event cluster
+    simulator. The stage hands it the exact miss/replacement node sets
+    (``engine.last_placed``) split by home partition when the engine
+    asks (``needs_pairs``).
     """
 
     def __init__(
@@ -137,23 +141,21 @@ class FetchStage:
         engine,
         uses_buffer: np.ndarray,
         inference_cost: np.ndarray,
-        time_model,
+        time_engine,
         feature_dim: int,
         mode: str,
         part_of: np.ndarray | None = None,
-        topology: Topology | None = None,
     ):
-        if topology is not None and part_of is None:
-            raise ValueError("topology accounting needs part_of")
+        if time_engine.needs_pairs and part_of is None:
+            raise ValueError("per-home comm pricing needs part_of")
         P = engine.num_pes
         self.engine = engine
         self.uses_buffer = uses_buffer
         self.inference_cost = inference_cost
-        self.tm = time_model
+        self.time_engine = time_engine
         self.feature_dim = feature_dim
         self.mode = mode
         self.part_of = part_of
-        self.topology = topology
         self.active = uses_buffer & (engine.capacity > 0)
         self._capacity = engine.capacity.astype(np.float64)
         self._prev_missed: list[np.ndarray] = [
@@ -192,7 +194,7 @@ class FetchStage:
         )
 
     def commit(self, decisions: np.ndarray, stalls: np.ndarray) -> CommitResult:
-        """Scoring + replacement round + §4.5.3 accounting."""
+        """Scoring + replacement round + wall-clock accounting."""
         if self._missed is None:
             raise RuntimeError("nothing probed: probe() the round first")
         engine = self.engine
@@ -207,40 +209,19 @@ class FetchStage:
         comm = np.array([len(m) for m in missed], dtype=np.int64)
         # Replacement traffic is communication (Alg. 1 line 14).
         total_comm = comm + replaced
-        t_comm = self._t_comm(missed, total_comm)
-        if self.mode == "sync":
-            t = np.where(
-                self.inference_cost > 0,
-                self.tm.t_ddp + t_comm + stalls * self.tm.t_ddp,
-                np.maximum(self.tm.t_ddp, t_comm),
-            )
-        else:
-            t = np.maximum(self.tm.t_ddp, t_comm)
+        t = self.time_engine.step(
+            build_step_comm(
+                missed,
+                engine.last_placed,
+                self.part_of,
+                engine.num_pes,
+                self.time_engine.needs_pairs,
+            ),
+            stalls,
+        )
         return CommitResult(
             replaced=replaced,
             total_comm=total_comm,
             step_time=t,
             occupancy=engine.occupancy(),
-        )
-
-    def _t_comm(
-        self, missed: list[np.ndarray], total_comm: np.ndarray
-    ) -> np.ndarray:
-        if self.topology is None:
-            return self.tm.t_comm_batch(total_comm, self.feature_dim)
-        # One flattened bincount builds the whole (P, P) fetch matrix:
-        # this round's miss fetches plus replacement admissions, keyed
-        # by trainer row * P + home partition.
-        P = self.engine.num_pes
-        placed = self.engine.last_placed
-        lengths = [len(missed[p]) + len(placed[p]) for p in range(P)]
-        rows = np.repeat(np.arange(P, dtype=np.int64), lengths)
-        nodes = np.concatenate(
-            [x for p in range(P) for x in (missed[p], placed[p])]
-        )
-        pairs = np.bincount(
-            rows * P + self.part_of[nodes], minlength=P * P
-        ).reshape(P, P)
-        return self.topology.t_comm_pairs(
-            pairs, self.feature_dim, self.tm.feature_bytes
         )

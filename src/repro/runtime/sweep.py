@@ -4,9 +4,12 @@ The roadmap's north star is breadth: graphs x partitions x policies x
 controllers x topologies. The legacy loop made each cell expensive; the
 vectorized :class:`PrefetchEngine`, the batched decision plane and the
 batched sampling plane make a grid of ``(graph, num_parts, batch_size,
-fanout, controller, policy, topology)`` configurations cheap enough to
-run in a single process — ``python -m benchmarks.run --sweep``
-(``--graphs`` / ``--topology`` open the scenario axes).
+fanout, controller, policy, topology, time_engine, stragglers,
+congestion)`` configurations cheap enough to run in a single process —
+``python -m benchmarks.run --sweep`` (``--graphs`` / ``--topology`` /
+``--time-engine`` / ``--stragglers`` / ``--congestion`` open the
+scenario axes; the last three select the simulation plane of
+:mod:`repro.sim`).
 
 Partitioned graphs are cached per ``(dataset, num_parts, scale, seed)``
 within a sweep, so widening the grid along batch size / fanout /
@@ -44,6 +47,9 @@ class SweepConfig:
     backend: str = "gemma3-4b"
     policy: str = "rudder"
     topology: str = "none"  # per-pair comm pricing; "none" = flat model
+    time_engine: str = "closed_form"  # wall-clock model (repro.sim)
+    stragglers: str = "none"   # straggler preset (event engine only)
+    congestion: str = "none"   # congestion preset (event engine only)
     seed: int = 0
 
     def label(self) -> str:
@@ -54,6 +60,12 @@ class SweepConfig:
         )
         if self.topology != "none":
             label += f"/t-{self.topology}"
+        if self.time_engine != "closed_form":
+            label += f"/e-{self.time_engine}"
+        if self.stragglers != "none":
+            label += f"/s-{self.stragglers}"
+        if self.congestion != "none":
+            label += f"/c-{self.congestion}"
         return label
 
 
@@ -72,6 +84,9 @@ CONFIG_KEYS = (
     "backend",
     "policy",
     "topology",
+    "time_engine",
+    "stragglers",
+    "congestion",
     "seed",
 )
 
@@ -92,14 +107,24 @@ def default_grid(
     variants: tuple[str, ...] = ("fixed", "massivegnn"),
     policies: tuple[str, ...] = ("rudder",),
     topologies: tuple[str, ...] = ("none",),
+    time_engines: tuple[str, ...] = ("closed_form",),
+    stragglers: tuple[str, ...] = ("none",),
+    congestions: tuple[str, ...] = ("none",),
     epochs: int = 5,
 ) -> list[SweepConfig]:
     """The stock grid: 16 cells (2 parts x 2 batch x 2 fanout x 2
     controller) by default; the ``policies`` axis multiplies it by the
     scoring/eviction policies of :mod:`repro.core.scoring`, the
     ``datasets`` axis by the graph-scenario families of
-    :mod:`repro.graph.generate` (``--graphs``) and the ``topologies``
-    axis by the cluster cost models (``--topology``)."""
+    :mod:`repro.graph.generate` (``--graphs``), the ``topologies`` axis
+    by the cluster cost models (``--topology``) and the
+    ``time_engines`` / ``stragglers`` / ``congestions`` axes by the
+    simulation plane of :mod:`repro.sim` (``--time-engine`` /
+    ``--stragglers`` / ``--congestion``). Straggler/congestion scenarios
+    only exist under the event engine — the closed form cannot express
+    them — so closed-form cells are generated for the baseline
+    ``("none", "none")`` scenario only.
+    """
     return [
         SweepConfig(
             dataset=d,
@@ -109,6 +134,9 @@ def default_grid(
             fanouts=f,
             policy=pol,
             topology=t,
+            time_engine=te,
+            stragglers=s,
+            congestion=c,
             epochs=epochs,
         )
         for d in datasets
@@ -118,6 +146,10 @@ def default_grid(
         for v in variants
         for pol in policies
         for t in topologies
+        for te in time_engines
+        for s in stragglers
+        for c in congestions
+        if te == "event" or (s == "none" and c == "none")
     ]
 
 
@@ -164,6 +196,9 @@ def run_sweep(
             interval=cfg.interval,
             policy=cfg.policy,
             topology=None if cfg.topology == "none" else cfg.topology,
+            time_engine=cfg.time_engine,
+            stragglers=cfg.stragglers,
+            congestion=cfg.congestion,
             train_model=False,
             seed=cfg.seed,
         )
@@ -241,6 +276,11 @@ def sweep_artifact(rows: list[dict]) -> dict:
             "variants": sorted({r["variant"] for r in rows}),
             "policies": sorted({r["policy"] for r in rows}),
             "topologies": sorted({r.get("topology", "none") for r in rows}),
+            "time_engines": sorted(
+                {r.get("time_engine", "closed_form") for r in rows}
+            ),
+            "stragglers": sorted({r.get("stragglers", "none") for r in rows}),
+            "congestions": sorted({r.get("congestion", "none") for r in rows}),
         },
         "rows": rows,
     }

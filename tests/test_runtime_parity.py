@@ -95,6 +95,12 @@ class TestRuntimeParity:
         assert legacy.losses == vector.losses
         assert legacy.accuracy == vector.accuracy
 
+    def test_event_time_engine_rejects_legacy_closed_form_scenarios(self, parts):
+        with pytest.raises(ValueError, match="event"):
+            DistributedTrainer(
+                parts, variant="fixed", stragglers="one-slow", **COMMON
+            )
+
     def test_engine_stats_match_buffer_stats(self, parts):
         """EngineStats totals equal the summed legacy BufferStats."""
         legacy_tr = DistributedTrainer(
@@ -110,6 +116,50 @@ class TestRuntimeParity:
             assert vec_tr.engine.stats.hits[p] == buf.stats.hits
             assert vec_tr.engine.stats.misses[p] == buf.stats.misses
             assert vec_tr.engine.stats.replaced_total[p] == buf.stats.replaced_total
+
+
+class TestTimeEngineParity:
+    """The simulation plane's load-bearing contract: with zero jitter,
+    no contention and a flat (or absent) topology, the event engine
+    reproduces the closed-form §4.5.3 step times *bit-identically* —
+    for every variant, both modes, on both runtimes."""
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_event_engine_parity(self, parts, variant, mode):
+        cf = _run(parts, variant, "vectorized", mode=mode, epochs=3)
+        ev = _run(
+            parts, variant, "vectorized", mode=mode, epochs=3,
+            time_engine="event",
+        )
+        for p, (a, b) in enumerate(zip(cf.logs, ev.logs)):
+            assert a.step_time == b.step_time, f"PE {p} step_time"
+            assert a.comm_volume == b.comm_volume, f"PE {p} comm_volume"
+            assert a.decisions == b.decisions, f"PE {p} decisions"
+        assert cf.epoch_times == ev.epoch_times
+        assert cf.sim_events is None
+        assert ev.sim_events is not None and len(ev.sim_events) > 0
+
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_event_engine_parity_legacy_runtime(self, parts, mode):
+        cf = _run(parts, "rudder", "legacy", mode=mode, epochs=3)
+        ev = _run(
+            parts, "rudder", "legacy", mode=mode, epochs=3,
+            time_engine="event",
+        )
+        for a, b in zip(cf.logs, ev.logs):
+            assert a.step_time == b.step_time
+        assert cf.epoch_times == ev.epoch_times
+
+    def test_event_engine_parity_flat_topology(self, parts):
+        cf = _run(parts, "fixed", "vectorized", topology="flat", epochs=3)
+        ev = _run(
+            parts, "fixed", "vectorized", topology="flat", epochs=3,
+            time_engine="event",
+        )
+        for a, b in zip(cf.logs, ev.logs):
+            assert a.step_time == b.step_time
+        assert cf.epoch_times == ev.epoch_times
 
 
 class TestEngineUnit:
@@ -134,6 +184,20 @@ class TestEngineUnit:
         assert replaced[0] >= 1       # free slot + stale slots available
         assert replaced[1] == 0       # no decision for PE 1
         assert 30 in eng.ids[0]
+
+    def test_hit_rate_nan_on_zero_lookups(self):
+        """NaN-on-empty policy: a PE that never looked anything up has
+        no hit rate, not a perfect-miss 0.0 (which would read as signal
+        in sweep artifacts while silently meaning 'no data')."""
+        eng = PrefetchEngine([2, 2])
+        eng.insert(0, np.array([1]))
+        eng.lookup(
+            [np.array([1, 2]), np.array([], dtype=np.int64)],
+            np.array([True, False]),
+        )
+        rate = eng.stats.hit_rate()
+        assert rate[0] == 0.5
+        assert np.isnan(rate[1])
 
     def test_no_cross_pe_id_collisions(self):
         """Same node id in two PEs' buffers must not alias."""

@@ -1,0 +1,295 @@
+"""Simulation plane: flow-level contention, determinism, divergence.
+
+Complements ``tests/test_runtime_parity.py`` (which asserts the event
+engine's bit-identical parity with the closed form in the zero-jitter /
+no-contention / flat configuration). Here: the fluid contention model's
+semantics, event-log determinism across runs and runtimes, seeded
+scenario variation, and the divergence regime the closed form cannot
+express — event-engine epoch times moving >= 10% while the exact
+hit/miss/byte streams stay unchanged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.gnn import DistributedTrainer
+from repro.graph import (
+    CONGESTION_PRESETS,
+    STRAGGLER_PRESETS,
+    generate,
+    make_congestion,
+    make_stragglers,
+    partition_graph,
+)
+from repro.runtime import default_grid, run_sweep, validate_rows
+from repro.sim import Flow, SimConfig, make_time_engine, simulate_flows
+
+
+@pytest.fixture(scope="module")
+def parts():
+    g = generate("products", seed=0, scale=0.12)
+    return partition_graph(g, 4)
+
+
+COMMON = dict(epochs=3, batch_size=16, train_model=False, buffer_frac=0.25)
+
+
+def _run(parts, variant="fixed", **extra):
+    kw = dict(COMMON, **extra)
+    if variant == "rudder":
+        kw["deciders"] = ["gemma3-4b"]
+    return DistributedTrainer(parts, variant=variant, **kw).run()
+
+
+def _streams(result):
+    """The exact (non-time) streams a time engine must never touch."""
+    return [
+        (log.pct_hits, log.comm_volume, log.replaced, log.decisions)
+        for log in result.logs
+    ]
+
+
+class TestFlowSim:
+    def test_single_flow_closed_form_exact(self):
+        f = Flow(pe=0, home=-1, nbytes=4_000.0, alpha=5e-4, bw=1e6)
+        finish = simulate_flows([f])
+        assert finish[0] == 5e-4 + 4_000.0 / 1e6  # bit-exact, not approx
+
+    def test_two_flows_share_one_egress_link(self):
+        flows = [
+            Flow(pe=0, home=0, nbytes=1e6, alpha=0.0, bw=1e6),
+            Flow(pe=1, home=0, nbytes=1e6, alpha=0.0, bw=1e6),
+        ]
+        # Uncontended: 1 s each. Sharing one 1e6 B/s egress: 2 s each.
+        alone = simulate_flows(flows)
+        shared = simulate_flows(flows, egress_bw=np.array([1e6]))
+        np.testing.assert_allclose(alone, [1.0, 1.0])
+        np.testing.assert_allclose(shared, [2.0, 2.0])
+
+    def test_flows_on_different_homes_do_not_interact(self):
+        flows = [
+            Flow(pe=0, home=0, nbytes=1e6, alpha=0.0, bw=1e6),
+            Flow(pe=1, home=1, nbytes=1e6, alpha=0.0, bw=1e6),
+        ]
+        finish = simulate_flows(flows, egress_bw=np.array([1e6, 1e6]))
+        np.testing.assert_allclose(finish, [1.0, 1.0])
+
+    def test_early_finisher_frees_bandwidth(self):
+        # Max-min progressive filling: the short flow finishes, the long
+        # flow then runs at full rate — not at half rate throughout.
+        flows = [
+            Flow(pe=0, home=0, nbytes=1e6, alpha=0.0, bw=1e7),
+            Flow(pe=1, home=0, nbytes=3e6, alpha=0.0, bw=1e7),
+        ]
+        finish = simulate_flows(flows, egress_bw=np.array([2e6]))
+        # Both at 1e6 B/s until t=1 (flow 0 done); flow 1 has 2e6 bytes
+        # left and the full 2e6 B/s: done at t=2.
+        np.testing.assert_allclose(finish, [1.0, 2.0])
+
+    def test_per_flow_cap_binds_under_waterfill(self):
+        # A capped flow cannot use its fair share; the residual goes to
+        # the uncapped flow (waterfilling, not equal split).
+        flows = [
+            Flow(pe=0, home=0, nbytes=1e6, alpha=0.0, bw=5e5),
+            Flow(pe=1, home=0, nbytes=3e6, alpha=0.0, bw=1e7),
+        ]
+        finish = simulate_flows(flows, egress_bw=np.array([2e6]))
+        # Flow 0 at its 5e5 cap (2 s); flow 1 at 1.5e6 B/s for 2 s
+        # (3e6 bytes) — both done at t=2.
+        np.testing.assert_allclose(finish, [2.0, 2.0])
+
+    def test_late_arrival_reshapes_rates(self):
+        flows = [
+            Flow(pe=0, home=0, nbytes=3e6, alpha=0.0, bw=1e7, start=0.0),
+            Flow(pe=1, home=0, nbytes=1e6, alpha=0.0, bw=1e7, start=1.0),
+        ]
+        finish = simulate_flows(flows, egress_bw=np.array([2e6]))
+        # Flow 0 alone at 2e6 B/s for 1 s (1e6 left), then both share
+        # 1e6 B/s each: both done at t=2.
+        np.testing.assert_allclose(finish, [2.0, 2.0])
+
+    def test_deterministic(self):
+        rng = np.random.default_rng(0)
+        flows = [
+            Flow(
+                pe=int(i % 4), home=int(i % 3),
+                nbytes=float(rng.integers(1, 10**6)),
+                alpha=5e-4, bw=1e6,
+                start=float(rng.random()),
+            )
+            for i in range(20)
+        ]
+        egress = np.array([8e5, 1e6, 5e5])
+        a = simulate_flows(flows, egress)
+        b = simulate_flows(flows, egress)
+        assert a.tolist() == b.tolist()
+
+    def test_rejects_empty_and_rateless_flows(self):
+        with pytest.raises(ValueError):
+            Flow(pe=0, home=0, nbytes=0.0, alpha=0.0, bw=1e6)
+        with pytest.raises(ValueError):
+            Flow(pe=0, home=0, nbytes=1.0, alpha=0.0, bw=0.0)
+
+
+class TestScenarioPresets:
+    def test_straggler_presets(self):
+        for name in STRAGGLER_PRESETS:
+            model = make_stragglers(name, 4, seed=3)
+            assert model.num_parts == 4
+            assert np.all(np.asarray(model.compute_mult) > 0)
+        assert make_stragglers("one-slow", 4).compute_mult[0] == 3.0
+        assert make_stragglers("jitter", 4).jitter > 0
+        with pytest.raises(KeyError):
+            make_stragglers("nope", 4)
+
+    def test_congestion_presets(self):
+        for name in CONGESTION_PRESETS:
+            model = make_congestion(name, 4, link_bw=1e6)
+            assert model.num_parts == 4
+        hot = make_congestion("hot-home", 4, link_bw=1e6)
+        assert hot.egress_bw[0] == 2.5e5 and hot.egress_bw[1] == 1e6
+        with pytest.raises(KeyError):
+            make_congestion("nope", 4)
+
+    def test_transient_window(self):
+        model = make_congestion("transient", 4, link_bw=1e6)
+        before = model.egress_at(0, 90)
+        inside = model.egress_at(45, 90)
+        after = model.egress_at(89, 90)
+        assert before[0] == after[0] == 1e6
+        assert inside[0] == 1e6 / 8.0
+        assert inside[1] == 1e6  # only partition 0 degrades
+
+    def test_factory_validation(self):
+        from repro.gnn.train import TimeModel
+
+        tm = TimeModel()
+        kw = dict(
+            tm=tm, mode="async", inference_cost=np.zeros(4),
+            feature_dim=8, num_pes=4,
+        )
+        with pytest.raises(ValueError, match="time_engine"):
+            make_time_engine("bogus", **kw)
+        with pytest.raises(ValueError, match="event"):
+            make_time_engine(
+                "closed_form", stragglers=make_stragglers("one-slow", 4), **kw
+            )
+        with pytest.raises(ValueError, match="4-way|cluster"):
+            make_time_engine(
+                "event", stragglers=make_stragglers("one-slow", 2), **kw
+            )
+
+
+class TestDeterminism:
+    def test_same_seed_identical_event_log_and_times(self, parts):
+        runs = [
+            _run(
+                parts, "fixed", time_engine="event",
+                stragglers="jitter", congestion="hot-home",
+            )
+            for _ in range(2)
+        ]
+        assert runs[0].epoch_times == runs[1].epoch_times
+        assert [log.step_time for log in runs[0].logs] == [
+            log.step_time for log in runs[1].logs
+        ]
+        assert runs[0].sim_events.as_tuples() == runs[1].sim_events.as_tuples()
+
+    def test_vectorized_and_legacy_identical_under_scenarios(self, parts):
+        kw = dict(
+            time_engine="event", stragglers="jitter", congestion="hot-home"
+        )
+        vec = _run(parts, "fixed", runtime="vectorized", **kw)
+        leg = _run(parts, "fixed", runtime="legacy", **kw)
+        assert vec.epoch_times == leg.epoch_times
+        for a, b in zip(vec.logs, leg.logs):
+            assert a.step_time == b.step_time
+            assert a.comm_volume == b.comm_volume
+        assert vec.sim_events.as_tuples() == leg.sim_events.as_tuples()
+
+    def test_jitter_seed_changes_times_not_streams(self, parts):
+        a = _run(
+            parts, "fixed", time_engine="event",
+            stragglers=make_stragglers("jitter", 4, seed=0),
+        )
+        b = _run(
+            parts, "fixed", time_engine="event",
+            stragglers=make_stragglers("jitter", 4, seed=1),
+        )
+        assert a.epoch_times != b.epoch_times
+        assert _streams(a) == _streams(b)
+
+
+class TestDivergenceRegime:
+    """Where adaptive control should separate from static prefetching:
+    regimes the closed form cannot express, with the exact byte streams
+    untouched (>= 10% epoch-time divergence, the PR acceptance bar)."""
+
+    @pytest.mark.parametrize(
+        "scenario",
+        [dict(stragglers="one-slow"), dict(congestion="hot-home")],
+    )
+    def test_epoch_time_diverges_streams_do_not(self, parts, scenario):
+        base = _run(parts, "fixed")
+        event = _run(parts, "fixed", time_engine="event", **scenario)
+        assert _streams(base) == _streams(event)
+        ratio = np.mean(event.epoch_times) / np.mean(base.epoch_times)
+        assert ratio >= 1.10, f"divergence only {ratio:.3f}x"
+
+    def test_replacement_overlap_hides_traffic(self, parts):
+        base = _run(parts, "fixed", time_engine="event")
+        overlap = _run(
+            parts, "fixed", time_engine="event",
+            sim=SimConfig(replacement_overlap=True),
+        )
+        assert _streams(base) == _streams(overlap)
+        assert np.mean(overlap.epoch_times) <= np.mean(base.epoch_times)
+        kinds = {e.kind for e in overlap.sim_events}
+        assert "replace" in kinds
+
+    def test_slow_agent_exposed_only_in_event_engine(self, parts):
+        # A daemon priced at many T_DDP per latency tick outruns the
+        # steps that are supposed to hide it: async stops being free.
+        base = _run(parts, "rudder", time_engine="event")
+        slow = _run(
+            parts, "rudder", time_engine="event",
+            sim=SimConfig(t_agent=0.5),
+        )
+        assert _streams(base) == _streams(slow)
+        assert np.mean(slow.epoch_times) > np.mean(base.epoch_times)
+
+    def test_sweep_scenario_cells_gate_clean(self):
+        grid = default_grid(
+            num_parts=(4,), batch_sizes=(16,), fanouts=((5, 10),),
+            variants=("fixed",), epochs=2,
+            time_engines=("closed_form", "event"),
+            stragglers=("none", "one-slow"),
+            congestions=("none", "hot-home"),
+        )
+        # closed_form pairs only with the (none, none) scenario.
+        assert len(grid) == 1 + 4
+        rows = run_sweep(grid)
+        assert validate_rows(rows) == []
+        by_key = {(r["time_engine"], r["stragglers"], r["congestion"]): r for r in rows}
+        base = by_key[("closed_form", "none", "none")]
+        parity = by_key[("event", "none", "none")]
+        assert parity["mean_epoch_time"] == base["mean_epoch_time"]
+        for key, row in by_key.items():
+            if key[1] != "none" or key[2] != "none":
+                assert row["total_comm"] == base["total_comm"]
+                assert row["mean_epoch_time"] >= 1.10 * base["mean_epoch_time"]
+
+    def test_straggler_sweep_seeds_differ_gate_clean(self):
+        grid = default_grid(
+            num_parts=(4,), batch_sizes=(16,), fanouts=((5, 10),),
+            variants=("fixed",), epochs=2,
+            time_engines=("event",), stragglers=("jitter",),
+        )
+        import dataclasses
+
+        rows0 = run_sweep(grid)
+        rows1 = run_sweep([dataclasses.replace(c, seed=1) for c in grid])
+        assert validate_rows(rows0) == [] and validate_rows(rows1) == []
+        assert (
+            rows0[0]["mean_epoch_time"] != rows1[0]["mean_epoch_time"]
+        )
