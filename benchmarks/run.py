@@ -36,7 +36,14 @@ label (e.g. ``--sweep p4 massivegnn``). Sweep options:
 * ``--json=PATH`` — additionally write the deterministic sweep artifact
   (sorted cells, sorted keys) consumed by the CI ``bench-smoke`` job;
 * ``--gate`` — exit non-zero if any cell is NaN/empty/non-finite (the
-  perf-trajectory gate applied before the artifact is uploaded).
+  perf-trajectory gate applied before the artifact is uploaded);
+* ``--trace=DIR`` — record every cell's full run trace
+  (``repro.trace``: seeds, frontiers, miss sets, decisions, step times)
+  with a replayable manifest under ``DIR``; each row's ``trace`` field
+  names its artifact (``<label>-<mode>-s<seed>-<cellhash>.npz`` — the
+  hash suffix keeps cells distinct on axes the label omits). Any cell
+  can then be re-run or compared in isolation with
+  ``python -m repro.trace replay/diff``.
 """
 
 import sys
@@ -101,6 +108,7 @@ def run_sweep_cli(selected: list[str]) -> int:
     json_path = None
     gate = False
     quick = False
+    trace_dir = None
     terms = []
     for arg in selected:
         if arg.startswith("--policies="):
@@ -136,6 +144,8 @@ def run_sweep_cli(selected: list[str]) -> int:
             quick = True
         elif arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
+        elif arg.startswith("--trace="):
+            trace_dir = arg.split("=", 1)[1]
         elif arg == "--gate":
             gate = True
         else:
@@ -173,7 +183,7 @@ def run_sweep_cli(selected: list[str]) -> int:
         print(f"no sweep cells match {terms!r}", file=sys.stderr)
         return 1
     t0 = time.time()
-    rows = run_sweep(grid, verbose=True)
+    rows = run_sweep(grid, verbose=True, trace_dir=trace_dir)
     print(
         "label,dataset,variant,policy,topology,time_engine,stragglers,"
         "congestion,num_parts,batch_size,fanouts,"

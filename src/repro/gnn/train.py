@@ -169,6 +169,9 @@ class RunResult:
     #: Event timeline of the run (``repro.sim.EventLog``) when priced by
     #: the event engine; None under the closed-form model.
     sim_events: object | None = None
+    #: Recorded run trace (``repro.trace.Trace``) when the trainer was
+    #: built with ``trace=...``; None otherwise.
+    trace: object | None = None
 
     # ---- aggregates used across the benchmark suite ------------------- #
     # Aggregates over an *empty* run (zero epochs / zero logged
@@ -234,6 +237,7 @@ class DistributedTrainer:
         stragglers: str | StragglerModel | None = None,
         congestion: str | CongestionModel | None = None,
         sim=None,
+        trace: object = False,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -298,6 +302,12 @@ class DistributedTrainer:
         self.congestion = congestion
         self.sim = sim
         self.last_time_engine = None
+        # Trace capture (repro.trace): False/None = off (zero overhead),
+        # True = record with a default recorder, or a TraceRecorder
+        # instance (the CLI/sweep pass one carrying the full replayable
+        # config). The finished Trace lands on self.last_trace.
+        self.trace = trace
+        self.last_trace = None
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanouts)
         # Batched twin of the per-PE sampler: all P trainers' minibatches
@@ -454,6 +464,23 @@ class DistributedTrainer:
         return engine
 
     # ------------------------------------------------------------------ #
+    def make_trace_recorder(self):
+        """Resolve the ``trace`` flag to a recorder (or None when off).
+
+        Both runtimes call this at the top of a run. A pre-built
+        :class:`repro.trace.TraceRecorder` is used as-is (single-use —
+        recorders are per-run, like time engines); ``trace=True`` builds
+        a fresh default recorder from the trainer's own axes.
+        """
+        if not self.trace:
+            return None
+        from ..trace import TraceRecorder
+
+        if isinstance(self.trace, TraceRecorder):
+            return self.trace
+        return TraceRecorder.for_trainer(self)
+
+    # ------------------------------------------------------------------ #
     def run(self) -> RunResult:
         """Execute the experiment (vectorized runtime by default)."""
         if self.runtime == "vectorized":
@@ -475,6 +502,7 @@ class DistributedTrainer:
         epoch_times: list[float] = []
         losses: list[float] = []
         time_engine = self.make_time_engine()
+        recorder = self.make_trace_recorder()
 
         # Pipeline staleness: ReplaceandFetch overlaps with training, so a
         # replacement round admits the miss set of the *previous*
@@ -492,6 +520,12 @@ class DistributedTrainer:
                 missed_sets: list[np.ndarray] = []
                 placed_sets: list[np.ndarray] = []
                 stall_ticks: list[float] = []
+                # Trace-only per-PE collections (references, not copies;
+                # empty work when capture is off).
+                seed_sets: list[np.ndarray] = []
+                remote_sets: list[np.ndarray] = []
+                hit_counts: list[int] = []
+                occ_pre: list[float] = []
                 for p in range(P):
                     ctrl = self.controllers[p]
                     buf = self.buffers[p]
@@ -505,12 +539,19 @@ class DistributedTrainer:
                     if ctrl.uses_buffer and buf.capacity > 0:
                         hit_mask, _ = buf.lookup(remote)
                         missed = remote[~hit_mask]
+                        hits = int(hit_mask.sum())
                         pct_hits = (
-                            100.0 * hit_mask.sum() / n_remote if n_remote else 100.0
+                            100.0 * hits / n_remote if n_remote else 100.0
                         )
                     else:
                         missed = remote
+                        hits = 0
                         pct_hits = 0.0
+                    if recorder is not None:
+                        seed_sets.append(batch)
+                        remote_sets.append(remote)
+                        hit_counts.append(hits)
+                        occ_pre.append(buf.occupancy)
 
                     comm = len(missed)
                     metrics = Metrics(
@@ -590,6 +631,24 @@ class DistributedTrainer:
                 for p in range(P):
                     logs[p].step_time.append(float(step_times[p]))
                 epoch_time += float(step_times.max())
+                if recorder is not None:
+                    recorder.record_step(
+                        seeds=seed_sets,
+                        remote=remote_sets,
+                        missed=missed_sets,
+                        placed=placed_sets,
+                        decisions=[logs[p].decisions[-1] for p in range(P)],
+                        stalls=np.asarray(stall_ticks, dtype=np.float64),
+                        pct_hits=[logs[p].pct_hits[-1] for p in range(P)],
+                        hits=hit_counts,
+                        n_remote=[logs[p].unique_remote[-1] for p in range(P)],
+                        replaced=[logs[p].replaced[-1] for p in range(P)],
+                        total_comm=[logs[p].comm_volume[-1] for p in range(P)],
+                        occupancy_pre=occ_pre,
+                        occupancy_post=[logs[p].occupancy[-1] for p in range(P)],
+                        step_times=step_times,
+                        controllers=self.controllers,
+                    )
                 if self.train_model and grads_acc is not None:
                     grads_mean = jax.tree_util.tree_map(
                         lambda g: g / P, grads_acc
@@ -609,6 +668,11 @@ class DistributedTrainer:
                 sage_accuracy(self.params, x_seed, x_n1, x_n2, minibatch.labels)
             )
 
+        trace = None
+        if recorder is not None:
+            trace = recorder.finalize(epoch_times, time_engine.events)
+            self.last_trace = trace
+
         return RunResult(
             variant=self.variant,
             epoch_times=epoch_times,
@@ -618,6 +682,7 @@ class DistributedTrainer:
             controllers=self.controllers,
             graph_meta=self.graph_meta,
             sim_events=time_engine.events,
+            trace=trace,
         )
 
 

@@ -92,22 +92,10 @@ def unique_remote(minibatch: MiniBatch, part_of: np.ndarray, part: int) -> np.nd
     return nodes[part_of[nodes] != part]
 
 
-def frontier_dedup(
-    sorted_keys: np.ndarray, is_remote: np.ndarray | None = None
-) -> tuple[np.ndarray, np.ndarray | None]:
-    """First-occurrence mask over row-sorted frontiers (numpy reference).
-
-    ``sorted_keys`` is ``(P, M)``, each row sorted ascending; the mask
-    selects each row's sorted-unique elements. With ``is_remote`` the
-    remote extraction fuses into the same pass:
-    ``remote_mask = first & is_remote``. The Pallas twin is
-    :func:`repro.kernels.ops.frontier_unique_batch`.
-    """
-    first = np.ones(sorted_keys.shape, dtype=bool)
-    if sorted_keys.shape[1] > 1:
-        first[:, 1:] = sorted_keys[:, 1:] != sorted_keys[:, :-1]
-    remote = (first & is_remote) if is_remote is not None else None
-    return first, remote
+# Re-exported for its long-standing home: the implementation moved to
+# repro.kernels.ref so the kernels plane (whose int64 fallback needs it)
+# never imports the data plane.
+from ..kernels.ref import frontier_dedup  # noqa: E402, F401
 
 
 class SamplerPlane:
@@ -161,16 +149,15 @@ class SamplerPlane:
         if self.use_kernels:
             from ..kernels import ops
 
-            if sorted_keys.size and sorted_keys.max() >= np.iinfo(np.int32).max:
-                return frontier_dedup(sorted_keys, is_remote)  # i32 overflow
+            # ops.frontier_unique_batch owns the int32/int64 dtype
+            # normalization: ids that do not fit int32 take its numpy
+            # fallback with the same output dtypes as the kernel path.
             rem = (
                 np.zeros(sorted_keys.shape, dtype=bool)
                 if is_remote is None
                 else is_remote
             )
-            first, remote, _, _ = ops.frontier_unique_batch(
-                sorted_keys.astype(np.int32), rem
-            )
+            first, remote, _, _ = ops.frontier_unique_batch(sorted_keys, rem)
             first = np.asarray(first, dtype=bool)
             remote = np.asarray(remote, dtype=bool) if is_remote is not None else None
             return first, remote

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
@@ -36,6 +37,33 @@ __all__ = [
 
 
 def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):
+    """Fused frontier dedup; accepts int32 **or** int64 row-sorted keys.
+
+    The Pallas kernel runs in int32; keys that cannot be represented in
+    int32 take a numpy fallback with **identical output dtypes** (bool
+    masks, int32 counts), so downstream consumers — and the trace
+    schema's id normalization — see one contract on every platform.
+    The previous behaviour cast int64 keys blindly, which silently
+    wrapped ids >= 2^31 on the kernel path while the fallback produced
+    different dtypes; traces recorded on the two paths then failed to
+    replay bit-identically.
+    """
+    if getattr(sorted_keys, "dtype", None) != np.int32:
+        # Only non-int32 inputs pay the range check (and, for numpy
+        # callers, it is free of any device transfer; int32 jax arrays
+        # go straight to the kernel).
+        keys = np.asarray(sorted_keys)
+        if keys.size and int(keys.max()) >= np.iinfo(np.int32).max:
+            first, remote = ref.frontier_dedup(
+                keys, np.asarray(is_remote, dtype=bool)
+            )
+            return (
+                first,
+                remote,
+                first.sum(axis=1, dtype=np.int32),
+                remote.sum(axis=1, dtype=np.int32),
+            )
+        sorted_keys = keys.astype(np.int32, copy=False)
     return _frontier_unique_batch(sorted_keys, is_remote, interpret=interpret)
 
 

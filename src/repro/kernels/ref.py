@@ -1,11 +1,37 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+"""Reference oracles for every Pallas kernel (allclose targets).
+
+Pure-jnp twins of each kernel, plus the numpy reference
+:func:`frontier_dedup` — it lives here (not in ``graph/sampler``, which
+re-exports it) so the kernels plane never depends on the data plane:
+``ops.frontier_unique_batch``'s int64 fallback and the sampling plane's
+default numpy path both call the same implementation.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import scoring
+
+
+def frontier_dedup(
+    sorted_keys: np.ndarray, is_remote: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray | None]:
+    """First-occurrence mask over row-sorted frontiers (numpy reference).
+
+    ``sorted_keys`` is ``(P, M)``, each row sorted ascending; the mask
+    selects each row's sorted-unique elements. With ``is_remote`` the
+    remote extraction fuses into the same pass:
+    ``remote_mask = first & is_remote``. The Pallas twin is
+    :func:`repro.kernels.ops.frontier_unique_batch`.
+    """
+    first = np.ones(sorted_keys.shape, dtype=bool)
+    if sorted_keys.shape[1] > 1:
+        first[:, 1:] = sorted_keys[:, 1:] != sorted_keys[:, :-1]
+    remote = (first & is_remote) if is_remote is not None else None
+    return first, remote
 
 
 def gather_rows(table: jax.Array, indices: jax.Array) -> jax.Array:

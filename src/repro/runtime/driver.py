@@ -68,6 +68,7 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     logs = [TrainerLog() for _ in range(P)]
     epoch_times: list[float] = []
     losses: list[float] = []
+    recorder = trainer.make_trace_recorder()
 
     for epoch in range(trainer.epochs):
         epoch_time = 0.0
@@ -109,6 +110,25 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                 logs[p].step_time.append(float(commit.step_time[p]))
             epoch_time += float(commit.step_time.max())
 
+            if recorder is not None:
+                recorder.record_step(
+                    seeds=[m.seeds for m in minibatches],
+                    remote=remote,
+                    missed=commit.missed,
+                    placed=commit.placed,
+                    decisions=decisions,
+                    stalls=stalls,
+                    pct_hits=probe.pct_hits,
+                    hits=probe.hits,
+                    n_remote=n_remote,
+                    replaced=commit.replaced,
+                    total_comm=commit.total_comm,
+                    occupancy_pre=probe.occupancy,
+                    occupancy_post=commit.occupancy,
+                    step_times=commit.step_time,
+                    controllers=trainer.controllers,
+                )
+
             if trainer.train_model:
                 grads_acc = None
                 loss_acc = 0.0
@@ -148,6 +168,11 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
             sage_accuracy(trainer.params, x_seed, x_n1, x_n2, minibatch.labels)
         )
 
+    trace = None
+    if recorder is not None:
+        trace = recorder.finalize(epoch_times, time_engine.events)
+        trainer.last_trace = trace
+
     return RunResult(
         variant=trainer.variant,
         epoch_times=epoch_times,
@@ -157,4 +182,5 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         controllers=trainer.controllers,
         graph_meta=trainer.graph_meta,
         sim_events=time_engine.events,
+        trace=trace,
     )

@@ -116,6 +116,10 @@ class CommitResult:
     total_comm: np.ndarray    # (P,) int64 — misses + replacement traffic
     step_time: np.ndarray     # (P,) float64, §4.5.3 model
     occupancy: np.ndarray     # (P,) float64, post-replacement
+    #: Exact per-PE node-id sets of the round (the trace plane records
+    #: them; the time engine already priced them via build_step_comm).
+    missed: list[np.ndarray]  # this minibatch's miss fetches
+    placed: list[np.ndarray]  # this round's replacement admissions
 
 
 class FetchStage:
@@ -224,4 +228,6 @@ class FetchStage:
             total_comm=total_comm,
             step_time=t,
             occupancy=engine.occupancy(),
+            missed=missed,
+            placed=list(engine.last_placed),
         )

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import sys
 from dataclasses import asdict, dataclass
 
@@ -154,7 +155,10 @@ def default_grid(
 
 
 def run_sweep(
-    configs: list[SweepConfig], scale: float = 0.12, verbose: bool = False
+    configs: list[SweepConfig],
+    scale: float = 0.12,
+    verbose: bool = False,
+    trace_dir: str | None = None,
 ) -> list[dict]:
     """Run every configuration in-process; returns one result row per cell.
 
@@ -164,11 +168,21 @@ def run_sweep(
     in sorted cell-config order regardless of the order ``configs`` was
     built in, so repeated sweeps over the same grid produce identical
     output.
+
+    With ``trace_dir`` (the ``--trace`` axis of ``benchmarks.run``),
+    every cell additionally records its full run trace
+    (:mod:`repro.trace`) with a replayable manifest config and saves it
+    under ``trace_dir/<label>.npz``; rows gain a ``trace`` field naming
+    the artifact, so any sweep cell can be replayed or diffed in
+    isolation later.
     """
     # Deferred: repro.gnn.train imports this package at module load.
-    from ..core import LLMAgent, make_backend
-    from ..gnn import DistributedTrainer
     from ..graph import generate, partition_graph
+
+    # Single source of cell construction — a replayable trace manifest
+    # must rebuild exactly the trainer that recorded it, so the sweep
+    # and `python -m repro.trace` share one builder.
+    from ..trace.cli import build_trainer
 
     parts_cache: dict[tuple, object] = {}
     rows: list[dict] = []
@@ -177,33 +191,32 @@ def run_sweep(
         if key not in parts_cache:
             g = generate(cfg.dataset, seed=cfg.seed, scale=scale)
             parts_cache[key] = partition_graph(g, cfg.num_parts)
-        parts = parts_cache[key]
-        deciders = None
-        if cfg.variant == "rudder":
-            backend = cfg.backend
-            deciders = [
-                LLMAgent(make_backend(backend), None) for _ in range(cfg.num_parts)
-            ]
-        trainer = DistributedTrainer(
-            parts,
-            variant=cfg.variant,
-            deciders=deciders,
-            buffer_frac=cfg.buffer_frac,
-            batch_size=cfg.batch_size,
-            fanouts=cfg.fanouts,
-            epochs=cfg.epochs,
-            mode=cfg.mode,
-            interval=cfg.interval,
-            policy=cfg.policy,
-            topology=None if cfg.topology == "none" else cfg.topology,
-            time_engine=cfg.time_engine,
-            stragglers=cfg.stragglers,
-            congestion=cfg.congestion,
-            train_model=False,
-            seed=cfg.seed,
-        )
+        cell_config = {
+            **asdict(cfg),
+            "fanouts": list(cfg.fanouts),
+            "scale": float(scale),
+            "runtime": "vectorized",
+        }
+        trainer = build_trainer(cell_config, parts=parts_cache[key])
+        if trace_dir is not None:
+            from ..trace import TraceRecorder
+
+            trainer.trace = TraceRecorder.for_trainer(trainer, config=cell_config)
         result = trainer.run()
         row = asdict(cfg)
+        if trace_dir is not None:
+            import hashlib
+
+            from ..trace import save_trace
+
+            os.makedirs(trace_dir, exist_ok=True)
+            # Labels are display summaries and omit axes (mode, interval,
+            # seed, ...); suffix the full cell key so no two cells of any
+            # grid can overwrite each other's artifact.
+            cell = hashlib.sha1(repr(_cell_key(row)).encode()).hexdigest()[:8]
+            name = f"{cfg.label()}-{cfg.mode}-s{cfg.seed}-{cell}".replace("/", "-")
+            save_trace(trainer.last_trace, os.path.join(trace_dir, name))
+            row["trace"] = f"{name}.npz"
         row.update(
             label=cfg.label(),
             mean_pct_hits=round(result.mean_pct_hits, 2),

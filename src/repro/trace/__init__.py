@@ -1,0 +1,66 @@
+"""Trace plane — deterministic capture/replay of the exact run streams.
+
+The fifth plane of the reproduction (see ``docs/ARCHITECTURE.md``
+§"Trace plane"): every parity contract in the repo — legacy vs
+vectorized runtime, closed-form vs event time engine, kernel vs numpy
+scoring — is a statement that two executions produce *the same streams*.
+This package makes "the streams" a first-class, versioned artifact:
+
+* :class:`TraceRecorder` (:mod:`.capture`) — hooked into both runtimes
+  behind ``DistributedTrainer(trace=...)``, records the canonical
+  per-minibatch record (seeds, remote frontiers, miss sets split by home
+  partition, decisions with validity/stall accounting, replacement
+  admissions, byte counts, per-PE step times, event timeline);
+* :class:`Trace` / schema (:mod:`.schema`) — dtype-normalized arrays
+  (ids always int64) + JSON manifest with config, array specs and a
+  payload digest, so a trace recorded on one platform replays
+  bit-identically on another;
+* :func:`save_trace` / :func:`load_trace` (:mod:`.store`) — compressed
+  npz payload + committed-reviewable JSON manifest, digest-verified;
+* :func:`diff_traces` (:mod:`.diff`) — structured first-divergence
+  report (field, step, PE, values), the artifact the golden-trace CI
+  gate uploads;
+* replay adapters (:mod:`.replay`) — feed a recorded upstream stream
+  into one plane (decision plane, time engine) so plane changes are
+  testable without re-running everything upstream;
+* ``python -m repro.trace`` (:mod:`.cli`) — ``record`` / ``replay`` /
+  ``diff`` / ``verify`` subcommands.
+
+Golden traces for all four controller variants x async/sync live under
+``tests/golden/`` (regenerate with ``tests/golden/regenerate.py``); the
+conformance suite is ``tests/test_trace_golden.py`` and the workflow is
+documented in ``docs/TESTING.md``.
+"""
+
+from .capture import TraceRecorder, controller_validity
+from .diff import DiffReport, Divergence, diff_traces, write_report_json
+from .replay import (
+    metrics_at,
+    replay_decisions,
+    replay_decisions_report,
+    replay_time_engine,
+    replay_time_engine_report,
+)
+from .schema import ID_DTYPE, SCHEMA_VERSION, Trace, normalize_ids
+from .store import load_trace, save_trace, trace_paths
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ID_DTYPE",
+    "Trace",
+    "normalize_ids",
+    "TraceRecorder",
+    "controller_validity",
+    "save_trace",
+    "load_trace",
+    "trace_paths",
+    "diff_traces",
+    "DiffReport",
+    "Divergence",
+    "write_report_json",
+    "metrics_at",
+    "replay_decisions",
+    "replay_decisions_report",
+    "replay_time_engine",
+    "replay_time_engine_report",
+]

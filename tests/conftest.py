@@ -1,6 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # Tests run on the single real CPU device (the dry-run, and ONLY the
 # dry-run, uses the 512-placeholder-device XLA flag).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # CI sets REQUIRE_HYPOTHESIS=1 (the `test` extra is installed there)
+    # so the five hypothesis property modules cannot silently degrade to
+    # skips: a missing/broken hypothesis install fails the session
+    # instead of reporting green with the property tests never run.
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        try:
+            import hypothesis  # noqa: F401
+        except ImportError as exc:
+            raise pytest.UsageError(
+                "REQUIRE_HYPOTHESIS is set but the hypothesis package is "
+                "not importable — install the `test` extra "
+                f"(pip install -e .[test]): {exc}"
+            )

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Regenerate the committed golden traces under ``tests/golden/``.
+
+Usage (from the repo root)::
+
+    PYTHONPATH=src python tests/golden/regenerate.py
+
+One golden per (controller variant x queue mode): the four §5 variants —
+distdgl (no prefetch), fixed, massivegnn (periodic), rudder (adaptive
+LLM agent) — each recorded async and sync on the vectorized runtime.
+The configuration is deliberately tiny (1200-node products graph, 2
+partitions, batch 8, fanout 3x5, 2 epochs -> 14 steps) so the whole set
+regenerates in seconds and each artifact stays under ~10 KB.
+
+**When to regenerate:** only when a PR *intentionally* changes the exact
+streams (sampling order, buffer semantics, decision protocol, time
+model) or bumps the trace schema version. The conformance suite
+(``tests/test_trace_golden.py``) and the CI drift gate
+(``python -m repro.trace verify tests/golden``) re-record every golden
+from its manifest config and diff bit-exactly — a failing gate on an
+unrelated change means the change is not as isolated as it looked.
+Review discipline: a regeneration must show up in the PR diff as
+changed manifest digests *with an explanation of which stream moved and
+why* (the ``trace diff`` first-divergence report names it). See
+``docs/TESTING.md``.
+"""
+
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "..", "src")
+)
+
+from repro.trace import save_trace  # noqa: E402
+from repro.trace.cli import record_trace  # noqa: E402
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+#: The shared cell config; variant/mode vary per golden.
+BASE_CONFIG = {
+    "dataset": "products",
+    "scale": 0.05,
+    "num_parts": 2,
+    "batch_size": 8,
+    "fanouts": [3, 5],
+    "epochs": 2,
+    "interval": 4,          # massivegnn replaces 3x within the 14 steps
+    "buffer_frac": 0.25,
+    "backend": "gemma3-4b",
+    "policy": "rudder",
+    "topology": "none",
+    "time_engine": "closed_form",
+    "stragglers": "none",
+    "congestion": "none",
+    "seed": 0,
+    "runtime": "vectorized",
+}
+
+VARIANTS = ("distdgl", "fixed", "massivegnn", "rudder")
+MODES = ("async", "sync")
+
+
+def main() -> int:
+    for variant in VARIANTS:
+        for mode in MODES:
+            config = {**BASE_CONFIG, "variant": variant, "mode": mode}
+            trace = record_trace(config)
+            npz_path, _ = save_trace(
+                trace, os.path.join(GOLDEN_DIR, f"{variant}_{mode}")
+            )
+            print(
+                f"{os.path.basename(npz_path):24s} "
+                f"{trace.num_steps} steps x {trace.num_pes} PEs  "
+                f"digest {trace.digest()[:12]}"
+            )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,6 +70,94 @@ def test_score_update_property(n, p, seed):
     assert int(stale) == int(want_stale)
 
 
+@given(
+    P=st.integers(1, 5),
+    M=st.integers(0, 200),
+    dtype=st.sampled_from([np.int32, np.int64]),
+    shape_kind=st.sampled_from(["random", "all-duplicate", "all-unique"]),
+    p_remote=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_frontier_unique_batch_property(P, M, dtype, shape_kind, p_remote, seed):
+    """Kernel == numpy oracle == jnp oracle over random shapes/dtypes,
+    including empty rows (M=0) and all-duplicate rows."""
+    from repro.graph.sampler import frontier_dedup
+
+    rng = np.random.default_rng(seed)
+    if shape_kind == "all-duplicate":
+        keys = np.full((P, M), int(rng.integers(0, 100)), dtype=dtype)
+    elif shape_kind == "all-unique":
+        base = rng.integers(0, 10, size=(P, M)) + 1 if M else np.zeros((P, 0))
+        keys = np.cumsum(base, axis=1).astype(dtype)
+    else:
+        keys = np.sort(
+            rng.integers(0, max(1, 2 * M), size=(P, M)), axis=1
+        ).astype(dtype)
+    rem = rng.random((P, M)) < p_remote
+
+    first, remote, ucount, rcount = (
+        np.asarray(x) for x in ops.frontier_unique_batch(keys, rem)
+    )
+    want_first, want_remote = frontier_dedup(keys, rem)          # numpy oracle
+    np.testing.assert_array_equal(first, want_first)
+    np.testing.assert_array_equal(remote, want_remote)
+    np.testing.assert_array_equal(ucount, want_first.sum(axis=1))
+    np.testing.assert_array_equal(rcount, want_remote.sum(axis=1))
+    assert ucount.dtype == np.int32 and rcount.dtype == np.int32
+    if M:                                                        # jnp oracle
+        jf, jr, juc, jrc = ref.frontier_unique_batch(
+            jnp.asarray(keys.astype(np.int32)), jnp.asarray(rem)
+        )
+        np.testing.assert_array_equal(first, np.asarray(jf))
+        np.testing.assert_array_equal(remote, np.asarray(jr))
+        np.testing.assert_array_equal(ucount, np.asarray(juc))
+        np.testing.assert_array_equal(rcount, np.asarray(jrc))
+
+
+@given(
+    P=st.integers(1, 4),
+    N=st.integers(1, 150),
+    mode=st.sampled_from(["accumulate", "reset", "capped"]),
+    weighted=st.booleans(),
+    p_access=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_score_policy_update_batch_property(
+    P, N, mode, weighted, p_access, seed
+):
+    """Kernel == jnp oracle == numpy ScoringPolicy for random shapes,
+    access rates, policy modes, and optional per-slot weights."""
+    from repro.core import scoring
+
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0.0, 4.0, size=(P, N)).astype(np.float32)
+    accessed = rng.random((P, N)) < p_access
+    weights = (
+        rng.uniform(0.5, 2.0, size=(P, N)).astype(np.float32)
+        if weighted
+        else None
+    )
+    out, stale = ops.score_policy_update_batch(
+        scores, accessed, weights, mode=mode
+    )
+    want, want_stale = ref.score_policy_update_batch(
+        jnp.asarray(scores), jnp.asarray(accessed),
+        None if weights is None else jnp.asarray(weights), mode=mode,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(stale), np.asarray(want_stale))
+
+    policy = scoring.ScoringPolicy(
+        name="prop", mode=mode, use_weights=weighted
+    )
+    np_new = policy.update(scores, accessed, weights)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np_new, rtol=1e-6, atol=1e-7
+    )
+
+
 def test_gather_matches_buffer_semantics():
     """The kernel path assembles exactly the features the buffer returns
     (integration: core.buffer x kernels)."""

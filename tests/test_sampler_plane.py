@@ -153,6 +153,36 @@ class TestFrontierKernel:
         ]
         assert int(uc[0]) == 4 and int(rc[0]) == 2
 
+    def test_int64_fallback_dtypes(self):
+        """Ids past int32 range take the numpy fallback — same output
+        dtypes as the kernel path, so traces recorded on either path
+        replay bit-identically cross-platform (previously int64 keys
+        were cast blindly and wrapped silently)."""
+        from repro.kernels import ops
+
+        big = np.int64(2**31)
+        keys = np.array(
+            [[1, 1, big, big + 3], [0, 2, 2, big + 7]], dtype=np.int64
+        )
+        rem = np.array([[1, 1, 1, 0], [0, 1, 1, 1]], dtype=bool)
+        first, remote, ucount, rcount = ops.frontier_unique_batch(keys, rem)
+        want_first, want_remote = frontier_dedup(keys, rem)
+        np.testing.assert_array_equal(np.asarray(first), want_first)
+        np.testing.assert_array_equal(np.asarray(remote), want_remote)
+        assert np.asarray(ucount).dtype == np.int32
+        assert np.asarray(rcount).dtype == np.int32
+        np.testing.assert_array_equal(np.asarray(ucount), [3, 3])
+        np.testing.assert_array_equal(np.asarray(rcount), [2, 2])
+
+        # In-range int64 keys ride the kernel path and agree with the
+        # same oracle (cross-dtype consistency of the two paths).
+        small = keys % 1000
+        small.sort(axis=1)
+        out32 = ops.frontier_unique_batch(small.astype(np.int32), rem)
+        out64 = ops.frontier_unique_batch(small, rem)
+        for a, b in zip(out32, out64):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_plane_kernel_path_bit_identical(self):
         g = generate("products", seed=0, scale=0.1)
         parts = partition_graph(g, 4)

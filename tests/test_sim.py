@@ -207,6 +207,35 @@ class TestDeterminism:
             assert a.comm_volume == b.comm_volume
         assert vec.sim_events.as_tuples() == leg.sim_events.as_tuples()
 
+    @pytest.mark.parametrize(
+        "scenario",
+        [dict(stragglers="one-slow"), dict(congestion="hot-home")],
+    )
+    def test_sim_events_trace_byte_stable(self, parts, scenario):
+        """sim <-> trace determinism: the full recorded trace — including
+        the serialized ``RunResult.sim_events`` timeline — is byte-stable
+        (identical payload digest) across both runtimes and repeated
+        runs, and ``trace diff`` reports zero divergence."""
+        from repro.trace import diff_traces
+
+        def trace_of(runtime):
+            trainer = DistributedTrainer(
+                parts, variant="fixed", runtime=runtime,
+                time_engine="event", trace=True, **COMMON, **scenario,
+            )
+            result = trainer.run()
+            assert result.sim_events is not None
+            assert "ev_step" in trainer.last_trace.arrays  # events serialized
+            return trainer.last_trace
+
+        vec0 = trace_of("vectorized")
+        vec1 = trace_of("vectorized")
+        leg = trace_of("legacy")
+        assert vec0.digest() == vec1.digest() == leg.digest()
+        assert diff_traces(vec0, vec1).identical
+        report = diff_traces(vec0, leg)
+        assert report.identical, report.render()
+
     def test_jitter_seed_changes_times_not_streams(self, parts):
         a = _run(
             parts, "fixed", time_engine="event",

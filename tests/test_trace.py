@@ -1,0 +1,446 @@
+"""Trace plane: capture round-trips, dtype normalization, diff, replay.
+
+The load-bearing contract (ISSUE 5 acceptance): record -> replay is
+**bit-identical** on hits/misses/bytes/decisions/step-times for all four
+controller variants, async + sync, on both runtimes. Golden-file
+conformance lives in ``tests/test_trace_golden.py``; the sim-event
+byte-stability extension lives in ``tests/test_sim.py``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.trace import (
+    SCHEMA_VERSION,
+    Trace,
+    TraceRecorder,
+    diff_traces,
+    load_trace,
+    normalize_ids,
+    replay_decisions_report,
+    replay_time_engine_report,
+    save_trace,
+)
+from repro.trace.cli import build_trainer, main as trace_main, record_trace
+
+VARIANTS = ["distdgl", "fixed", "massivegnn", "rudder"]
+
+CONFIG = {
+    "dataset": "products",
+    "scale": 0.05,
+    "num_parts": 2,
+    "batch_size": 8,
+    "fanouts": [3, 5],
+    "epochs": 2,
+    "interval": 4,
+    "seed": 0,
+}
+
+_cache: dict[tuple, Trace] = {}
+
+
+def _trace_of(variant: str, mode: str = "async", runtime: str = "vectorized",
+              **extra) -> Trace:
+    key = (variant, mode, runtime, tuple(sorted(extra.items())))
+    if key not in _cache:
+        config = {**CONFIG, "variant": variant, "mode": mode, **extra}
+        _cache[key] = record_trace(config, runtime=runtime)
+    return _cache[key]
+
+
+class TestCaptureRoundTrip:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_bit_identical_across_runtimes(self, variant, mode):
+        """The tentpole contract: both runtimes record the same trace."""
+        vec = _trace_of(variant, mode, "vectorized")
+        leg = _trace_of(variant, mode, "legacy")
+        report = diff_traces(vec, leg)
+        assert report.identical, report.render()
+        assert vec.digest() == leg.digest()
+
+    def test_repeat_run_is_bit_identical(self):
+        a = _trace_of("fixed")
+        config = {**CONFIG, "variant": "fixed", "mode": "async"}
+        b = record_trace(config)
+        assert a.digest() == b.digest()
+
+    def test_schema_conformance(self):
+        trace = _trace_of("rudder", "sync")
+        assert trace.validate() == []
+        assert trace.manifest["schema_version"] == SCHEMA_VERSION
+        S, P = trace.num_steps, trace.num_pes
+        assert trace.arrays["decisions"].shape == (S, P)
+        assert trace.arrays["miss_pairs"].shape == (S, P, P)
+        # Home-split matrices sum back to the per-PE counts, with an
+        # empty diagonal (a PE never remote-fetches from itself).
+        assert np.array_equal(
+            trace.arrays["miss_pairs"].sum(axis=2), trace.arrays["miss"]
+        )
+        assert (
+            trace.arrays["miss_pairs"][:, np.arange(P), np.arange(P)] == 0
+        ).all()
+        # Ragged segments match the dense counters.
+        for s in range(S):
+            for p in range(P):
+                assert len(trace.ragged("miss_ids", s, p)) == trace.arrays["miss"][s, p]
+                assert len(trace.ragged("remote", s, p)) == trace.arrays["n_remote"][s, p]
+
+    def test_validity_and_stall_accounting_recorded(self):
+        trace = _trace_of("rudder", "sync")
+        # Cumulative Table-2 counters are monotone and end at the run total.
+        valid = trace.arrays["valid_responses"]
+        assert (np.diff(valid, axis=0) >= 0).all()
+        assert valid[-1].sum() > 0
+        assert trace.arrays["stalls"].sum() > 0  # sync mode pays stalls
+
+    def test_trace_off_by_default_and_result_carries_trace(self):
+        g = generate("products", seed=0, scale=0.05)
+        parts = partition_graph(g, 2)
+        t = DistributedTrainer(
+            parts, variant="fixed", epochs=1, batch_size=8, fanouts=(3, 5),
+            train_model=False,
+        )
+        result = t.run()
+        assert result.trace is None and t.last_trace is None
+        t2 = DistributedTrainer(
+            parts, variant="fixed", epochs=1, batch_size=8, fanouts=(3, 5),
+            train_model=False, trace=True,
+        )
+        result2 = t2.run()
+        assert result2.trace is t2.last_trace is not None
+        assert result2.trace.num_steps == len(result2.logs[0].pct_hits)
+
+
+class TestDtypeNormalization:
+    def test_recorder_normalizes_id_dtypes(self):
+        """int32 and int64 producers record bit-identical payloads —
+        the cross-platform replay fix (satellite 2)."""
+
+        def record(dtype):
+            rec = TraceRecorder(
+                num_pes=2, part_of=np.array([0, 0, 1, 1]),
+                mb_per_epoch=1, epochs=1,
+            )
+            ids = [np.array([0, 2], dtype=dtype), np.array([1, 3], dtype=dtype)]
+            rec.record_step(
+                seeds=ids, remote=ids, missed=ids, placed=ids,
+                decisions=[True, False], stalls=[0.0, 0.0],
+                pct_hits=[50.0, 25.0], hits=[1, 1], n_remote=[2, 2],
+                replaced=[2, 0], total_comm=[4, 2],
+                occupancy_pre=[0.0, 0.0], occupancy_post=[0.5, 0.0],
+                step_times=[0.05, 0.05],
+            )
+            return rec.finalize([0.05])
+
+        a, b = record(np.int32), record(np.int64)
+        assert a.digest() == b.digest()
+        assert a.arrays["seeds_flat"].dtype == np.int64
+        assert diff_traces(a, b).identical
+
+    def test_cross_dtype_file_round_trip(self, tmp_path):
+        a = _trace_of("fixed")
+        save_trace(a, str(tmp_path / "t"))
+        b = load_trace(str(tmp_path / "t"))
+        assert b.arrays["remote_flat"].dtype == np.int64
+        assert a.digest() == b.digest()
+        assert diff_traces(a, b).identical
+
+    def test_normalize_ids(self):
+        out = normalize_ids(np.array([[1, 2]], dtype=np.int32))
+        assert out.dtype == np.int64 and out.shape == (2,)
+
+
+class TestStore:
+    def test_save_load_round_trip(self, tmp_path):
+        trace = _trace_of("massivegnn")
+        npz, manifest = save_trace(trace, str(tmp_path / "trace"))
+        assert os.path.exists(npz) and os.path.exists(manifest)
+        loaded = load_trace(npz)
+        assert diff_traces(trace, loaded).identical
+
+    def test_corrupted_payload_detected(self, tmp_path):
+        trace = _trace_of("fixed")
+        save_trace(trace, str(tmp_path / "t"))
+        # Overwrite the payload with a perturbed copy: digest must trip.
+        bad = Trace(manifest=dict(trace.manifest),
+                    arrays={k: v.copy() for k, v in trace.arrays.items()})
+        bad.arrays["step_time"][0, 0] += 1e-9
+        np.savez_compressed(str(tmp_path / "t.npz"), **bad.arrays)
+        with pytest.raises(ValueError, match="digest"):
+            load_trace(str(tmp_path / "t"))
+
+    def test_newer_schema_rejected(self, tmp_path):
+        trace = _trace_of("fixed")
+        _, manifest_path = save_trace(trace, str(tmp_path / "t"))
+        import json
+
+        with open(manifest_path) as fh:
+            manifest = json.load(fh)
+        manifest["schema_version"] = SCHEMA_VERSION + 1
+        with open(manifest_path, "w") as fh:
+            json.dump(manifest, fh)
+        with pytest.raises(ValueError, match="schema_version"):
+            load_trace(str(tmp_path / "t"))
+
+
+class TestDiff:
+    def _copy(self, trace: Trace) -> Trace:
+        return Trace(
+            manifest=dict(trace.manifest),
+            arrays={k: v.copy() for k, v in trace.arrays.items()},
+        )
+
+    def test_one_value_drift_located_exactly(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        b.arrays["step_time"][3, 1] *= 1.0 + 1e-12
+        report = diff_traces(a, b)
+        assert not report.identical
+        first = report.first
+        assert (first.field, first.step, first.pe) == ("step_time", 3, 1)
+
+    def test_ragged_id_drift_located(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        P = a.num_pes
+        k = 5 * P + 1  # segment (step 5, pe 1)
+        off = a.arrays["miss_ids_offsets"]
+        assert off[k + 1] > off[k], "test needs a non-empty miss segment"
+        b.arrays["miss_ids_flat"][off[k]] += 1
+        report = diff_traces(a, b)
+        assert not report.identical
+        assert report.first.field == "miss_ids"
+        assert (report.first.step, report.first.pe) == (5, 1)
+
+    def test_ragged_length_drift_located(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        b.arrays["remote_flat"] = b.arrays["remote_flat"][:-1]
+        b.arrays["remote_offsets"][-1] -= 1
+        report = diff_traces(a, b)
+        assert not report.identical
+        assert report.first.field == "remote.len"
+
+    def test_pair_matrix_drift_located(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        b.arrays["miss_pairs"][2, 1, 0] += 1
+        report = diff_traces(a, b)
+        assert report.first.field == "miss_pairs"
+        assert (report.first.step, report.first.pe) == (2, 1)
+
+    def test_nan_equals_nan(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        a.arrays["occupancy_pre"][0, 0] = np.nan
+        b.arrays["occupancy_pre"][0, 0] = np.nan
+        assert diff_traces(a, b).identical
+
+    def test_config_mismatch_is_informational(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        b.manifest["config"] = {**a.config, "runtime": "legacy"}
+        report = diff_traces(a, b)
+        assert report.identical
+        assert any("runtime" in note for note in report.config_mismatches)
+
+    def test_report_json_shape(self):
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        b.arrays["decisions"][0, 0] = ~b.arrays["decisions"][0, 0]
+        payload = diff_traces(a, b).to_json()
+        assert payload["identical"] is False
+        assert payload["divergences"][0]["field"] == "decisions"
+        import json
+
+        json.dumps(payload)  # must be JSON-serializable
+
+
+class TestReplayAdapters:
+    @pytest.mark.parametrize("variant", ["massivegnn", "rudder"])
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_decision_plane_replay(self, variant, mode):
+        """Fresh controllers under the recorded metric stream reproduce
+        the recorded decision/stall streams exactly."""
+        trace = _trace_of(variant, mode)
+        trainer = build_trainer({**CONFIG, "variant": variant, "mode": mode})
+        report = replay_decisions_report(trace, trainer.controllers)
+        assert report.identical, report.render()
+
+    @pytest.mark.parametrize("time_engine", ["closed_form", "event"])
+    def test_time_engine_replay(self, time_engine):
+        trace = _trace_of("fixed", "async", time_engine=time_engine)
+        trainer = build_trainer(
+            {**CONFIG, "variant": "fixed", "time_engine": time_engine}
+        )
+        report = replay_time_engine_report(trace, trainer.make_time_engine())
+        assert report.identical, report.render()
+
+    def test_time_replay_detects_model_change(self):
+        """A changed time model shows up as a located step_time drift."""
+        from repro.gnn.train import TimeModel
+        from repro.sim import make_time_engine
+
+        trace = _trace_of("fixed")
+        engine = make_time_engine(
+            "closed_form",
+            tm=TimeModel(t_ddp=0.051),  # perturbed compute constant
+            mode="async",
+            inference_cost=np.zeros(trace.num_pes),
+            feature_dim=trace.manifest["feature_dim"],
+            num_pes=trace.num_pes,
+        )
+        report = replay_time_engine_report(trace, engine)
+        assert not report.identical
+        assert report.first.field == "step_time"
+
+    def test_pairs_required_when_engine_needs_them(self):
+        from repro.trace.replay import replay_time_engine
+
+        trace = _trace_of("fixed")
+        stripped = Trace(
+            manifest=dict(trace.manifest),
+            arrays={
+                k: v for k, v in trace.arrays.items()
+                if k not in ("miss_pairs", "repl_pairs")
+            },
+        )
+
+        class NeedsPairs:
+            needs_pairs = True
+
+        with pytest.raises(ValueError, match="pairs"):
+            replay_time_engine(stripped, NeedsPairs())
+
+
+class TestRecorderValidation:
+    def _step_args(self, P, **overrides):
+        ids = [np.arange(2) for _ in range(P)]
+        args = dict(
+            seeds=ids, remote=ids, missed=ids, placed=ids,
+            decisions=[True] * P, stalls=[0.0] * P, pct_hits=[0.0] * P,
+            hits=[0] * P, n_remote=[2] * P, replaced=[0] * P,
+            total_comm=[2] * P, occupancy_pre=[0.0] * P,
+            occupancy_post=[0.0] * P, step_times=[0.1] * P,
+        )
+        args.update(overrides)
+        return args
+
+    def test_shape_mismatch_rejected(self):
+        rec = TraceRecorder(num_pes=2)
+        with pytest.raises(ValueError, match="per-PE"):
+            rec.record_step(**self._step_args(2, seeds=[np.arange(2)]))
+
+    def test_rejected_step_leaves_recorder_unchanged(self):
+        """A failed record_step must not corrupt step/segment alignment:
+        catch-and-retry after a bad call yields a consistent trace."""
+        rec = TraceRecorder(num_pes=2)
+        with pytest.raises(ValueError):
+            rec.record_step(**self._step_args(2, stalls=[0.0]))  # bad dense
+        rec.record_step(**self._step_args(2))  # retry with fixed args
+        trace = rec.finalize([0.1])
+        assert trace.validate() == []
+        assert trace.num_steps == 1
+        assert trace.arrays["seeds_offsets"].shape == (3,)
+
+    def test_double_finalize_rejected(self):
+        rec = TraceRecorder(num_pes=1)
+        rec.finalize([])
+        with pytest.raises(RuntimeError):
+            rec.finalize([])
+
+
+class TestSweepTraceAxis:
+    def test_sweep_records_replayable_cell_traces(self, tmp_path):
+        from repro.runtime import default_grid, run_sweep
+
+        grid = default_grid(
+            num_parts=(2,), batch_sizes=(8,), fanouts=((3, 5),),
+            variants=("fixed",), epochs=2,
+        )
+        rows = run_sweep(grid, scale=0.05, trace_dir=str(tmp_path))
+        assert len(rows) == 1 and "trace" in rows[0]
+        trace = load_trace(str(tmp_path / rows[0]["trace"]))
+        # The recorded cell re-records identically from its own manifest.
+        fresh = record_trace(trace.config)
+        assert diff_traces(trace, fresh).identical
+        # Sweep metrics agree with the trace's own streams.
+        assert rows[0]["total_comm"] == int(trace.arrays["total_comm"].sum())
+
+    def test_sweep_cells_replayable_across_axes(self, tmp_path):
+        """Sweep and CLI share one cell builder, so manifests written on
+        non-default axes (adaptive controller, topology) round-trip too."""
+        from repro.runtime import SweepConfig, run_sweep
+
+        grid = [
+            SweepConfig(
+                variant="rudder", num_parts=2, batch_size=8,
+                fanouts=(3, 5), epochs=2, interval=4, topology="rack",
+            )
+        ]
+        rows = run_sweep(grid, scale=0.05, trace_dir=str(tmp_path))
+        trace = load_trace(str(tmp_path / rows[0]["trace"]))
+        fresh = record_trace(trace.config)
+        report = diff_traces(trace, fresh)
+        assert report.identical, report.render()
+
+    def test_trainer_derived_config_not_cli_replayable(self, tmp_path, capsys):
+        """DistributedTrainer(trace=True) manifests cannot rebuild the
+        trainer (scale/seed/deciders unrecoverable) — the CLI must refuse
+        rather than silently replaying the wrong configuration."""
+        trace = _trace_of("fixed")  # CLI-recorded: replayable
+        assert trace.config.get("replayable", True)
+        g = generate("products", seed=0, scale=0.05)
+        parts = partition_graph(g, 2)
+        t = DistributedTrainer(
+            parts, variant="fixed", epochs=1, batch_size=8, fanouts=(3, 5),
+            train_model=False, trace=True,
+        )
+        t.run()
+        assert t.last_trace.config["replayable"] is False
+        save_trace(t.last_trace, str(tmp_path / "live"))
+        assert trace_main(["replay", str(tmp_path / "live")]) == 2
+        assert "not replayable" in capsys.readouterr().err
+        # verify treats it as a problem, not a crash
+        assert trace_main(["verify", str(tmp_path)]) == 1
+        capsys.readouterr()
+
+
+class TestCLI:
+    def test_record_replay_diff_verify(self, tmp_path, capsys):
+        out = str(tmp_path / "cli")
+        args = [
+            "record", "--out", out, "--scale", "0.05", "--num-parts", "2",
+            "--batch-size", "8", "--fanouts", "3,5", "--epochs", "2",
+            "--variant", "fixed",
+        ]
+        assert trace_main(args) == 0
+        assert trace_main(["replay", out + ".npz"]) == 0
+        assert trace_main(["replay", out, "--plane", "decision"]) == 0
+        assert trace_main(["replay", out, "--plane", "time",
+                           "--runtime", "legacy"]) == 0
+        report = str(tmp_path / "report.json")
+        assert trace_main(["diff", out, out + ".json", "--json", report]) == 0
+        assert os.path.exists(report)
+        assert trace_main(["verify", str(tmp_path)]) == 0
+        capsys.readouterr()
+
+    def test_diff_nonzero_exit_on_drift(self, tmp_path, capsys):
+        trace = _trace_of("fixed")
+        save_trace(trace, str(tmp_path / "a"))
+        drifted = Trace(
+            manifest=dict(trace.manifest),
+            arrays={k: v.copy() for k, v in trace.arrays.items()},
+        )
+        drifted.arrays["total_comm"][4, 0] += 1
+        save_trace(drifted, str(tmp_path / "b"))
+        assert trace_main([
+            "diff", str(tmp_path / "a"), str(tmp_path / "b"),
+        ]) == 1
+        out = capsys.readouterr().out
+        assert "total_comm" in out and "step=4" in out

@@ -1,0 +1,156 @@
+"""Golden-trace conformance: committed traces pin the exact streams.
+
+Every golden under ``tests/golden/`` (four controller variants x
+async/sync, recorded by ``tests/golden/regenerate.py``) is re-recorded
+from its own manifest config and diffed **bit-exactly** against the
+committed artifact. Any change to sampling order, buffer semantics,
+decision protocol or the time model that is not accompanied by an
+intentional golden regeneration fails here — and in CI's
+``python -m repro.trace verify tests/golden`` drift gate — with a
+first-divergence report naming the field, step and PE that moved.
+
+The negative tests pin the gate's teeth: an intentionally injected
+one-value drift must fail the diff, the verify CLI, and the digest
+check at load time.
+"""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.trace import Trace, diff_traces, load_trace, save_trace
+from repro.trace.cli import main as trace_main, record_trace
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_NAMES = sorted(
+    os.path.splitext(os.path.basename(p))[0]
+    for p in glob.glob(os.path.join(GOLDEN_DIR, "*.npz"))
+)
+
+
+def test_golden_set_is_complete():
+    """Four §5 controller variants x async/sync, committed."""
+    assert GOLDEN_NAMES == sorted(
+        f"{variant}_{mode}"
+        for variant in ("distdgl", "fixed", "massivegnn", "rudder")
+        for mode in ("async", "sync")
+    )
+
+
+@pytest.mark.parametrize("name", GOLDEN_NAMES)
+def test_golden_conformance(name):
+    """Re-record from the committed manifest config -> bit-identical."""
+    golden = load_trace(os.path.join(GOLDEN_DIR, name))
+    fresh = record_trace(golden.config)
+    report = diff_traces(golden, fresh)
+    assert report.identical, f"{name} drifted:\n{report.render()}"
+    assert golden.digest() == fresh.digest()
+
+
+@pytest.mark.parametrize("runtime", ["vectorized", "legacy"])
+def test_golden_conformance_both_runtimes(runtime):
+    """One golden re-recorded per runtime (full 4x2 cross-runtime parity
+    is ``tests/test_trace.py::TestCaptureRoundTrip``)."""
+    golden = load_trace(os.path.join(GOLDEN_DIR, "rudder_sync"))
+    fresh = record_trace(golden.config, runtime=runtime)
+    assert diff_traces(golden, fresh).identical
+
+
+class TestInjectedDrift:
+    """Negative tests: the gate must fail on a one-value drift."""
+
+    def _perturbed(self, name="fixed_async", field="step_time",
+                   where=(3, 1), delta=1e-9) -> Trace:
+        golden = load_trace(os.path.join(GOLDEN_DIR, name))
+        bad = Trace(
+            manifest=dict(golden.manifest),
+            arrays={k: v.copy() for k, v in golden.arrays.items()},
+        )
+        bad.arrays[field][where] = bad.arrays[field][where] + delta
+        return bad
+
+    def test_diff_detects_one_value_drift(self):
+        golden = load_trace(os.path.join(GOLDEN_DIR, "fixed_async"))
+        report = diff_traces(golden, self._perturbed())
+        assert not report.identical
+        first = report.first
+        assert (first.field, first.step, first.pe) == ("step_time", 3, 1)
+
+    def test_verify_cli_fails_on_drifted_golden(self, tmp_path, capsys):
+        """The CI drift gate: a re-saved perturbed golden must fail
+        ``trace verify`` with a located report in the JSON artifact."""
+        bad = self._perturbed(field="miss", where=(2, 0), delta=1)
+        save_trace(bad, str(tmp_path / "fixed_async"))
+        report_path = str(tmp_path / "report.json")
+        assert trace_main(["verify", str(tmp_path), "--json", report_path]) == 1
+        capsys.readouterr()
+        import json
+
+        with open(report_path) as fh:
+            payload = json.load(fh)
+        assert payload["identical"] is False
+        div = payload["traces"]["fixed_async.json"]["divergences"][0]
+        assert div["field"] == "miss" and div["step"] == 2 and div["pe"] == 0
+
+    def test_verify_fails_on_missing_payload(self, tmp_path, capsys):
+        """An orphan manifest (npz deleted, manifest committed) must fail
+        the gate — a missing conformance anchor is not a success."""
+        import shutil
+
+        shutil.copy(
+            os.path.join(GOLDEN_DIR, "fixed_async.json"),
+            str(tmp_path / "fixed_async.json"),
+        )
+        assert trace_main(["verify", str(tmp_path)]) == 1
+        out = capsys.readouterr().out
+        assert "missing" in out
+
+    def test_digest_rejects_tampered_payload(self, tmp_path):
+        """Editing the npz without regenerating the manifest fails at
+        load time (the committed-artifact integrity check)."""
+        import shutil
+
+        for ext in (".npz", ".json"):
+            shutil.copy(
+                os.path.join(GOLDEN_DIR, "fixed_async" + ext),
+                str(tmp_path / ("fixed_async" + ext)),
+            )
+        bad = self._perturbed()
+        np.savez_compressed(str(tmp_path / "fixed_async.npz"), **bad.arrays)
+        with pytest.raises(ValueError, match="digest"):
+            load_trace(str(tmp_path / "fixed_async"))
+
+
+class TestGoldenSemantics:
+    """Sanity on what the committed set pins."""
+
+    def test_rudder_async_sync_differ(self):
+        """Adaptive controllers pay inference in sync mode — the golden
+        pair must actually capture that separation."""
+        a = load_trace(os.path.join(GOLDEN_DIR, "rudder_async"))
+        s = load_trace(os.path.join(GOLDEN_DIR, "rudder_sync"))
+        assert a.digest() != s.digest()
+        report = diff_traces(a, s)
+        diverged = {d.field for d in report.divergences}
+        # Sync pays stalls and lands decisions at different ticks, which
+        # moves replacement rounds and therefore the miss stream too.
+        assert {"step_time", "decisions"} <= diverged
+        # Sampling is upstream of the decision plane: seeds and remote
+        # frontiers must be mode-invariant.
+        assert not {"seeds", "seeds.len", "remote", "remote.len",
+                    "n_remote"} & diverged
+
+    def test_heuristic_goldens_mode_invariant(self):
+        """Non-adaptive variants pay no inference: async == sync."""
+        for variant in ("distdgl", "fixed", "massivegnn"):
+            a = load_trace(os.path.join(GOLDEN_DIR, f"{variant}_async"))
+            s = load_trace(os.path.join(GOLDEN_DIR, f"{variant}_sync"))
+            assert a.digest() == s.digest(), variant
+
+    def test_goldens_are_small(self):
+        """Committed artifacts stay reviewable (< 32 KiB each)."""
+        for name in GOLDEN_NAMES:
+            size = os.path.getsize(os.path.join(GOLDEN_DIR, name + ".npz"))
+            assert size < 32 * 1024, f"{name}: {size} bytes"
