@@ -5,12 +5,20 @@ blocks are sized in the kernel files) plus the batched sampling plane.
 Standalone usage::
 
     PYTHONPATH=src python -m benchmarks.kernels_micro [--quick] [--json=PATH]
+    PYTHONPATH=src python -m benchmarks.kernels_micro --store --quick --gate
 
 ``--quick`` is the CI smoke leg: fewer iterations and the cheap kernels
 only (it still covers ``frontier_unique_batch`` and reports the
 sampler-plane speedup — the gating assert on that speedup lives in
 ``tests/test_sampler_plane.py``). ``--json`` writes a machine-readable
 artifact uploaded by CI next to ``BENCH_sweep.json``.
+
+``--store`` benchmarks the feature-store data plane instead: batched
+``FeatureStore.gather_batch`` GB/s against a per-PE, per-home python
+pull loop (the DistDGL KVStore shape) at P=8, the Pallas-kernel gather
+path, and the measured-vs-modeled step-time delta of a small
+store-enabled run (the CI ``BENCH_store.json`` artifact). ``--gate``
+exits non-zero when any emitted row is empty or non-finite.
 """
 
 import json
@@ -86,6 +94,102 @@ def _sampler_plane_speedup(iters: int = 5) -> None:
     )
 
 
+def _store_gather_speedup(iters: int = 5, quick: bool = False) -> None:
+    """The store-plane claim: one batched multi-PE gather beats the
+    per-PE, per-home python pull loop (one slice per (trainer, home)
+    pair — the RPC shape a DistDGL KVStore services) at P=8."""
+    from repro.graph import generate, partition_graph
+    from repro.store import FeatureStore
+
+    P, M = 8, 1024 if quick else 4096
+    g = generate("products", seed=0, scale=0.25)
+    parts = partition_graph(g, P)
+    store = FeatureStore.for_partitions(parts)
+    rng = np.random.default_rng(7)
+    reqs = [
+        rng.choice(g.num_nodes, size=M, replace=True).astype(np.int64)
+        for _ in range(P)
+    ]
+    shards = store.shards
+    locs = [store._loc[ids] for ids in reqs]
+
+    def run_loop():
+        out = []
+        for rows in locs:
+            home = rows // store.n_max
+            local = rows - home * store.n_max
+            block = np.empty((len(rows), store.feature_dim), np.float32)
+            for k in range(store.num_parts):
+                mask = home == k
+                block[mask] = shards[k][local[mask]]
+            out.append(block)
+        return out
+
+    t_loop = _best_of(run_loop, iters)
+    t_batch = _best_of(lambda: store.gather_batch(reqs), iters)
+    nbytes = store.gather_batch(reqs).nbytes
+    gbps = nbytes / t_batch / 1e9 if t_batch > 0 else float("inf")
+    speedup = t_loop / t_batch if t_batch > 0 else float("inf")
+    _emit(
+        f"store_gather_batch_p{P}_m{M}",
+        t_batch * 1e6,
+        f"loop_us={t_loop * 1e6:.1f} speedup={speedup:.2f}x gbps={gbps:.2f}",
+    )
+
+    # Pallas batch-gather path: interpret mode makes per-element cost
+    # dominant, so the request is kept small (correctness-path timing,
+    # like every kernel row here — not TPU performance).
+    Mk = 64 if quick else 256
+    reqs_k = [ids[:Mk] for ids in reqs]
+    kstore = FeatureStore.for_partitions(parts, use_kernel=True)
+    kstore.gather_batch(reqs_k)  # compile/warm the Pallas path
+    t_kernel = _best_of(lambda: kstore.gather_batch(reqs_k), 2)
+    knbytes = kstore.gather_batch(reqs_k).nbytes
+    kgbps = knbytes / t_kernel / 1e9 if t_kernel > 0 else float("inf")
+    _emit(
+        f"store_gather_kernel_p{P}_m{Mk}",
+        t_kernel * 1e6,
+        f"interpret=True gbps={kgbps:.4f}",
+    )
+
+
+def _store_step_time_delta(quick: bool = False) -> None:
+    """Measured-vs-modeled step time: a small store-enabled run's
+    wall-clock gather seconds next to the §4.5.3 modeled run time —
+    with the store on, step_time stays modeled (deterministic) and the
+    measurement lands in the trace's ``fetch_time_measured`` field."""
+    from repro.gnn.train import DistributedTrainer
+    from repro.graph import generate, partition_graph
+
+    g = generate("products", seed=0, scale=0.05)
+    parts = partition_graph(g, 2)
+    result = DistributedTrainer(
+        parts,
+        variant="fixed",
+        batch_size=8,
+        fanouts=(3, 5),
+        epochs=1 if quick else 2,
+        train_model=False,
+        feature_store=True,
+    ).run()
+    modeled = float(sum(result.epoch_times))
+    measured = float(result.total_fetch_seconds)
+    _emit(
+        "store_step_time_measured_vs_modeled",
+        measured * 1e6,
+        f"modeled_s={modeled:.4f} measured_s={measured:.6f} "
+        f"delta_s={measured - modeled:.4f} "
+        f"bytes_measured={result.total_bytes_measured}",
+    )
+
+
+def run_store(quick: bool = False):
+    _ROWS.clear()
+    _store_gather_speedup(iters=3 if quick else 5, quick=quick)
+    _store_step_time_delta(quick=quick)
+    return True
+
+
 def run(quick: bool = False):
     _ROWS.clear()
     iters = 2 if quick else 5
@@ -137,19 +241,50 @@ def run(quick: bool = False):
     return True
 
 
+def validate_rows(rows: list[dict]) -> list[str]:
+    """The ``--gate`` check: no empty artifact, no NaN/non-finite row."""
+    import math
+
+    if not rows:
+        return ["benchmark produced 0 rows"]
+    problems = []
+    for row in rows:
+        name = row.get("name") or "<unnamed>"
+        if not row.get("name"):
+            problems.append(f"{name}: missing name")
+        if not row.get("derived"):
+            problems.append(f"{name}: empty derived column")
+        us = row.get("us_per_call")
+        if us is None or not math.isfinite(float(us)):
+            problems.append(f"{name}: us_per_call not finite ({us})")
+    return problems
+
+
 def main(argv: list[str]) -> int:
     quick = "--quick" in argv
+    store = "--store" in argv
+    gate = "--gate" in argv
     json_path = None
     for arg in argv:
         if arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
-    run(quick=quick)
+    if store:
+        run_store(quick=quick)
+    else:
+        run(quick=quick)
     if json_path:
-        payload = {"schema": 1, "quick": quick, "rows": _ROWS}
+        payload = {"schema": 1, "quick": quick, "store": store, "rows": _ROWS}
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=1, sort_keys=True)
             fh.write("\n")
         print(f"# kernels-micro artifact written to {json_path}", file=sys.stderr)
+    if gate:
+        problems = validate_rows(_ROWS)
+        if problems:
+            for problem in problems:
+                print(f"# GATE FAIL: {problem}", file=sys.stderr)
+            return 1
+        print(f"# gate: {len(_ROWS)} rows sound", file=sys.stderr)
     return 0
 
 

@@ -31,6 +31,11 @@ label (e.g. ``--sweep p4 massivegnn``). Sweep options:
   and seeded jitter; max–min fair home-egress sharing and transient
   degradation). Scenario cells are generated for event-engine cells
   only — the closed form cannot express them;
+* ``--feature-store`` — serve every cell's miss/placement streams from
+  the sharded ``repro.store.FeatureStore`` data plane (real gathers;
+  rows gain measured ``bytes_measured``/``bytes_modeled``/
+  ``fetch_seconds_measured`` columns while the decision/byte streams
+  stay bit-identical to the modeled path);
 * ``--quick`` — shrink the grid (1 partition count x 1 batch x 1
   fanout, 2 epochs) for the CI smoke legs;
 * ``--json=PATH`` — additionally write the deterministic sweep artifact
@@ -108,6 +113,7 @@ def run_sweep_cli(selected: list[str]) -> int:
     json_path = None
     gate = False
     quick = False
+    feature_store = False
     trace_dir = None
     terms = []
     for arg in selected:
@@ -142,6 +148,8 @@ def run_sweep_cli(selected: list[str]) -> int:
                 return 2
         elif arg == "--quick":
             quick = True
+        elif arg == "--feature-store":
+            feature_store = True
         elif arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
         elif arg.startswith("--trace="):
@@ -174,6 +182,7 @@ def run_sweep_cli(selected: list[str]) -> int:
         time_engines=time_engines,
         stragglers=stragglers,
         congestions=congestions,
+        feature_store=feature_store,
         **shrink,
     )
     if terms:

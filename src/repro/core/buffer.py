@@ -207,6 +207,22 @@ class PersistentBuffer:
         self.stats.replacement_rounds += 1
         return n
 
+    def fill_rows(self, node_ids: np.ndarray, rows: np.ndarray) -> None:
+        """Set the feature payload of already-resident ``node_ids``.
+
+        The feature-store legacy path fills admissions *after* a
+        ``replace``/``insert`` round via ``last_placed`` — slot-accurate
+        by construction, unlike passing ``features=`` into ``replace``
+        (which aligns rows with the pre-dedup candidate list).
+        """
+        if self.features is None:
+            raise ValueError("buffer has no feature payload (feature_dim=0)")
+        node_ids = np.asarray(node_ids, dtype=np.int64)
+        if len(node_ids) != len(rows):
+            raise ValueError(f"{len(node_ids)} ids != {len(rows)} rows")
+        for i, node in enumerate(node_ids):
+            self.features[self._slot_of[int(node)]] = rows[i]
+
     def _place(
         self, slots: np.ndarray, ids: np.ndarray, features: np.ndarray | None
     ) -> None:

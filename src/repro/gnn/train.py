@@ -155,6 +155,14 @@ class TrainerLog:
     replaced: list[int] = field(default_factory=list)
     decisions: list[bool] = field(default_factory=list)
     step_time: list[float] = field(default_factory=list)
+    # Feature-store streams (populated only when the store is enabled):
+    # bytes the store actually moved vs the §4.5.3 accounting bytes, the
+    # measured wall-clock of the step's gathers, and the
+    # content-sensitive float64 sum of the delivered remote block.
+    bytes_measured: list[int] = field(default_factory=list)
+    bytes_modeled: list[int] = field(default_factory=list)
+    fetch_seconds: list[float] = field(default_factory=list)
+    feat_sums: list[float] = field(default_factory=list)
 
 
 @dataclass
@@ -209,6 +217,23 @@ class RunResult:
         vals = [c for log in self.logs for c in log.comm_volume]
         return float(np.percentile(vals, 99)) if vals else float("nan")
 
+    # ---- feature-store aggregates (0 / NaN when the store was off) ---- #
+    @property
+    def total_bytes_measured(self) -> int:
+        return int(sum(sum(log.bytes_measured) for log in self.logs))
+
+    @property
+    def total_bytes_modeled(self) -> int:
+        return int(sum(sum(log.bytes_modeled) for log in self.logs))
+
+    @property
+    def total_fetch_seconds(self) -> float:
+        """Measured wall-clock spent in store gathers (cluster steps sum
+        the per-step maximum across PEs, like epoch_times does)."""
+        per_step = zip(*(log.fetch_seconds for log in self.logs))
+        vals = [max(step) for step in per_step]
+        return float(sum(vals)) if vals else float("nan")
+
 
 class DistributedTrainer:
     """One experiment: (graph, partitioning, variant, controller, buffer)."""
@@ -238,6 +263,7 @@ class DistributedTrainer:
         congestion: str | CongestionModel | None = None,
         sim=None,
         trace: object = False,
+        feature_store: object = False,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -308,6 +334,22 @@ class DistributedTrainer:
         # config). The finished Trace lands on self.last_trace.
         self.trace = trace
         self.last_trace = None
+        # Feature-store data plane (repro.store): False/None = modeled
+        # bytes only; True = build a store over this graph's partitioned
+        # features; a FeatureStore instance is used as-is. With the
+        # store on, buffers and engine carry a real feature payload and
+        # both runtimes move the bytes the accounting counts — without
+        # changing any exact stream (the conformance contract of
+        # tests/test_trace_golden.py).
+        self.feature_store = None
+        if feature_store:
+            from ..store import FeatureStore
+
+            self.feature_store = (
+                feature_store
+                if isinstance(feature_store, FeatureStore)
+                else FeatureStore.for_partitions(parts)
+            )
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanouts)
         # Batched twin of the per-PE sampler: all P trainers' minibatches
@@ -348,9 +390,13 @@ class DistributedTrainer:
             if self.policy.use_weights
             else None
         )
+        payload_dim = (
+            self.graph.features.shape[1] if self.feature_store is not None else 0
+        )
         self.buffers = [
             PersistentBuffer(
                 capacity=max(int(len(self.halos[p]) * buffer_frac), 1),
+                feature_dim=payload_dim,
                 policy=self.policy,
                 node_weights=node_weights,
             )
@@ -361,6 +407,7 @@ class DistributedTrainer:
             [b.capacity for b in self.buffers],
             policy=self.policy,
             node_weights=node_weights,
+            feature_dim=payload_dim,
         )
 
         # Controllers (one per trainer, as in the paper: each trainer has
@@ -390,8 +437,15 @@ class DistributedTrainer:
             for p in range(P):
                 halo = self.halos[p]
                 top = halo[np.argsort(-deg[halo])][: self.buffers[p].capacity]
-                self.buffers[p].insert(top)
+                n = self.buffers[p].insert(top)
                 self.engine.insert(p, top)
+                if self.feature_store is not None and n:
+                    # Warm-started admissions place real rows too (top is
+                    # unique and the buffer empty, so exactly top[:n]
+                    # landed, in order, in both twins).
+                    rows = self.feature_store.gather(top[:n])
+                    self.buffers[p].fill_rows(top[:n], rows)
+                    self.engine.place_rows(p, self.engine.last_slots[p], rows)
 
         self.local_train = [parts.local_train_nodes(p) for p in range(P)]
         self.mb_per_epoch = max(
@@ -427,6 +481,17 @@ class DistributedTrainer:
         return t[idx]
 
     def _features_of(self, minibatch: MiniBatch):
+        if self.feature_store is not None:
+            # The training step consumes actual store rows (bit-identical
+            # to graph.features rows — the store only re-homes them).
+            store = self.feature_store
+            x_seed = store.gather(minibatch.seeds)
+            x_n1 = store.gather(minibatch.layer_nbrs[0])
+            b, f1 = minibatch.layer_nbrs[0].shape
+            x_n2 = store.gather(minibatch.layer_nbrs[1]).reshape(
+                b, f1, -1, store.feature_dim
+            )
+            return x_seed, x_n1, x_n2
         f = self.graph.features
         x_seed = f[minibatch.seeds]
         x_n1 = f[minibatch.layer_nbrs[0]]
@@ -526,6 +591,10 @@ class DistributedTrainer:
                 remote_sets: list[np.ndarray] = []
                 hit_counts: list[int] = []
                 occ_pre: list[float] = []
+                # Feature-store per-PE captures (hit rows must be read at
+                # lookup time — replacement may overwrite their slots).
+                hit_mask_sets: list[np.ndarray] = []
+                hit_row_sets: list[np.ndarray] = []
                 for p in range(P):
                     ctrl = self.controllers[p]
                     buf = self.buffers[p]
@@ -536,17 +605,29 @@ class DistributedTrainer:
                     )
                     n_remote = len(remote)
 
+                    slots = None
                     if ctrl.uses_buffer and buf.capacity > 0:
-                        hit_mask, _ = buf.lookup(remote)
+                        hit_mask, slots = buf.lookup(remote)
                         missed = remote[~hit_mask]
                         hits = int(hit_mask.sum())
                         pct_hits = (
                             100.0 * hits / n_remote if n_remote else 100.0
                         )
                     else:
+                        hit_mask = np.zeros(n_remote, dtype=bool)
                         missed = remote
                         hits = 0
                         pct_hits = 0.0
+                    if self.feature_store is not None:
+                        hit_mask_sets.append(hit_mask)
+                        hit_row_sets.append(
+                            buf.features[slots[hit_mask]]
+                            if slots is not None
+                            else np.zeros(
+                                (0, self.feature_store.feature_dim),
+                                dtype=np.float32,
+                            )
+                        )
                     if recorder is not None:
                         seed_sets.append(batch)
                         remote_sets.append(remote)
@@ -631,6 +712,50 @@ class DistributedTrainer:
                 for p in range(P):
                     logs[p].step_time.append(float(step_times[p]))
                 epoch_time += float(step_times.max())
+
+                # Feature-store data plane: serve the exact miss/placement
+                # streams with real gathers (mirrors FetchStage.commit's
+                # _serve_features — two batched gathers after the PE loop,
+                # hit rows already captured at lookup time above).
+                store_kwargs: dict = {}
+                if self.feature_store is not None:
+                    store = self.feature_store
+                    F = store.feature_dim
+                    miss_g = store.gather_batch(missed_sets)
+                    placed_g = store.gather_batch(placed_sets)
+                    fetch_seconds = miss_g.seconds + placed_g.seconds
+                    feat_sums = np.zeros(P, dtype=np.float64)
+                    bytes_measured = np.zeros(P, dtype=np.int64)
+                    bytes_modeled = np.zeros(P, dtype=np.int64)
+                    for p in range(P):
+                        if len(placed_sets[p]):
+                            self.buffers[p].fill_rows(
+                                placed_sets[p], placed_g.blocks[p]
+                            )
+                        block = np.empty(
+                            (len(hit_mask_sets[p]), F), dtype=np.float32
+                        )
+                        block[hit_mask_sets[p]] = hit_row_sets[p]
+                        block[~hit_mask_sets[p]] = miss_g.blocks[p]
+                        feat_sums[p] = block.sum(dtype=np.float64)
+                        bytes_measured[p] = (
+                            miss_g.blocks[p].nbytes + placed_g.blocks[p].nbytes
+                        )
+                        bytes_modeled[p] = (
+                            logs[p].comm_volume[-1] * F * self.tm.feature_bytes
+                        )
+                        logs[p].bytes_measured.append(int(bytes_measured[p]))
+                        logs[p].bytes_modeled.append(int(bytes_modeled[p]))
+                        logs[p].fetch_seconds.append(float(fetch_seconds))
+                        logs[p].feat_sums.append(float(feat_sums[p]))
+                    store_kwargs = dict(
+                        feat_sums=feat_sums,
+                        bytes_measured=bytes_measured,
+                        bytes_modeled=bytes_modeled,
+                        fetch_time_measured=np.full(
+                            P, fetch_seconds, dtype=np.float64
+                        ),
+                    )
                 if recorder is not None:
                     recorder.record_step(
                         seeds=seed_sets,
@@ -648,6 +773,7 @@ class DistributedTrainer:
                         occupancy_post=[logs[p].occupancy[-1] for p in range(P)],
                         step_times=step_times,
                         controllers=self.controllers,
+                        **store_kwargs,
                     )
                 if self.train_model and grads_acc is not None:
                     grads_mean = jax.tree_util.tree_map(

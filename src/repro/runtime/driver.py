@@ -63,6 +63,8 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         trainer.graph.features.shape[1],
         trainer.mode,
         part_of=trainer.parts.part_of,
+        store=trainer.feature_store,
+        feature_bytes=trainer.tm.feature_bytes,
     )
 
     logs = [TrainerLog() for _ in range(P)]
@@ -108,8 +110,23 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                 logs[p].replaced.append(int(commit.replaced[p]))
                 logs[p].decisions.append(bool(decisions[p]))
                 logs[p].step_time.append(float(commit.step_time[p]))
+                if trainer.feature_store is not None:
+                    logs[p].bytes_measured.append(int(commit.bytes_measured[p]))
+                    logs[p].bytes_modeled.append(int(commit.bytes_modeled[p]))
+                    logs[p].fetch_seconds.append(float(commit.fetch_seconds))
+                    logs[p].feat_sums.append(float(commit.feat_sums[p]))
             epoch_time += float(commit.step_time.max())
 
+            store_kwargs: dict = {}
+            if trainer.feature_store is not None:
+                store_kwargs = dict(
+                    feat_sums=commit.feat_sums,
+                    bytes_measured=commit.bytes_measured,
+                    bytes_modeled=commit.bytes_modeled,
+                    fetch_time_measured=np.full(
+                        P, commit.fetch_seconds, dtype=np.float64
+                    ),
+                )
             if recorder is not None:
                 recorder.record_step(
                     seeds=[m.seeds for m in minibatches],
@@ -127,6 +144,7 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                     occupancy_post=commit.occupancy,
                     step_times=commit.step_time,
                     controllers=trainer.controllers,
+                    **store_kwargs,
                 )
 
             if trainer.train_model:

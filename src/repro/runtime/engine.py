@@ -83,6 +83,11 @@ class PrefetchEngine:
         Optional per-node access weights indexed by node id (the
         ``degree`` policy's input); resolved to per-slot weights at
         insertion time.
+    feature_dim:
+        If > 0, a dense feature payload ``(P, C, feature_dim)`` float32
+        rides alongside membership (the feature-store data plane:
+        admissions place real rows via :meth:`place_rows`, hits are
+        served from the payload). 0 keeps the engine id-only.
     """
 
     def __init__(
@@ -91,6 +96,7 @@ class PrefetchEngine:
         use_kernels: bool = False,
         policy: str | scoring.ScoringPolicy = "rudder",
         node_weights: np.ndarray | None = None,
+        feature_dim: int = 0,
     ):
         self.capacity = np.asarray(capacities, dtype=np.int64)
         if (self.capacity < 0).any():
@@ -111,6 +117,24 @@ class PrefetchEngine:
         # Nodes admitted by the most recent replace_round (per PE): the
         # topology cost model prices their fetch RPCs by home partition.
         self.last_placed: list[np.ndarray] = [
+            np.array([], dtype=np.int64) for _ in range(P)
+        ]
+        # Feature payload (feature-store data plane). last_hit_slots /
+        # last_slots let the fetch stage serve hit rows from the payload
+        # and fill newly admitted slots with real rows.
+        self.feature_dim = int(feature_dim)
+        self.payload = (
+            np.zeros((P, C, self.feature_dim), dtype=np.float32)
+            if self.feature_dim > 0
+            else None
+        )
+        #: Per-PE slots of the most recent lookup's hits, in query order.
+        self.last_hit_slots: list[np.ndarray] = [
+            np.array([], dtype=np.int64) for _ in range(P)
+        ]
+        #: Per-PE slots filled by the most recent placement round
+        #: (aligned with ``last_placed`` after ``replace_round``).
+        self.last_slots: list[np.ndarray] = [
             np.array([], dtype=np.int64) for _ in range(P)
         ]
 
@@ -185,8 +209,13 @@ class PrefetchEngine:
             else np.array([], dtype=np.int64)
         )
         hit, flat_slots = self._membership(queries, rows)
+        self.last_hit_slots = [np.array([], dtype=np.int64) for _ in range(P)]
         if hit.any():
             self.accessed.ravel()[flat_slots[hit]] = True
+            hit_rows = rows[hit]
+            hit_slots = flat_slots[hit] - hit_rows * self.max_capacity
+            for p in np.unique(hit_rows):
+                self.last_hit_slots[p] = hit_slots[hit_rows == p]
         self.stats.lookups += lengths
         hits_per_pe = np.bincount(rows[hit], minlength=P) if len(rows) else np.zeros(
             P, dtype=np.int64
@@ -268,6 +297,7 @@ class PrefetchEngine:
         P = self.num_pes
         replaced = np.zeros(P, dtype=np.int64)
         self.last_placed = [np.array([], dtype=np.int64) for _ in range(P)]
+        self.last_slots = [np.array([], dtype=np.int64) for _ in range(P)]
         todo = [p for p in range(P) if do_replace[p]]
         if not todo:
             return replaced
@@ -307,3 +337,22 @@ class PrefetchEngine:
             self.weights[p, slots] = self._node_weights[ids]
         self.valid[p, slots] = True
         self.accessed[p, slots] = False
+        self.last_slots[p] = np.asarray(slots, dtype=np.int64)
+
+    def place_rows(self, p: int, slots: np.ndarray, rows: np.ndarray) -> None:
+        """Fill PE p's payload slots with real feature rows (the
+        feature-store admission path: ids land via ``insert`` /
+        ``replace_round``, rows via the store gather that follows)."""
+        if self.payload is None:
+            raise ValueError("engine has no payload (feature_dim=0)")
+        if len(slots) != len(rows):
+            raise ValueError(f"{len(slots)} slots != {len(rows)} rows")
+        if len(slots):
+            self.payload[p, np.asarray(slots, dtype=np.int64)] = rows
+
+    def hit_rows(self, p: int) -> np.ndarray:
+        """Payload rows of the most recent lookup's hits for PE p, in
+        query order (empty ``(0, F)`` when the PE had no hits)."""
+        if self.payload is None:
+            raise ValueError("engine has no payload (feature_dim=0)")
+        return self.payload[p, self.last_hit_slots[p]]

@@ -28,7 +28,7 @@ and the Python hot path no longer widens with P.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -120,6 +120,22 @@ class CommitResult:
     #: them; the time engine already priced them via build_step_comm).
     missed: list[np.ndarray]  # this minibatch's miss fetches
     placed: list[np.ndarray]  # this round's replacement admissions
+    #: Feature-store outputs (None / zeros when the store is off).
+    #: ``features[p]`` is PE p's (n_remote, F) remote feature block in
+    #: sampled-remote order — hits served from the engine payload,
+    #: misses from the store gather: the actual rows the training step
+    #: consumes instead of modeled byte counts.
+    features: list[np.ndarray] | None = None
+    feat_sums: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.float64)
+    )                         # (P,) float64 — content-sensitive block sums
+    bytes_measured: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )                         # (P,) int64 — bytes the store actually moved
+    bytes_modeled: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )                         # (P,) int64 — §4.5.3 accounting bytes
+    fetch_seconds: float = 0.0  # wall-clock time of this step's gathers
 
 
 class FetchStage:
@@ -138,6 +154,16 @@ class FetchStage:
     simulator. The stage hands it the exact miss/replacement node sets
     (``engine.last_placed``) split by home partition when the engine
     asks (``needs_pairs``).
+
+    With a :class:`repro.store.FeatureStore` attached (``store=``), the
+    stage additionally *moves* the bytes the accounting counts: hit rows
+    come out of the engine payload (captured at probe time), miss and
+    admission rows come out of the store in one batched timed gather,
+    admissions fill the payload (``engine.place_rows``), and the commit
+    reports per-PE remote feature blocks plus measured-vs-modeled byte
+    and wall-clock streams. The store never alters the exact streams —
+    hit/miss/byte/decision payloads stay bit-identical to the modeled
+    path (the golden-trace conformance contract).
     """
 
     def __init__(
@@ -149,23 +175,34 @@ class FetchStage:
         feature_dim: int,
         mode: str,
         part_of: np.ndarray | None = None,
+        store=None,
+        feature_bytes: int = 4,
     ):
         if time_engine.needs_pairs and part_of is None:
             raise ValueError("per-home comm pricing needs part_of")
+        if store is not None and engine.payload is None:
+            raise ValueError(
+                "feature store needs an engine payload "
+                "(PrefetchEngine(feature_dim=...))"
+            )
         P = engine.num_pes
         self.engine = engine
         self.uses_buffer = uses_buffer
         self.inference_cost = inference_cost
         self.time_engine = time_engine
         self.feature_dim = feature_dim
+        self.feature_bytes = int(feature_bytes)
         self.mode = mode
         self.part_of = part_of
+        self.store = store
         self.active = uses_buffer & (engine.capacity > 0)
         self._capacity = engine.capacity.astype(np.float64)
         self._prev_missed: list[np.ndarray] = [
             np.array([], dtype=np.int64) for _ in range(P)
         ]
         self._missed: list[np.ndarray] | None = None
+        self._hit_masks: list[np.ndarray] | None = None
+        self._hit_rows: list[np.ndarray] | None = None
         self._last_replaced = np.zeros(P, dtype=np.int64)
         self._have_replaced = False
 
@@ -187,6 +224,13 @@ class FetchStage:
             0.0,
         )
         self._missed = missed
+        if self.store is not None:
+            # Hit rows must be captured now: the payload slots of this
+            # round's hits may be overwritten by commit()'s admissions.
+            self._hit_masks = hit_masks
+            self._hit_rows = [
+                self.engine.hit_rows(p) for p in range(self.engine.num_pes)
+            ]
         return ProbeResult(
             hit_masks=hit_masks,
             missed=missed,
@@ -223,7 +267,7 @@ class FetchStage:
             ),
             stalls,
         )
-        return CommitResult(
+        result = CommitResult(
             replaced=replaced,
             total_comm=total_comm,
             step_time=t,
@@ -231,3 +275,41 @@ class FetchStage:
             missed=missed,
             placed=list(engine.last_placed),
         )
+        if self.store is not None:
+            self._serve_features(result)
+        return result
+
+    def _serve_features(self, result: CommitResult) -> None:
+        """Move the bytes the accounting counted: one batched store
+        gather for every PE's misses, one for every PE's admissions
+        (which then fill the engine payload), and the per-PE remote
+        block assembly — hits from the probe-time payload capture,
+        misses from the store, in sampled-remote order."""
+        engine = self.engine
+        P = engine.num_pes
+        F = engine.feature_dim
+        miss_gather = self.store.gather_batch(result.missed)
+        placed_gather = self.store.gather_batch(engine.last_placed)
+        hit_masks, self._hit_masks = self._hit_masks, None
+        hit_rows, self._hit_rows = self._hit_rows, None
+        features: list[np.ndarray] = []
+        feat_sums = np.zeros(P, dtype=np.float64)
+        bytes_measured = np.zeros(P, dtype=np.int64)
+        for p in range(P):
+            if len(engine.last_placed[p]):
+                engine.place_rows(p, engine.last_slots[p], placed_gather.blocks[p])
+            block = np.empty((len(hit_masks[p]), F), dtype=np.float32)
+            block[hit_masks[p]] = hit_rows[p]
+            block[~hit_masks[p]] = miss_gather.blocks[p]
+            features.append(block)
+            feat_sums[p] = block.sum(dtype=np.float64)
+            bytes_measured[p] = (
+                miss_gather.blocks[p].nbytes + placed_gather.blocks[p].nbytes
+            )
+        result.features = features
+        result.feat_sums = feat_sums
+        result.bytes_measured = bytes_measured
+        result.bytes_modeled = (
+            result.total_comm * self.feature_dim * self.feature_bytes
+        )
+        result.fetch_seconds = miss_gather.seconds + placed_gather.seconds

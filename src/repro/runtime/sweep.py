@@ -51,6 +51,7 @@ class SweepConfig:
     time_engine: str = "closed_form"  # wall-clock model (repro.sim)
     stragglers: str = "none"   # straggler preset (event engine only)
     congestion: str = "none"   # congestion preset (event engine only)
+    feature_store: bool = False  # serve real features (measured data plane)
     seed: int = 0
 
     def label(self) -> str:
@@ -67,6 +68,8 @@ class SweepConfig:
             label += f"/s-{self.stragglers}"
         if self.congestion != "none":
             label += f"/c-{self.congestion}"
+        if self.feature_store:
+            label += "/store"
         return label
 
 
@@ -88,6 +91,7 @@ CONFIG_KEYS = (
     "time_engine",
     "stragglers",
     "congestion",
+    "feature_store",
     "seed",
 )
 
@@ -112,6 +116,7 @@ def default_grid(
     stragglers: tuple[str, ...] = ("none",),
     congestions: tuple[str, ...] = ("none",),
     epochs: int = 5,
+    feature_store: bool = False,
 ) -> list[SweepConfig]:
     """The stock grid: 16 cells (2 parts x 2 batch x 2 fanout x 2
     controller) by default; the ``policies`` axis multiplies it by the
@@ -138,6 +143,7 @@ def default_grid(
             time_engine=te,
             stragglers=s,
             congestion=c,
+            feature_store=feature_store,
             epochs=epochs,
         )
         for d in datasets
@@ -217,6 +223,12 @@ def run_sweep(
             name = f"{cfg.label()}-{cfg.mode}-s{cfg.seed}-{cell}".replace("/", "-")
             save_trace(trainer.last_trace, os.path.join(trace_dir, name))
             row["trace"] = f"{name}.npz"
+        if cfg.feature_store:
+            row.update(
+                bytes_measured=int(result.total_bytes_measured),
+                bytes_modeled=int(result.total_bytes_modeled),
+                fetch_seconds_measured=round(result.total_fetch_seconds, 6),
+            )
         row.update(
             label=cfg.label(),
             mean_pct_hits=round(result.mean_pct_hits, 2),

@@ -1,0 +1,27 @@
+"""Sharded feature-store data plane (the sixth plane).
+
+Until this package existed, remote feature fetches were *accounting
+entries*: the exact planes produced miss sets and byte counts, the
+simulation plane priced them, but no feature row ever moved. The
+:class:`FeatureStore` turns the simulator into a system — partitioned
+feature shards held as device arrays (partition-major layout, optionally
+sharded across this process's jax devices via the
+:mod:`repro.models.sharding` mesh machinery, with a host-local numpy
+fallback) service the batched miss sets coming out of
+:class:`repro.runtime.stage.FetchStage` with **real gathers**
+(:func:`repro.kernels.ops.gather_rows_batch` on the kernel path), and
+buffer admissions place **real rows** into the
+:class:`repro.runtime.PrefetchEngine` payload, not just ids.
+
+The load-bearing contract (``tests/test_feature_store.py``,
+``tests/test_trace_golden.py``): with the store enabled, the
+hit/miss/byte/decision streams are bit-identical to the modeled path —
+the store only *moves* the bytes the accounting already counted — while
+the trace gains measured fields (``bytes_measured`` vs
+``bytes_modeled``, wall-clock ``fetch_time_measured``, content-sensitive
+``feat_sums``). See ``docs/ARCHITECTURE.md`` §"FeatureStore plane".
+"""
+
+from .feature_store import FeatureStore, StoreGather
+
+__all__ = ["FeatureStore", "StoreGather"]

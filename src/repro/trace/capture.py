@@ -24,6 +24,7 @@ from .schema import (
     RAGGED_FIELDS,
     SCHEMA_VERSION,
     STEP_FIELDS,
+    STORE_FIELDS,
     Trace,
     normalize_ids,
 )
@@ -89,6 +90,7 @@ class TraceRecorder:
         self.variant = variant
         self._steps: list[dict] = []
         self._ragged: dict[str, list[np.ndarray]] = {n: [] for n in RAGGED_FIELDS}
+        self._has_store: bool | None = None  # set by the first record_step
         self._finalized = False
 
     # ------------------------------------------------------------------ #
@@ -151,8 +153,17 @@ class TraceRecorder:
         occupancy_post,
         step_times,
         controllers=None,
+        feat_sums=None,
+        bytes_measured=None,
+        bytes_modeled=None,
+        fetch_time_measured=None,
     ) -> None:
         """Record one minibatch: per-PE id lists + dense per-PE streams.
+
+        The feature-store measurement family (``feat_sums``,
+        ``bytes_measured``, ``bytes_modeled``, ``fetch_time_measured``)
+        is all-or-nothing — pass all four ``(P,)`` streams on every step
+        of a store-enabled run, or none on any step.
 
         Validates *every* argument before mutating any recorder state,
         so a rejected call leaves the recorder unchanged (a caller that
@@ -162,6 +173,21 @@ class TraceRecorder:
         if self._finalized:
             raise RuntimeError("recorder already finalized")
         P = self.num_pes
+        store_in = {
+            "feat_sums": feat_sums,
+            "bytes_measured": bytes_measured,
+            "bytes_modeled": bytes_modeled,
+            "fetch_time_measured": fetch_time_measured,
+        }
+        given = [n for n, v in store_in.items() if v is not None]
+        if given and len(given) != len(store_in):
+            missing = sorted(set(store_in) - set(given))
+            raise ValueError(f"partial store family: missing {missing}")
+        has_store = bool(given)
+        if self._has_store is not None and has_store != self._has_store:
+            raise ValueError(
+                "store fields must be recorded on every step or none"
+            )
         ragged_in = {
             "seeds": seeds,
             "remote": remote,
@@ -191,6 +217,9 @@ class TraceRecorder:
             "valid_responses": valid,
             "invalid_responses": invalid,
         }
+        if has_store:
+            for name, value in store_in.items():
+                row[name] = np.asarray(value, dtype=STORE_FIELDS[name])
         for name, arr in row.items():
             if arr.shape != (P,):
                 raise ValueError(f"{name}: shape {arr.shape} != ({P},)")
@@ -198,6 +227,7 @@ class TraceRecorder:
             row["miss_pairs"] = _pairs_of(missed, self.part_of, P)
             row["repl_pairs"] = _pairs_of(placed, self.part_of, P)
         # Everything validated — mutate atomically.
+        self._has_store = has_store
         for name, lists in ragged_in.items():
             self._ragged[name].extend(normalize_ids(x) for x in lists)
         self._steps.append(row)
@@ -223,6 +253,11 @@ class TraceRecorder:
                     if S
                     else np.zeros((0, P, P), dtype=np.int64)
                 ).astype(np.int64)
+        if self._has_store:
+            for name, dtype in STORE_FIELDS.items():
+                arrays[name] = np.stack(
+                    [row[name] for row in self._steps]
+                ).astype(dtype)
         for name, segments in self._ragged.items():
             lengths = np.array([len(s) for s in segments], dtype=np.int64)
             arrays[f"{name}_offsets"] = np.concatenate(
@@ -272,6 +307,7 @@ class TraceRecorder:
             "feature_bytes": self.feature_bytes,
             "id_dtype": str(np.dtype(ID_DTYPE)),
             "has_pairs": self.part_of is not None,
+            "feature_store": bool(self._has_store),
             "lanes": lanes,
             "kinds": kinds,
         }

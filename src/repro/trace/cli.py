@@ -29,7 +29,7 @@ import sys
 from .capture import TraceRecorder
 from .diff import DiffReport, diff_traces, write_report_json
 from .replay import replay_decisions_report, replay_time_engine_report
-from .schema import Trace
+from .schema import RAGGED_FIELDS, Trace
 from .store import load_trace, save_trace, trace_paths
 
 #: The replayable cell config: same axes as ``runtime.sweep.SweepConfig``
@@ -53,7 +53,17 @@ CONFIG_DEFAULTS: dict = {
     "congestion": "none",
     "seed": 0,
     "runtime": "vectorized",
+    "feature_store": False,
 }
+
+
+def _parse_bool(s: str) -> bool:
+    """argparse-safe bool: ``type=bool`` would make ``--x false`` True."""
+    if s.lower() in ("1", "true", "yes", "on"):
+        return True
+    if s.lower() in ("0", "false", "no", "off"):
+        return False
+    raise argparse.ArgumentTypeError(f"expected a boolean, got {s!r}")
 
 
 def build_trainer(config: dict, runtime: str | None = None, parts=None):
@@ -102,6 +112,7 @@ def build_trainer(config: dict, runtime: str | None = None, parts=None):
         train_model=False,
         seed=int(cfg["seed"]),
         runtime=runtime or cfg.get("runtime", "vectorized"),
+        feature_store=bool(cfg["feature_store"]),
     )
 
 
@@ -156,7 +167,28 @@ def cmd_replay(args) -> int:
         return 2
     if args.plane == "full":
         fresh = record_trace(config, runtime=args.runtime)
-        report = diff_traces(trace, fresh)
+        fields = None
+        if "fetch_time_measured" in trace.arrays:
+            # Store-enabled trace: the wall-clock measurement is
+            # nondeterministic by design (the one field excluded from
+            # Trace.exact_digest()), so a full replay compares every
+            # stream except it — otherwise replay could never come back
+            # identical.
+            ragged_keys = {
+                f"{n}_{s}"
+                for n in RAGGED_FIELDS
+                for s in ("flat", "offsets")
+            }
+            fields = sorted(
+                ((set(trace.arrays) | set(fresh.arrays)) - ragged_keys
+                 - {"fetch_time_measured"}) | set(RAGGED_FIELDS)
+            )
+            print(
+                "# note: fetch_time_measured (wall clock) excluded "
+                "from the replay diff",
+                file=sys.stderr,
+            )
+        report = diff_traces(trace, fresh, fields=fields)
     elif args.plane == "decision":
         trainer = build_trainer(config, runtime=args.runtime)
         report = replay_decisions_report(trace, trainer.controllers)
@@ -274,8 +306,8 @@ def make_parser() -> argparse.ArgumentParser:
         else:
             rec.add_argument(
                 f"--{key.replace('_', '-')}", dest=key,
-                type=type(default), default=None,
-                help=f"default {default!r}",
+                type=_parse_bool if isinstance(default, bool) else type(default),
+                default=None, help=f"default {default!r}",
             )
     rec.set_defaults(func=cmd_record)
 

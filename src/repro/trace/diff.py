@@ -121,10 +121,26 @@ def _first_divergence(
     )
 
 
+def _canonical_segments(flat: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Flat stream with every (step, pe) segment sorted ascending."""
+    seg = np.repeat(np.arange(len(lens), dtype=np.int64), lens)
+    return flat[np.lexsort((flat, seg))]
+
+
 def _diff_ragged(
     name: str, a: Trace, b: Trace, report: DiffReport
 ) -> None:
-    """Compare one ragged stream; locate divergence as (step, pe)."""
+    """Compare one ragged stream; locate divergence as (step, pe).
+
+    Id sets inside a segment are compared **canonically** (each segment
+    sorted) before element positions are blamed: two streams holding the
+    same ids in different orders used to report the first positional
+    mismatch as a content divergence — misleading, since the first
+    *genuinely different id* may sit steps later (or nowhere). Now an
+    order-only difference reports as ``<name>.order`` at the first
+    raw-mismatching segment, and a content difference is located in the
+    canonical stream, naming an id actually present in only one trace.
+    """
     P = a.num_pes
     off_a, off_b = a.arrays[f"{name}_offsets"], b.arrays[f"{name}_offsets"]
     flat_a, flat_b = a.arrays[f"{name}_flat"], b.arrays[f"{name}_flat"]
@@ -144,11 +160,24 @@ def _diff_ragged(
     eq = _exact_equal(flat_a, flat_b)
     if eq.all():
         return
-    flat = int(np.argmin(eq))
+    can_a = _canonical_segments(flat_a, lens_a)
+    can_b = _canonical_segments(flat_b, lens_b)
+    can_eq = _exact_equal(can_a, can_b)
+    if can_eq.all():
+        # Same id sets everywhere — ordering drift only. Blame the first
+        # segment whose raw layout differs.
+        flat = int(np.argmin(eq))
+        k = int(np.searchsorted(off_a, flat, side="right")) - 1
+        report.divergences.append(Divergence(
+            field=f"{name}.order", step=k // P, pe=k % P, index=flat,
+            a=flat_a[flat], b=flat_b[flat],
+        ))
+        return
+    flat = int(np.argmin(can_eq))
     k = int(np.searchsorted(off_a, flat, side="right")) - 1
     report.divergences.append(Divergence(
         field=name, step=k // P, pe=k % P, index=flat,
-        a=flat_a[flat], b=flat_b[flat],
+        a=can_a[flat], b=can_b[flat],
     ))
 
 

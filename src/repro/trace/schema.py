@@ -27,6 +27,14 @@ Array families (S = steps, P = trainer PEs, E = epochs):
   Table-2 response counters of adaptive PEs);
 * home-split matrices — ``(S, P, P)`` ``miss_pairs`` / ``repl_pairs``:
   ``[s, p, q]`` = nodes trainer p pulled from partition q at step s;
+* feature-store measurements — optional ``(S, P)`` family present only
+  when the run served real features (``--feature-store``):
+  ``bytes_measured`` (bytes actually gathered), ``bytes_modeled`` (the
+  time model's byte estimate for the same streams), ``feat_sums``
+  (float64 content checksum of each PE's assembled remote feature
+  block — makes shard corruption trace-visible), and
+  ``fetch_time_measured`` (wall-clock gather seconds; the one
+  nondeterministic field, excluded from exact comparisons);
 * ragged id streams — ``<name>_flat`` int64 + ``<name>_offsets``
   ``(S * P + 1,)`` int64, segment ``(s, p)`` at flat offset
   ``s * P + p``: ``seeds, remote, miss_ids, placed_ids``;
@@ -83,6 +91,26 @@ PAIR_FIELDS = ("miss_pairs", "repl_pairs")
 
 #: Ragged per-(step, PE) id streams, stored as <name>_flat/<name>_offsets.
 RAGGED_FIELDS = ("seeds", "remote", "miss_ids", "placed_ids")
+
+#: Feature-store measurement fields, (S, P), present all-or-nothing and
+#: only for store-enabled runs (schema stays v1 — the family is optional).
+STORE_FIELDS: dict[str, np.dtype] = {
+    "bytes_measured": np.dtype(np.int64),
+    "bytes_modeled": np.dtype(np.int64),
+    "feat_sums": np.dtype(np.float64),
+    "fetch_time_measured": np.dtype(np.float64),
+}
+
+#: The deterministic "exact streams" a store-enabled run must reproduce
+#: bit-identically against the modeled path: every dense step field
+#: except the priced ``step_time``, the home-split matrices, and all
+#: ragged id streams. ``Trace.exact_digest`` hashes exactly these.
+EXACT_FIELDS: tuple[str, ...] = (
+    tuple(n for n in STEP_FIELDS if n != "step_time")
+    + PAIR_FIELDS
+    + tuple(f"{n}_flat" for n in RAGGED_FIELDS)
+    + tuple(f"{n}_offsets" for n in RAGGED_FIELDS)
+)
 
 #: Canonical event code tables (the ``repro.sim.events`` taxonomy).
 #: ``ev_lane`` / ``ev_kind`` codes index into these, so the code arrays
@@ -142,21 +170,33 @@ class Trace:
         return flat[offsets[k] : offsets[k + 1]]
 
     # ------------------------------------------------------------------ #
-    def digest(self) -> str:
-        """sha256 over the full array payload (name, dtype, shape, bytes).
+    def digest(self, names=None) -> str:
+        """sha256 over the array payload (name, dtype, shape, bytes).
 
         Deliberately config-independent: two traces with equal payloads
         hash equally even if recorded under different manifests — the
         cross-runtime byte-stability contract of ``tests/test_sim.py``.
+        ``names`` restricts the hash to a field subset (sorted; missing
+        names raise — a digest over absent fields is meaningless).
         """
         h = hashlib.sha256()
-        for name in sorted(self.arrays):
+        for name in sorted(self.arrays) if names is None else sorted(names):
             arr = np.ascontiguousarray(self.arrays[name])
             h.update(name.encode())
             h.update(str(arr.dtype).encode())
             h.update(str(arr.shape).encode())
             h.update(arr.tobytes())
         return h.hexdigest()
+
+    def exact_digest(self) -> str:
+        """Digest of the deterministic exact streams (:data:`EXACT_FIELDS`).
+
+        This is the measured-vs-modeled parity contract: a store-enabled
+        run and the modeled-path golden of the same cell must agree here
+        bit-exactly, while their full ``digest()`` differs (the store run
+        carries the extra measurement family).
+        """
+        return self.digest(EXACT_FIELDS)
 
     def array_specs(self) -> dict[str, dict]:
         """Manifest rendering of the payload layout."""
@@ -186,6 +226,18 @@ class Trace:
             arr = self.arrays.get(name)
             if arr is not None and arr.shape != (S, P, P):
                 problems.append(f"{name}: shape {arr.shape} != {(S, P, P)}")
+        store_present = [n for n in STORE_FIELDS if n in self.arrays]
+        if store_present and len(store_present) != len(STORE_FIELDS):
+            missing = sorted(set(STORE_FIELDS) - set(store_present))
+            problems.append(f"partial store family: missing {missing}")
+        for name in store_present:
+            arr = self.arrays[name]
+            if arr.shape != (S, P):
+                problems.append(f"{name}: shape {arr.shape} != {(S, P)}")
+            elif arr.dtype != STORE_FIELDS[name]:
+                problems.append(
+                    f"{name}: dtype {arr.dtype} != {STORE_FIELDS[name]}"
+                )
         for name in RAGGED_FIELDS:
             offsets = self.arrays.get(f"{name}_offsets")
             flat = self.arrays.get(f"{name}_flat")

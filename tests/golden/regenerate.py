@@ -69,10 +69,24 @@ def main() -> int:
             npz_path, _ = save_trace(
                 trace, os.path.join(GOLDEN_DIR, f"{variant}_{mode}")
             )
+            # Self-check at regeneration time: the feature-store data
+            # plane must reproduce the modeled path's exact streams
+            # bit-identically (the measured-vs-modeled parity contract
+            # of tests/test_trace_golden.py::test_golden_store_parity).
+            # A golden that fails this was recorded from a broken build.
+            store_trace = record_trace({**config, "feature_store": True})
+            if store_trace.exact_digest() != trace.exact_digest():
+                print(
+                    f"FATAL: {variant}_{mode} store-enabled re-record "
+                    "diverges from the modeled path — not committing",
+                    file=sys.stderr,
+                )
+                return 1
             print(
                 f"{os.path.basename(npz_path):24s} "
                 f"{trace.num_steps} steps x {trace.num_pes} PEs  "
-                f"digest {trace.digest()[:12]}"
+                f"digest {trace.digest()[:12]}  "
+                f"store-parity ok ({store_trace.exact_digest()[:12]})"
             )
     return 0
 

@@ -234,6 +234,44 @@ class TestDiff:
         assert report.first.field == "miss_pairs"
         assert (report.first.step, report.first.pe) == (2, 1)
 
+    def test_ragged_order_only_drift_reported_as_order(self):
+        """Two streams holding the same id sets in permuted order are
+        still drift (the digest differs), but must be reported as
+        ``<name>.order`` — not as a content divergence blaming an id
+        that both traces contain."""
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        P = a.num_pes
+        k = 5 * P + 1  # segment (step 5, pe 1)
+        off = a.arrays["miss_ids_offsets"]
+        lo, hi = int(off[k]), int(off[k + 1])
+        assert hi - lo >= 2, "test needs >= 2 ids in the segment"
+        b.arrays["miss_ids_flat"][lo:hi] = b.arrays["miss_ids_flat"][lo:hi][::-1]
+        report = diff_traces(a, b)
+        assert not report.identical
+        assert report.first.field == "miss_ids.order"
+        assert (report.first.step, report.first.pe) == (5, 1)
+
+    def test_ragged_content_drift_wins_over_earlier_permutation(self):
+        """A permuted-but-equal segment must not mask (or mislocate) a
+        genuine content divergence in a later step: the report names the
+        segment whose id *set* changed, not the first positional
+        mismatch."""
+        a = _trace_of("fixed")
+        b = self._copy(a)
+        P = a.num_pes
+        off = a.arrays["miss_ids_offsets"]
+        candidates = np.flatnonzero(np.diff(off) >= 2)
+        assert len(candidates) >= 2, "test needs two multi-id segments"
+        k_perm, k_mut = int(candidates[0]), int(candidates[-1])
+        lo, hi = int(off[k_perm]), int(off[k_perm + 1])
+        b.arrays["miss_ids_flat"][lo:hi] = b.arrays["miss_ids_flat"][lo:hi][::-1]
+        b.arrays["miss_ids_flat"][int(off[k_mut])] += 1_000_000
+        report = diff_traces(a, b)
+        assert not report.identical
+        assert report.first.field == "miss_ids"
+        assert (report.first.step, report.first.pe) == (k_mut // P, k_mut % P)
+
     def test_nan_equals_nan(self):
         a = _trace_of("fixed")
         b = self._copy(a)
@@ -429,6 +467,22 @@ class TestCLI:
         assert os.path.exists(report)
         assert trace_main(["verify", str(tmp_path)]) == 0
         capsys.readouterr()
+
+    def test_replay_of_store_trace_excludes_wall_clock(self, tmp_path, capsys):
+        """A store-enabled trace replays clean: fetch_time_measured is
+        wall clock (nondeterministic by design), so the full-replay diff
+        must exclude it — and still cover every deterministic stream,
+        the measured byte/checksum family included."""
+        out = str(tmp_path / "cli")
+        args = [
+            "record", "--out", out, "--scale", "0.05", "--num-parts", "2",
+            "--batch-size", "8", "--fanouts", "3,5", "--epochs", "2",
+            "--variant", "fixed", "--feature-store", "true",
+        ]
+        assert trace_main(args) == 0
+        assert trace_main(["replay", out]) == 0
+        err = capsys.readouterr().err
+        assert "fetch_time_measured" in err
 
     def test_diff_nonzero_exit_on_drift(self, tmp_path, capsys):
         trace = _trace_of("fixed")

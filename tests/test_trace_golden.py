@@ -49,6 +49,73 @@ def test_golden_conformance(name):
     assert golden.digest() == fresh.digest()
 
 
+@pytest.mark.parametrize("name", GOLDEN_NAMES)
+def test_golden_store_parity(name):
+    """The measured-vs-modeled contract: re-record with the feature
+    store serving real rows -> every deterministic exact stream (hits,
+    misses, bytes, decisions, frontiers, home splits) stays bit-identical
+    to the committed modeled-path golden; only the measurement family is
+    added on top."""
+    golden = load_trace(os.path.join(GOLDEN_DIR, name))
+    fresh = record_trace({**golden.config, "feature_store": True})
+    assert fresh.manifest["feature_store"] is True
+    assert fresh.validate() == []
+    assert golden.exact_digest() == fresh.exact_digest(), (
+        f"{name}: store-enabled run drifted from the modeled path:\n"
+        + diff_traces(golden, fresh).render()
+    )
+    # The restricted diff (exact fields only) must also come back clean.
+    from repro.trace.schema import PAIR_FIELDS, RAGGED_FIELDS, STEP_FIELDS
+
+    exact = (
+        [n for n in STEP_FIELDS if n != "step_time"]
+        + list(PAIR_FIELDS)
+        + list(RAGGED_FIELDS)
+    )
+    assert diff_traces(golden, fresh, fields=exact).identical
+    # Measured bytes equal the model's estimate under default sizes
+    # (float32 rows x feature_bytes=4).
+    np.testing.assert_array_equal(
+        fresh.arrays["bytes_measured"], fresh.arrays["bytes_modeled"]
+    )
+
+
+class TestStoreDrift:
+    """Negative test: shard corruption must surface in the trace."""
+
+    def test_poked_shard_row_names_field_step_pe(self):
+        """Corrupt one shard row of the store; the first divergence
+        against a clean store-enabled run must name the content field
+        (feat_sums), the first step that fetches the node, and the PE
+        that fetched it."""
+        from repro.trace import TraceRecorder
+        from repro.trace.cli import build_trainer
+
+        golden = load_trace(os.path.join(GOLDEN_DIR, "fixed_async"))
+        config = {**golden.config, "feature_store": True}
+        clean = record_trace(config)
+
+        trainer = build_trainer(config)
+        # PE0's first-step miss set is fetched from the store at step 0;
+        # its nodes are homed on partition 1, so PE1 (which treats them
+        # as local) never pulls them — the drift is pinned to (0, 0).
+        victim = int(golden.ragged("miss_ids", 0, 0)[0])
+        trainer.feature_store.poke(victim, delta=1.0)
+        trainer.trace = TraceRecorder.for_trainer(trainer, config=config)
+        corrupted = trainer.run().trace
+
+        report = diff_traces(clean, corrupted)
+        assert not report.identical
+        first = report.first
+        assert (first.field, first.step, first.pe) == ("feat_sums", 0, 0)
+        # Only measurement content moved: decision/byte streams are
+        # corruption-blind, so the exact contract still holds.
+        assert clean.exact_digest() == corrupted.exact_digest()
+        diverged = {d.field for d in report.divergences}
+        assert "bytes_measured" not in diverged
+        assert "decisions" not in diverged
+
+
 @pytest.mark.parametrize("runtime", ["vectorized", "legacy"])
 def test_golden_conformance_both_runtimes(runtime):
     """One golden re-recorded per runtime (full 4x2 cross-runtime parity
