@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Relative-link and anchor checker for the repo's markdown docs.
+
+Stdlib-only (runs in the lint job, no pip installs): walks README.md
+plus everything under docs/, extracts inline markdown links, and fails
+if a relative target does not exist or a ``#fragment`` names a heading
+anchor that is not in the target file.
+
+Skipped by design:
+
+- absolute URLs (``http(s)://``, ``mailto:``) — no network in CI;
+- targets that escape the repository root (e.g. the
+  ``../../actions/workflows/...`` CI badge, which is only meaningful
+  on the GitHub origin, not in a checkout);
+- bare in-repo directory links (rendered by the forge, nothing to
+  anchor-check).
+
+Anchors are slugified the way GitHub does it: lowercase, punctuation
+stripped (hyphens/underscores kept), spaces to hyphens, ``-N`` suffix
+for duplicates. Code spans and ``[![badge](...)](...)`` nesting are
+handled by the link regex below.
+
+Usage: ``python scripts/check_md_links.py [root]`` (default: repo
+root inferred from this file's location). Exit 1 on any broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links: [text](target) — text may itself contain an image link
+# ([![alt](img)](url)), so allow one level of bracket nesting.
+_LINK_RE = re.compile(r"\[(?:[^\[\]]|\[[^\[\]]*\])*\]\(([^()\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*$")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+# GitHub slugger: drop everything but word chars, spaces and hyphens
+# (underscores are word chars and survive — `#fused_step` works).
+_SLUG_STRIP_RE = re.compile(r"[^\w\- ]")
+_EXTERNAL_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _slugify(heading: str) -> str:
+    # Inline markup inside headings contributes only its text.
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    slug = _SLUG_STRIP_RE.sub("", heading.strip().lower())
+    return slug.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = _slugify(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def _links(md_path: Path):
+    in_fence = False
+    for lineno, line in enumerate(
+        md_path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check(root: Path) -> list[str]:
+    md_files = [root / "README.md"] + sorted((root / "docs").glob("**/*.md"))
+    md_files = [p for p in md_files if p.is_file()]
+    root = root.resolve()
+    problems: list[str] = []
+    anchor_cache: dict[Path, set[str]] = {}
+
+    for md in md_files:
+        for lineno, target in _links(md):
+            where = f"{md.relative_to(root)}:{lineno}"
+            if target.startswith(_EXTERNAL_PREFIXES):
+                continue
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                try:
+                    dest.relative_to(root)
+                except ValueError:
+                    continue  # escapes the repo (forge-only link, e.g. badge)
+                if not dest.exists():
+                    problems.append(f"{where}: missing target {target}")
+                    continue
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    continue  # nothing to anchor-check
+            else:
+                dest = md  # same-file anchor
+            if fragment:
+                anchors = anchor_cache.setdefault(dest, _anchors(dest))
+                if fragment.lower() not in anchors:
+                    problems.append(
+                        f"{where}: missing anchor #{fragment} "
+                        f"in {dest.relative_to(root)}"
+                    )
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).resolve().parents[1]
+    problems = check(root)
+    for p in problems:
+        print(f"BROKEN LINK {p}", file=sys.stderr)
+    if problems:
+        print(f"{len(problems)} broken markdown link(s)", file=sys.stderr)
+        return 1
+    print("markdown links ok", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -128,6 +128,27 @@ class ScoringPolicy:
             mask = mask & np.asarray(valid, dtype=bool)
         return mask
 
+    def kernel_constants(self) -> dict:
+        """The policy as compile-time kernel parameters.
+
+        Single source for every place this policy is lowered into a jit'd
+        or Pallas pass — the scoring-round kernel
+        (:func:`repro.kernels.ops.score_policy_update_batch`) and the
+        fused device hot path
+        (:func:`repro.kernels.ops.fused_step_batch`). The keys match
+        those kernels' static keyword arguments, so a policy change can
+        never drift between the numpy host path and the device path
+        (``docs/KERNELS.md``).
+        """
+        return dict(
+            increment=float(self.access_increment),
+            decay=float(self.decay),
+            threshold=float(self.stale_threshold),
+            score_cap=float(self.score_cap),
+            mode=self.mode,
+            initial_score=float(self.initial_score),
+        )
+
 
 def degree_weights(degrees: np.ndarray) -> np.ndarray:
     """Per-node access weight for the ``degree`` policy.

@@ -264,11 +264,26 @@ class DistributedTrainer:
         sim=None,
         trace: object = False,
         feature_store: object = False,
+        device: object = False,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
                 f"runtime must be 'vectorized' or 'legacy', got {runtime!r}"
             )
+        # Device-resident hot path (docs/ARCHITECTURE.md §"Device-resident
+        # hot path"): False/None = staged numpy pipeline; True/"jnp" =
+        # persistent jax device buffers + the fused jit'd oracle;
+        # "pallas" = the fused Pallas megakernel (kernels/fused_step.py).
+        # Streams stay bit-identical on every setting
+        # (tests/test_fused_step.py).
+        if device not in (False, None, True, "jnp", "pallas"):
+            raise ValueError(
+                "device must be False, True, 'jnp' or 'pallas', "
+                f"got {device!r}"
+            )
+        if device and runtime == "legacy":
+            raise ValueError("device mode requires runtime='vectorized'")
+        self.device = device or False
         if time_engine not in ("closed_form", "event"):
             raise ValueError(
                 "time_engine must be 'closed_form' or 'event', "

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots of the reproduction.
+
+Seven kernels, one module each, all following the same contract: a
+pure-jnp oracle in :mod:`repro.kernels.ref` defines the semantics, the
+Pallas body must match it (bit-exact for integer/bool outputs), and
+:mod:`repro.kernels.ops` is the only public import surface — it owns
+jit'ing, int64/degenerate-shape fallbacks and backend routing.
+
+Catalog (grids, oracles, parity tests, bench rows, fallback
+semantics): ``docs/KERNELS.md``.
+"""

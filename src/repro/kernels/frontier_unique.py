@@ -19,6 +19,8 @@ elementwise + reduce and tiles exactly like the scoring kernels.
 
 Grid: (tiles,) over an (8, 128)-aligned 2-D view, one partial count per
 tile reduced back to one count per PE.
+
+Catalog entry: ``docs/KERNELS.md#frontier_unique``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,425 @@
+"""Pallas TPU kernel: the fused per-minibatch hot path (megakernel).
+
+One launch per training step keeps the entire `(P, C)` cluster buffer
+state device-resident and performs, in the staged pipeline's exact
+operation order, three rounds that previously round-tripped through
+numpy between kernels:
+
+1. **score** — close step t's sampling round (``PrefetchEngine.end_round``):
+   the policy-zoo update (accumulate / reset / capped, optional degree
+   weights) on valid slots of scoring-active PEs, access marks cleared.
+2. **replace** — step t's replacement round (``PrefetchEngine.replace_round``):
+   fresh candidates (not already resident) fill free slots first, then
+   stale slots (post-score ``score < threshold``), both in ascending
+   slot order, in candidate order, at ``initial_score``.
+3. **probe** — step t+1's membership lookup (``PrefetchEngine.lookup``):
+   per-query hit mask + hit slot, hit slots marked accessed for the
+   *next* scoring round.
+
+The probe of step t+1 rides in step t's launch because the controller
+decision for a step is computed on host between probes — see the
+pipeline rotation in :class:`repro.runtime.stage.FusedFetchStage`.
+
+Grid: ``(P,)`` — one program per trainer PE; each program owns
+lane-padded ``(1, C)`` state blocks plus ``(1, M)`` query and ``(1, K)``
+candidate blocks, and builds dense ``(K, C)`` / ``(M, C)`` comparison
+tiles in VMEM (cumulative-sum slot ranking + one-hot candidate→slot
+matching — no ragged Python loop; the host pairs placed candidates
+with slots from the returned per-slot fill ranks).
+
+Ids are int32 (-1 = empty/padding); the public dispatcher
+:func:`repro.kernels.ops.fused_step_batch` guards the int64→int32 range
+and falls back to the jnp oracle :func:`repro.kernels.ref.fused_step`
+with identical outputs. Parity: ``tests/test_fused_step.py`` (staged
+``PrefetchEngine`` ground truth + hypothesis suite). Catalog:
+``docs/KERNELS.md#fused_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import scoring
+
+LANES = 128
+
+
+def _fused_body(
+    ids,
+    s,
+    v,
+    a,
+    incap,
+    w,
+    q,
+    cand,
+    cand_w,
+    active_score,
+    do_replace,
+    active_probe,
+    *,
+    increment,
+    decay,
+    threshold,
+    score_cap,
+    mode,
+    initial_score,
+):
+    """Single-PE fused round; shapes (1, C) / (1, M) / (1, K)."""
+    C = ids.shape[1]
+    K = cand.shape[1]
+    M = q.shape[1]
+
+    # -- 1. scoring round (end_round) ---------------------------------- #
+    gain = jnp.float32(increment)
+    if w is not None:
+        gain = gain * w
+    if mode == "accumulate":
+        touched = s + gain
+    elif mode == "reset":
+        touched = gain + jnp.zeros_like(s)
+    else:  # capped
+        touched = jnp.minimum(s + gain, jnp.float32(score_cap))
+    new_s = jnp.where(a, touched, s * jnp.float32(decay))
+    s1 = jnp.where(jnp.logical_and(active_score, v), new_s, s)
+    acc1 = jnp.logical_and(a, jnp.logical_not(active_score))
+
+    # -- 2. replacement round (replace_round) -------------------------- #
+    cand_t = cand.reshape(K, 1)
+    member = jnp.any(
+        jnp.logical_and(cand_t == ids.reshape(1, C), v.reshape(1, C)), axis=1
+    ).reshape(1, K)
+    # First-occurrence dedup (`_unique_preserve_order` in-kernel): a
+    # candidate equal to an earlier position is never fresh.
+    dup = jnp.any(
+        jnp.logical_and(
+            cand_t == cand.reshape(1, K),
+            jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
+            < jax.lax.broadcasted_iota(jnp.int32, (K, K), 0),
+        ),
+        axis=1,
+    ).reshape(1, K)
+    fresh = jnp.logical_and(
+        jnp.logical_and(cand >= 0, jnp.logical_not(member)),
+        jnp.logical_and(jnp.logical_not(dup), do_replace),
+    )
+    free = jnp.logical_and(jnp.logical_not(v), incap)
+    stale = jnp.logical_and(v, s1 < jnp.float32(threshold))
+    n_free = jnp.sum(free.astype(jnp.int32))
+    free_rank = jnp.cumsum(free.astype(jnp.int32), axis=1) - 1
+    stale_rank = n_free + jnp.cumsum(stale.astype(jnp.int32), axis=1) - 1
+    big = jnp.int32(C + K + 1)
+    slot_pos = jnp.where(free, free_rank, jnp.where(stale, stale_rank, big))
+    fresh_rank = jnp.where(
+        fresh, jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1, big + 1
+    )
+    n_place = jnp.where(
+        do_replace,
+        jnp.minimum(
+            n_free + jnp.sum(stale.astype(jnp.int32)),
+            jnp.sum(fresh.astype(jnp.int32)),
+        ),
+        0,
+    )
+    placed = jnp.logical_and(fresh, fresh_rank < n_place)
+    filled = slot_pos < n_place
+    match = jnp.logical_and(
+        placed.reshape(K, 1), fresh_rank.reshape(K, 1) == slot_pos.reshape(1, C)
+    )
+    new_id = jnp.sum(jnp.where(match, cand_t, 0), axis=0).reshape(1, C)
+    ids2 = jnp.where(filled, new_id, ids)
+    s2 = jnp.where(filled, jnp.float32(initial_score), s1)
+    v2 = jnp.logical_or(v, filled)
+    if w is not None:
+        new_w = jnp.sum(
+            jnp.where(match, cand_w.reshape(K, 1), jnp.float32(0.0)), axis=0
+        ).reshape(1, C)
+        w2 = jnp.where(filled, new_w, w)
+    else:
+        w2 = None
+    acc2 = jnp.logical_and(acc1, jnp.logical_not(filled))
+
+    # -- 3. membership probe of the next round (lookup) ---------------- #
+    q_t = q.reshape(M, 1)
+    qhit = jnp.logical_and(
+        jnp.logical_and(q_t == ids2.reshape(1, C), v2.reshape(1, C)),
+        jnp.logical_and(q_t >= 0, active_probe),
+    )
+    hit = jnp.any(qhit, axis=1).reshape(1, M)
+    slot_iota_mc = jax.lax.broadcasted_iota(jnp.int32, (M, C), 1)
+    hit_slot = jnp.where(
+        hit, jnp.sum(jnp.where(qhit, slot_iota_mc, 0), axis=1).reshape(1, M), -1
+    )
+    acc3 = jnp.logical_or(acc2, jnp.any(qhit, axis=0).reshape(1, C))
+    return ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos
+
+
+def _make_fused_kernel(
+    increment, decay, threshold, score_cap, mode, initial_score, weighted
+):
+    def _run(ids, s, v, a, incap, w, q, cand, cand_w, gates):
+        active_score = gates[0, 0] != 0
+        do_replace = gates[0, 1] != 0
+        active_probe = gates[0, 2] != 0
+        return _fused_body(
+            ids,
+            s,
+            v != 0,
+            a != 0,
+            incap != 0,
+            w,
+            q,
+            cand,
+            cand_w,
+            active_score,
+            do_replace,
+            active_probe,
+            increment=increment,
+            decay=decay,
+            threshold=threshold,
+            score_cap=score_cap,
+            mode=mode,
+            initial_score=initial_score,
+        )
+
+    if weighted:
+
+        def kernel(
+            ids_ref,
+            scores_ref,
+            valid_ref,
+            accessed_ref,
+            incap_ref,
+            weights_ref,
+            queries_ref,
+            cand_ref,
+            candw_ref,
+            gates_ref,
+            ids_out,
+            scores_out,
+            valid_out,
+            acc_out,
+            w_out,
+            hit_out,
+            hitslot_out,
+            placed_out,
+            slotpos_out,
+        ):
+            ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = _run(
+                ids_ref[...],
+                scores_ref[...],
+                valid_ref[...],
+                accessed_ref[...],
+                incap_ref[...],
+                weights_ref[...],
+                queries_ref[...],
+                cand_ref[...],
+                candw_ref[...],
+                gates_ref[...],
+            )
+            ids_out[...] = ids2
+            scores_out[...] = s2
+            valid_out[...] = v2.astype(jnp.int32)
+            acc_out[...] = acc3.astype(jnp.int32)
+            w_out[...] = w2
+            hit_out[...] = hit.astype(jnp.int32)
+            hitslot_out[...] = hit_slot
+            placed_out[...] = placed.astype(jnp.int32)
+            slotpos_out[...] = slot_pos
+
+    else:
+
+        def kernel(
+            ids_ref,
+            scores_ref,
+            valid_ref,
+            accessed_ref,
+            incap_ref,
+            queries_ref,
+            cand_ref,
+            gates_ref,
+            ids_out,
+            scores_out,
+            valid_out,
+            acc_out,
+            hit_out,
+            hitslot_out,
+            placed_out,
+            slotpos_out,
+        ):
+            ids2, s2, v2, acc3, _, hit, hit_slot, placed, slot_pos = _run(
+                ids_ref[...],
+                scores_ref[...],
+                valid_ref[...],
+                accessed_ref[...],
+                incap_ref[...],
+                None,
+                queries_ref[...],
+                cand_ref[...],
+                None,
+                gates_ref[...],
+            )
+            ids_out[...] = ids2
+            scores_out[...] = s2
+            valid_out[...] = v2.astype(jnp.int32)
+            acc_out[...] = acc3.astype(jnp.int32)
+            hit_out[...] = hit.astype(jnp.int32)
+            hitslot_out[...] = hit_slot
+            placed_out[...] = placed.astype(jnp.int32)
+            slotpos_out[...] = slot_pos
+
+    return kernel
+
+
+def _pad_lanes(x, width, constant):
+    pad = (width - x.shape[1] % width) % width
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, pad)), constant_values=constant)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "increment",
+        "decay",
+        "threshold",
+        "score_cap",
+        "mode",
+        "initial_score",
+        "interpret",
+    ),
+)
+def fused_step_pallas(
+    ids,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    queries,
+    cand,
+    cand_weights,
+    active_score,
+    do_replace,
+    active_probe,
+    *,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+    interpret: bool = True,
+):
+    """Pallas twin of :func:`repro.kernels.ref.fused_step` (same signature
+    and outputs; see that oracle for the full semantics).
+
+    State blocks are lane-padded to multiples of 128 with engine padding
+    semantics (``valid=False``, ``in_capacity=False``, ``id=-1``) so
+    padded slots are never free, never stale, and never match a query;
+    ``queries``/``cand`` pad with -1 (matches nothing). Dispatch via
+    :func:`repro.kernels.ops.fused_step_batch`; catalog entry
+    ``docs/KERNELS.md#fused_step``.
+    """
+    P, C = ids.shape
+    M = queries.shape[1]
+    K = cand.shape[1]
+    weighted = weights is not None
+
+    ids_p = _pad_lanes(ids.astype(jnp.int32), LANES, -1)
+    s_p = _pad_lanes(scores.astype(jnp.float32), LANES, 1.0)
+    v_p = _pad_lanes(valid.astype(jnp.int32), LANES, 0)
+    a_p = _pad_lanes(accessed.astype(jnp.int32), LANES, 0)
+    cap_p = _pad_lanes(in_capacity.astype(jnp.int32), LANES, 0)
+    q_p = _pad_lanes(queries.astype(jnp.int32), LANES, -1)
+    c_p = _pad_lanes(cand.astype(jnp.int32), LANES, -1)
+    gates = jnp.stack(
+        [
+            active_score.astype(jnp.int32),
+            do_replace.astype(jnp.int32),
+            active_probe.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    gates = _pad_lanes(gates, LANES, 0)
+    Cp, Mp, Kp = ids_p.shape[1], q_p.shape[1], c_p.shape[1]
+
+    def spec(width):
+        return pl.BlockSpec((1, width), lambda i: (i, 0))
+
+    operands = [ids_p, s_p, v_p, a_p, cap_p]
+    if weighted:
+        operands.append(_pad_lanes(weights.astype(jnp.float32), LANES, 1.0))
+    operands += [q_p, c_p]
+    if weighted:
+        operands.append(
+            _pad_lanes(cand_weights.astype(jnp.float32), LANES, 0.0)
+        )
+    operands.append(gates)
+
+    out_specs = [spec(Cp)] * (5 if weighted else 4) + [
+        spec(Mp),
+        spec(Mp),
+        spec(Kp),
+        spec(Cp),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.float32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+    if weighted:
+        out_shape.append(jax.ShapeDtypeStruct((P, Cp), jnp.float32))
+    out_shape += [
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Kp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+
+    outs = pl.pallas_call(
+        _make_fused_kernel(
+            float(increment),
+            float(decay),
+            float(threshold),
+            float(score_cap),
+            mode,
+            float(initial_score),
+            weighted,
+        ),
+        grid=(P,),
+        in_specs=[spec(x.shape[1]) for x in operands],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+    if weighted:
+        ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = outs
+        w_out = w2[:, :C]
+    else:
+        ids2, s2, v2, acc3, hit, hit_slot, placed, slot_pos = outs
+        w_out = None
+    valid2 = v2[:, :C] != 0
+    placed_b = placed[:, :K] != 0
+    return (
+        ids2[:, :C],
+        s2[:, :C],
+        valid2,
+        acc3[:, :C] != 0,
+        w_out,
+        hit[:, :M] != 0,
+        hit_slot[:, :M],
+        placed_b,
+        # The kernel's `big` sentinel uses lane-padded C/K; clamp to the
+        # unpadded sentinel so outputs are bit-identical to the oracle.
+        jnp.minimum(slot_pos[:, :C], jnp.int32(C + K + 1)),
+        jnp.sum(placed_b.astype(jnp.int32), axis=1),
+        jnp.sum(valid2.astype(jnp.int32), axis=1),
+    )

@@ -9,6 +9,8 @@ prefetch, and the K rows are accumulated in a VMEM accumulator tile —
 a single pass, no intermediate (B, K, F) materialisation.
 
 Grid: (B destinations, F/F_TILE feature tiles); K unrolled (static fanout).
+
+Catalog entry: ``docs/KERNELS.md#gather_mean``.
 """
 
 from __future__ import annotations

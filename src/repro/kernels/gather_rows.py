@@ -8,6 +8,8 @@ HBM row block per grid step, so each (1, F_tile) tile lands in VMEM
 aligned to the (8, 128) lane layout with no scatter/atomic machinery.
 
 Grid: (M rows, F/F_TILE feature tiles).
+
+Catalog entry: ``docs/KERNELS.md#gather_rows``.
 """
 
 from __future__ import annotations

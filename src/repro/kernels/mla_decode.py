@@ -12,6 +12,8 @@ once. §Perf C logged this as the next step after full-mesh EP.
 
 Grid: (B, S/S_TILE) — TPU iterates the trailing grid dim sequentially,
 so scratch carries the running softmax across sequence tiles.
+
+Catalog entry: ``docs/KERNELS.md#mla_decode``.
 """
 
 from __future__ import annotations

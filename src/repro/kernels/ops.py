@@ -2,7 +2,9 @@
 
 ``interpret`` defaults to True (CPU container); pass False on real TPU.
 Every op has a pure-jnp oracle in :mod:`repro.kernels.ref` and an
-allclose sweep in ``tests/test_kernels.py``.
+allclose sweep in ``tests/test_kernels.py``. This module owns the
+int64 / degenerate-shape fallback routing — callers never need to
+check id ranges themselves. Kernel catalog: ``docs/KERNELS.md``.
 """
 
 from __future__ import annotations
@@ -11,8 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import functools
+
 from . import ref
 from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
+from .fused_step import fused_step_pallas as _fused_step_pallas
 from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
 from .gather_rows import gather_rows_batch as _gather_rows_batch
@@ -31,9 +36,123 @@ __all__ = [
     "score_update_batch",
     "score_policy_update_batch",
     "frontier_unique_batch",
+    "fused_step_batch",
     "mla_flash_decode",
     "ref",
 ]
+
+_FUSED_STATICS = (
+    "increment",
+    "decay",
+    "threshold",
+    "score_cap",
+    "mode",
+    "initial_score",
+)
+
+_fused_step_ref = functools.partial(
+    jax.jit, static_argnames=_FUSED_STATICS
+)(ref.fused_step)
+
+
+def fused_step_batch(
+    ids,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    queries,
+    cand,
+    cand_weights,
+    active_score,
+    do_replace,
+    active_probe,
+    *,
+    increment: float = 1.0,
+    decay: float = 0.95,
+    threshold: float = 0.95,
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = 1.0,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    """Fused per-minibatch hot path: score -> replace -> probe, one launch.
+
+    State is ``(P, C)`` (``ids`` int32, -1 = empty), ``queries`` is
+    ``(P, M)`` and ``cand`` ``(P, K)`` (both -1-padded), the three gate
+    vectors are ``(P,)`` bool. Returns ``(ids, scores, valid, accessed,
+    weights, hit, hit_slot, cand_placed, slot_pos, n_placed, n_valid)``
+    — the new device-resident buffer state plus the compact per-query /
+    per-candidate / per-slot outputs the host needs (O(P*(M+K+C))
+    transfer, never the feature payload). ``slot_pos`` carries the
+    per-slot fill rank (argsort it on host to pair placed candidates,
+    in candidate order, with the slots they filled).
+
+    ``backend="jnp"`` (default) runs the jit'd oracle
+    :func:`repro.kernels.ref.fused_step`; ``backend="pallas"`` runs the
+    Pallas kernel (``kernels/fused_step.py``; ``interpret=True`` on
+    CPU). The Pallas kernel computes ids in int32: int64 inputs with ids
+    >= 2^31 fall back to the jnp oracle with **identical outputs** (the
+    ``frontier_unique_batch`` contract). Ground truth is the staged
+    ``PrefetchEngine`` pipeline itself (``tests/test_fused_step.py``);
+    catalog entry ``docs/KERNELS.md#fused_step``.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend must be 'jnp' or 'pallas', got {backend!r}")
+    constants = dict(
+        increment=float(increment),
+        decay=float(decay),
+        threshold=float(threshold),
+        score_cap=float(score_cap),
+        mode=mode,
+        initial_score=float(initial_score),
+    )
+    if backend == "pallas" and ids.shape[1] == 0:
+        # Zero-capacity cluster: the oracle's static early return handles
+        # C == 0; the Pallas grid would reduce over empty lane blocks.
+        backend = "jnp"
+    if backend == "pallas":
+        i32max = np.iinfo(np.int32).max
+        for arr in (ids, cand, queries):
+            if getattr(arr, "dtype", None) == np.int64:
+                vals = np.asarray(arr)
+                if vals.size and int(vals.max()) >= i32max:
+                    backend = "jnp"  # int64 fallback, identical outputs
+                    break
+    if backend == "pallas":
+        return _fused_step_pallas(
+            ids,
+            scores,
+            valid,
+            accessed,
+            in_capacity,
+            weights,
+            queries,
+            cand,
+            cand_weights,
+            active_score,
+            do_replace,
+            active_probe,
+            interpret=interpret,
+            **constants,
+        )
+    return _fused_step_ref(
+        ids,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries,
+        cand,
+        cand_weights,
+        active_score,
+        do_replace,
+        active_probe,
+        **constants,
+    )
 
 
 def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):

@@ -119,6 +119,212 @@ def score_update_batch(scores: jax.Array, accessed: jax.Array):
     return new, stale
 
 
+def fused_step(
+    ids: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    accessed: jax.Array,
+    in_capacity: jax.Array,
+    weights: jax.Array | None,
+    queries: jax.Array,
+    cand: jax.Array,
+    cand_weights: jax.Array | None,
+    active_score: jax.Array,
+    do_replace: jax.Array,
+    active_probe: jax.Array,
+    *,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+):
+    """Oracle for the fused per-minibatch hot path (score→replace→probe).
+
+    One pass over the whole cluster's device-resident ``(P, C)`` buffer
+    state performs, in the staged pipeline's exact operation order:
+
+    1. **score** — close step t's sampling round for ``active_score``
+       PEs (``PrefetchEngine.end_round`` semantics: the policy-zoo
+       update on valid slots, access marks reset);
+    2. **replace** — step t's replacement round for ``do_replace`` PEs
+       (``PrefetchEngine.replace_round`` semantics: candidates filtered
+       against current membership, free slots filled first, then stale
+       slots — both in ascending slot order — first ``n`` fresh
+       candidates placed in candidate order at ``initial_score``);
+    3. **probe** — step t+1's batched membership lookup for
+       ``active_probe`` PEs (``PrefetchEngine.lookup`` semantics: hits
+       reported per query, hit slots marked accessed for the *next*
+       scoring round).
+
+    The probe of step t+1 rides in step t's launch because the
+    controller decision for a step is computed on host between probes
+    (see ``runtime/stage.FusedFetchStage``). Inputs: ``ids`` ``(P, C)``
+    int32 (-1 = empty slot), ``queries``/``cand`` ``(P, M)``/``(P, K)``
+    int32 padded with -1, per-PE gate vectors ``(P,)`` bool. Returns the
+    new buffer state plus the per-query hit mask/slots, the per-candidate
+    placed mask, the per-slot fill ranks (``slot_pos``: rank ``r < C``
+    where slot is the ``r``-th filled this round, a large sentinel
+    otherwise — the host argsorts it to pair placed candidates with
+    slots) and per-PE placement/occupancy counts.
+
+    The Pallas twin is :func:`repro.kernels.ops.fused_step_batch`
+    (kernel in ``kernels/fused_step.py``); the numpy ground truth is the
+    staged ``PrefetchEngine`` pipeline itself (``tests/test_fused_step.py``).
+    See ``docs/KERNELS.md#fused_step``.
+    """
+    ids = ids.astype(jnp.int32)
+    scores = scores.astype(jnp.float32)
+    valid = valid.astype(bool)
+    accessed = accessed.astype(bool)
+    in_capacity = in_capacity.astype(bool)
+    queries = queries.astype(jnp.int32)
+    cand = cand.astype(jnp.int32)
+    active_score = active_score.astype(bool)
+    do_replace = do_replace.astype(bool)
+    active_probe = active_probe.astype(bool)
+    C = ids.shape[1]
+
+    if C == 0:
+        # Capacity-zero cluster (e.g. the distdgl baseline): no slots,
+        # every probe misses, every replacement round places nothing.
+        P, M = queries.shape
+        K = cand.shape[1]
+        return (
+            ids,
+            scores,
+            valid,
+            accessed,
+            weights,
+            jnp.zeros((P, M), bool),
+            jnp.full((P, M), -1, jnp.int32),
+            jnp.zeros((P, K), bool),
+            jnp.zeros((P, 0), jnp.int32),
+            jnp.zeros((P,), jnp.int32),
+            jnp.zeros((P,), jnp.int32),
+        )
+
+    # -- 1. scoring round (end_round) ---------------------------------- #
+    gain = jnp.float32(increment)
+    if weights is not None:
+        gain = gain * weights.astype(jnp.float32)
+    if mode == "accumulate":
+        touched = scores + gain
+    elif mode == "reset":
+        touched = gain + jnp.zeros_like(scores)
+    elif mode == "capped":
+        touched = jnp.minimum(scores + gain, jnp.float32(score_cap))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    new_s = jnp.where(accessed, touched, scores * jnp.float32(decay))
+    s1 = jnp.where(active_score[:, None] & valid, new_s, scores)
+    acc1 = accessed & ~active_score[:, None]
+
+    # -- 2. replacement round (replace_round) -------------------------- #
+    # Membership against a masked id table (-2 where invalid — matches
+    # no candidate, padding included) folds the valid gate into the one
+    # dense compare. Everything O(P·K·C) below is kept to single-pass
+    # selects + reduces: on a single-core XLA CPU these tensors dominate
+    # the launch, and each extra materialized temporary costs ~1 ms at
+    # P=256 (see ``benchmarks/kernels_micro.py`` fused rows).
+    K = cand.shape[1]
+    ids_pre = jnp.where(valid, ids, jnp.int32(-2))
+    member = (cand[:, :, None] == ids_pre[:, None, :]).any(-1)
+    # In-kernel first-occurrence dedup (`_unique_preserve_order`): a
+    # candidate repeating an earlier position is never fresh, so the
+    # host hands raw candidate lists — no per-PE python dedup loop.
+    dup = (
+        (cand[:, :, None] == cand[:, None, :])
+        & jnp.tril(jnp.ones((K, K), dtype=bool), k=-1)[None]
+    ).any(-1)
+    fresh = (cand >= 0) & ~member & ~dup & do_replace[:, None]
+    free = ~valid & in_capacity
+    stale = valid & (s1 < jnp.float32(threshold))
+    n_free = free.sum(axis=1)
+    free_rank = jnp.cumsum(free.astype(jnp.int32), axis=1) - 1
+    stale_rank = (
+        n_free[:, None] + jnp.cumsum(stale.astype(jnp.int32), axis=1) - 1
+    )
+    big = jnp.int32(C + cand.shape[1] + 1)
+    slot_pos = jnp.where(free, free_rank, jnp.where(stale, stale_rank, big))
+    fresh_rank = jnp.where(
+        fresh, jnp.cumsum(fresh.astype(jnp.int32), axis=1) - 1, big + 1
+    )
+    n_place = jnp.where(
+        do_replace,
+        jnp.minimum(n_free + stale.sum(axis=1), fresh.sum(axis=1)),
+        0,
+    ).astype(jnp.int32)
+    placed = fresh & (fresh_rank < n_place[:, None])
+    filled = slot_pos < n_place[:, None]
+    # The candidate→slot matching is a rank meeting: the candidate with
+    # fresh rank r lands in the slot with fill rank r. One encoded
+    # one-hot — enc[p,k,c] = k+1 where the ranks meet — reduced over k
+    # gives each slot its candidate index (ranks are unique, so each
+    # filled slot has exactly one nonzero; `filled` masks pairs beyond
+    # n_place). The kernel only resolves the slot→candidate direction:
+    # the host recovers the candidate→slot pairing from the returned
+    # ``slot_pos`` with a (P, C) argsort, which is far cheaper than a
+    # second 3-d max here. (Rank-table scatters would be O(P·(K+C)),
+    # but XLA CPU scatters cost ~1 ms at this size — the dense encode
+    # is measurably faster.)
+    enc_dt = jnp.int16 if K + 1 <= np.iinfo(np.int16).max else jnp.int32
+    iota_k1 = jnp.arange(1, K + 1, dtype=enc_dt)
+    slot_iota = jnp.arange(C, dtype=jnp.int32)
+    enc = jnp.where(
+        fresh_rank[:, :, None] == slot_pos[:, None, :],
+        iota_k1[None, :, None],
+        enc_dt(0),
+    )
+    cand_idx = jnp.maximum(enc.max(axis=1).astype(jnp.int32) - 1, 0)
+    ids2 = jnp.where(filled, jnp.take_along_axis(cand, cand_idx, axis=1), ids)
+    s2 = jnp.where(filled, jnp.float32(initial_score), s1)
+    valid2 = valid | filled
+    if weights is not None and cand_weights is not None:
+        w2 = jnp.where(
+            filled,
+            jnp.take_along_axis(
+                cand_weights.astype(jnp.float32), cand_idx, axis=1
+            ),
+            weights.astype(jnp.float32),
+        )
+    else:
+        w2 = weights
+    acc2 = acc1 & ~filled
+
+    # -- 3. membership probe of the next round (lookup) ---------------- #
+    # Same masked-id trick; hit and hit-slot come out of one narrow
+    # select+max (slot+1, 0 = miss) instead of separate any()/one-hot-sum
+    # passes. The accessed marks reduce the same compare tensor over the
+    # query axis (a scatter of the hit slots would be O(P·M) but XLA CPU
+    # scatters cost ~1 ms at this size — the extra dense reduce is
+    # cheaper, and XLA shares the materialized compare between both).
+    slot_dt = jnp.int16 if C + 1 <= np.iinfo(np.int16).max else jnp.int32
+    ids_post = jnp.where(valid2, ids2, jnp.int32(-2))
+    eq_q = queries[:, :, None] == ids_post[:, None, :]
+    slot1 = jnp.max(
+        jnp.where(eq_q, (slot_iota + 1).astype(slot_dt), slot_dt(0)),
+        axis=2,
+    ).astype(jnp.int32)
+    hit = (slot1 > 0) & active_probe[:, None]
+    hit_slot = jnp.where(hit, slot1 - 1, -1)
+    acc3 = acc2 | (jnp.any(eq_q, axis=1) & active_probe[:, None])
+    return (
+        ids2,
+        s2,
+        valid2,
+        acc3,
+        w2,
+        hit,
+        hit_slot,
+        placed,
+        slot_pos,
+        n_place,
+        valid2.sum(axis=1).astype(jnp.int32),
+    )
+
+
 def score_policy_update_batch(
     scores: jax.Array,
     accessed: jax.Array,

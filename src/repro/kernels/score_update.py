@@ -15,6 +15,8 @@ and its constants are compile-time parameters, and the degree policy's
 per-slot access weights ride along as an optional third VMEM operand.
 
 Grid: (tiles,) over an (8, 128)-aligned 2-D view of the buffer.
+
+Catalog entry: ``docs/KERNELS.md#score_update``.
 """
 
 from __future__ import annotations

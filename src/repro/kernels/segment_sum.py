@@ -11,6 +11,8 @@ layout our sampler produces), where segment boundaries are static:
 one grid step = one destination tile, K edge rows reduced in VMEM.
 
 Grid: (segments/SEG_TILE, F/F_TILE).
+
+Catalog entry: ``docs/KERNELS.md#segment_sum``.
 """
 
 from __future__ import annotations

@@ -35,7 +35,7 @@ import jax
 import numpy as np
 
 from ..core.metrics import Metrics
-from .stage import DecisionStage, FetchStage, SampleStage
+from .stage import DecisionStage, FetchStage, FusedFetchStage, SampleStage
 
 
 def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
@@ -44,7 +44,12 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     ``trainer`` is a :class:`repro.gnn.train.DistributedTrainer`; its
     :class:`PrefetchEngine` (built in ``__init__`` alongside the legacy
     buffers, including any warm start) carries all per-PE buffer state.
+    With ``DistributedTrainer(device=...)`` set, the per-step hot path
+    runs device-resident instead (:func:`run_device`) — bit-identical
+    streams, one fused kernel launch per step.
     """
+    if getattr(trainer, "device", None):
+        return run_device(trainer)
     # Deferred: repro.gnn.train imports the engine from this package.
     from ..gnn.sage import sage_accuracy, sage_grads
     from ..gnn.train import RunResult, TrainerLog
@@ -186,6 +191,202 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
             sage_accuracy(trainer.params, x_seed, x_n1, x_n2, minibatch.labels)
         )
 
+    trace = None
+    if recorder is not None:
+        trace = recorder.finalize(epoch_times, time_engine.events)
+        trainer.last_trace = trace
+
+    return RunResult(
+        variant=trainer.variant,
+        epoch_times=epoch_times,
+        losses=losses,
+        accuracy=accuracy,
+        logs=logs,
+        controllers=trainer.controllers,
+        graph_meta=trainer.graph_meta,
+        sim_events=time_engine.events,
+        trace=trace,
+    )
+
+
+def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
+    """Device-resident twin of :func:`run_vectorized`.
+
+    Buffer state lives in persistent jax arrays
+    (:class:`repro.runtime.engine.DeviceEngine`) and each step issues
+    exactly one fused score→replace→probe launch through
+    :class:`repro.runtime.stage.FusedFetchStage`, pipeline-rotated so
+    the host decision plane runs between probes::
+
+        sample(0) ── prime launch [probe(0)]
+        step t:   decide(t) → begin miss gather(t) → sample(t+1)
+                  → launch [score(t), replace(t), probe(t+1)]
+                  → accounting / trace / train for step t
+
+    The interleaving of RNG draws (sample) and controller calls
+    (decide) is identical to the staged loop, the in-kernel round order
+    is identical to ``end_round`` → ``replace_round`` → ``lookup``, and
+    the store's miss gather is dispatched *before* the next sample draw
+    (the double-buffer overlap) — so every exact stream
+    (hit/miss/byte/decision/feat_sums) is bit-identical to
+    :func:`run_vectorized` and the committed golden traces
+    (``tests/test_fused_step.py``). At the end of the run the device
+    state is written back to ``trainer.engine`` for introspection.
+    """
+    from ..gnn.sage import sage_accuracy, sage_grads
+    from ..gnn.train import RunResult, TrainerLog
+    from .engine import DeviceEngine
+
+    P = trainer.parts.num_parts
+    sample = SampleStage(
+        trainer.sampler_plane, P, trainer._seed_batch, trainer.parts.part_of
+    )
+    decide = DecisionStage(trainer.controllers)
+    time_engine = trainer.make_time_engine()
+    backend = "jnp" if trainer.device is True else trainer.device
+    dev = DeviceEngine(trainer.engine, backend=backend)
+    fused = FusedFetchStage(
+        dev,
+        decide.uses_buffer,
+        decide.inference_cost,
+        time_engine,
+        trainer.graph.features.shape[1],
+        trainer.mode,
+        part_of=trainer.parts.part_of,
+        store=trainer.feature_store,
+        feature_bytes=trainer.tm.feature_bytes,
+    )
+
+    logs = [TrainerLog() for _ in range(P)]
+    epoch_times = [0.0] * trainer.epochs
+    losses: list[float] = []
+    recorder = trainer.make_trace_recorder()
+    total = trainer.epochs * trainer.mb_per_epoch
+
+    minibatches, remote, n_remote = sample.run(0, 0, trainer.rng)
+    probe = fused.prime(remote, n_remote)
+    empty_next = (
+        None,
+        [np.array([], dtype=np.int64) for _ in range(P)],
+        np.zeros(P, dtype=np.int64),
+    )
+
+    for step in range(total):
+        epoch, mb = divmod(step, trainer.mb_per_epoch)
+        decide.submit(
+            [
+                Metrics(
+                    minibatch=mb,
+                    total_minibatches=trainer.mb_per_epoch,
+                    epoch=epoch,
+                    total_epochs=trainer.epochs,
+                    pct_hits=float(probe.pct_hits[p]),
+                    comm_volume=int(probe.comm[p]),
+                    replaced_pct=float(probe.replaced_pct[p]),
+                    buffer_occupancy=float(probe.occupancy[p]),
+                    buffer_capacity=int(trainer.engine.capacity[p]),
+                )
+                for p in range(P)
+            ]
+        )
+        decisions, stalls = decide.collect()
+
+        # Double buffer: this step's miss gather overlaps the next draw.
+        fused.begin_gather()
+        if step + 1 < total:
+            e2, m2 = divmod(step + 1, trainer.mb_per_epoch)
+            nxt = sample.run(e2, m2, trainer.rng)
+        else:
+            nxt = empty_next
+
+        commit, next_probe = fused.step(decisions, stalls, nxt[1], nxt[2])
+
+        for p in range(P):
+            logs[p].pct_hits.append(float(probe.pct_hits[p]))
+            logs[p].comm_volume.append(int(commit.total_comm[p]))
+            logs[p].comm_missed.append(int(probe.comm[p]))
+            logs[p].occupancy.append(float(commit.occupancy[p]))
+            logs[p].unique_remote.append(int(n_remote[p]))
+            logs[p].replaced.append(int(commit.replaced[p]))
+            logs[p].decisions.append(bool(decisions[p]))
+            logs[p].step_time.append(float(commit.step_time[p]))
+            if trainer.feature_store is not None:
+                logs[p].bytes_measured.append(int(commit.bytes_measured[p]))
+                logs[p].bytes_modeled.append(int(commit.bytes_modeled[p]))
+                logs[p].fetch_seconds.append(float(commit.fetch_seconds))
+                logs[p].feat_sums.append(float(commit.feat_sums[p]))
+        epoch_times[epoch] += float(commit.step_time.max())
+
+        store_kwargs: dict = {}
+        if trainer.feature_store is not None:
+            store_kwargs = dict(
+                feat_sums=commit.feat_sums,
+                bytes_measured=commit.bytes_measured,
+                bytes_modeled=commit.bytes_modeled,
+                fetch_time_measured=np.full(
+                    P, commit.fetch_seconds, dtype=np.float64
+                ),
+            )
+        if recorder is not None:
+            recorder.record_step(
+                seeds=[m.seeds for m in minibatches],
+                remote=remote,
+                missed=commit.missed,
+                placed=commit.placed,
+                decisions=decisions,
+                stalls=stalls,
+                pct_hits=probe.pct_hits,
+                hits=probe.hits,
+                n_remote=n_remote,
+                replaced=commit.replaced,
+                total_comm=commit.total_comm,
+                occupancy_pre=probe.occupancy,
+                occupancy_post=commit.occupancy,
+                step_times=commit.step_time,
+                controllers=trainer.controllers,
+                **store_kwargs,
+            )
+
+        if trainer.train_model:
+            grads_acc = None
+            loss_acc = 0.0
+            for p in range(P):
+                x_seed, x_n1, x_n2 = trainer._features_of(minibatches[p])
+                loss, grads = sage_grads(
+                    trainer.params, x_seed, x_n1, x_n2, minibatches[p].labels
+                )
+                loss_acc += float(loss) / P
+                grads_acc = (
+                    grads
+                    if grads_acc is None
+                    else jax.tree_util.tree_map(
+                        lambda a, b: a + b, grads_acc, grads
+                    )
+                )
+            if grads_acc is not None:
+                grads_mean = jax.tree_util.tree_map(lambda g: g / P, grads_acc)
+                trainer.params = jax.tree_util.tree_map(
+                    lambda prm, g: prm - trainer.lr * g,
+                    trainer.params,
+                    grads_mean,
+                )
+                losses.append(loss_acc)
+
+        minibatches, remote, n_remote = nxt
+        probe = next_probe
+
+    accuracy = 0.0
+    if trainer.train_model:
+        batch = trainer.graph.train_nodes[
+            : min(512, len(trainer.graph.train_nodes))
+        ]
+        minibatch = trainer.sampler.sample(batch, trainer.rng)
+        x_seed, x_n1, x_n2 = trainer._features_of(minibatch)
+        accuracy = float(
+            sage_accuracy(trainer.params, x_seed, x_n1, x_n2, minibatch.labels)
+        )
+
+    dev.sync_to_engine()
     trace = None
     if recorder is not None:
         trace = recorder.finalize(epoch_times, time_engine.events)

@@ -15,6 +15,16 @@ replacement order), which is what lets the vectorized driver reproduce
 the legacy per-trainer loop's hit/miss/byte counts and decision streams
 exactly — see ``tests/test_runtime_parity.py`` and
 ``docs/ARCHITECTURE.md``.
+
+:class:`DeviceEngine` is the device-resident twin: the same ``(P, C)``
+state held as persistent jax arrays and advanced one fused
+score→replace→probe launch per step
+(:func:`repro.kernels.ops.fused_step_batch`), with only the compact
+per-query / per-candidate outputs pulled to host. Enabled via
+``DistributedTrainer(device=...)``; semantics and streams stay
+bit-identical to this class (``tests/test_fused_step.py``,
+``docs/KERNELS.md#fused_step``, ``docs/ARCHITECTURE.md`` §"Device-
+resident hot path").
 """
 
 from __future__ import annotations
@@ -246,15 +256,10 @@ class PrefetchEngine:
         if self.use_kernels:
             from ..kernels.score_update import score_policy_update_batch
 
+            kc = self.policy.kernel_constants()
+            kc.pop("initial_score")  # scoring pass never places slots
             new, _ = score_policy_update_batch(
-                self.scores,
-                self.accessed,
-                weights,
-                increment=self.policy.access_increment,
-                decay=self.policy.decay,
-                threshold=self.policy.stale_threshold,
-                mode=self.policy.mode,
-                score_cap=self.policy.score_cap,
+                self.scores, self.accessed, weights, **kc
             )
             new = np.asarray(new, dtype=np.float32)
         else:
@@ -356,3 +361,335 @@ class PrefetchEngine:
         if self.payload is None:
             raise ValueError("engine has no payload (feature_dim=0)")
         return self.payload[p, self.last_hit_slots[p]]
+
+
+@dataclass
+class FusedStepOut:
+    """Host-visible outputs of one :meth:`DeviceEngine.fused_step` launch."""
+
+    hit_masks: list[np.ndarray]    # per PE, aligned with its query list
+    missed: list[np.ndarray]       # per PE, int64 miss ids (query order)
+    hits: np.ndarray               # (P,) int64
+    hit_slots: list[np.ndarray]    # per PE, slots of the hits (query order)
+    replaced: np.ndarray           # (P,) int64 — nodes newly placed
+    placed: list[np.ndarray]       # per PE, int64 placed ids (cand order)
+    placed_slots: list[np.ndarray] # per PE, slots filled (aligned w/ placed)
+    n_valid: np.ndarray            # (P,) int64 post-round occupancy counts
+
+
+def _bucket(n: int, q: int = 64) -> int:
+    """Round a ragged dimension up to a bucket so jit recompiles O(log)
+    times, not once per distinct minibatch shape."""
+    return max(q, -(-n // q) * q)
+
+
+def _split_by_counts(flat: np.ndarray, counts: np.ndarray) -> list[np.ndarray]:
+    """Split a flat array into per-PE views by segment lengths (plain
+    slicing — ``np.split`` pays a swapaxes per segment, which dominates
+    the fused step's host time at P=256)."""
+    ends = np.cumsum(counts)
+    starts = ends - counts
+    return [flat[a:b] for a, b in zip(starts, ends)]
+
+
+class DeviceEngine:
+    """Device-resident twin of :class:`PrefetchEngine` (the fused hot path).
+
+    Construction snapshots a warm-started ``PrefetchEngine`` into
+    persistent jax device arrays (ids int32, scores float32, valid /
+    accessed / in-capacity masks, optional degree weights and feature
+    payload) and from then on advances the whole cluster's buffer state
+    one fused score→replace→probe launch per training step
+    (:func:`repro.kernels.ops.fused_step_batch` — jnp oracle by default,
+    Pallas kernel with ``backend="pallas"``). Only O(P·(M+K)) per-step
+    outputs cross back to host: hit masks/slots, placed ids/slots and
+    occupancy counts; the ``(P, C)`` state never round-trips.
+
+    Statistics are *shared* with the source engine (``self.stats is
+    engine.stats``), so ``trainer.engine.stats`` stays live in device
+    mode; :meth:`sync_to_engine` writes the array state back for
+    post-run introspection and state-equality tests.
+
+    Semantics are bit-identical to the staged numpy pipeline
+    (``lookup`` → ``end_round`` → ``replace_round``) — the parity
+    contract of ``tests/test_fused_step.py`` and the golden traces.
+    Node ids must fit int32 (the device path stores ids as int32; a
+    graph with ids ≥ 2^31 raises at construction — the staged path has
+    no such limit).
+    """
+
+    def __init__(
+        self,
+        engine: PrefetchEngine,
+        backend: str = "jnp",
+        interpret: bool = True,
+    ):
+        import jax.numpy as jnp
+
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"backend must be 'jnp' or 'pallas', got {backend!r}"
+            )
+        if engine.ids.size and int(engine.ids.max()) >= np.iinfo(np.int32).max:
+            raise ValueError(
+                "device engine stores ids as int32; buffer holds ids >= 2^31"
+            )
+        self._jnp = jnp
+        self.engine = engine
+        self.backend = backend
+        self.interpret = interpret
+        self.policy = engine.policy
+        self.stats = engine.stats  # shared — trainer.engine.stats stays live
+        self.capacity = engine.capacity
+        self.num_pes = engine.num_pes
+        self.max_capacity = engine.max_capacity
+        self.feature_dim = engine.feature_dim
+        self._node_weights = engine._node_weights
+        self._ids = jnp.asarray(engine.ids.astype(np.int32))
+        self._scores = jnp.asarray(engine.scores)
+        self._valid = jnp.asarray(engine.valid)
+        self._accessed = jnp.asarray(engine.accessed)
+        self._in_cap = jnp.asarray(engine.in_capacity)
+        # Weights ride on device only when the policy reads them; with
+        # use_weights=False the staged weights array is dead state.
+        self._weights = (
+            jnp.asarray(engine.weights) if self.policy.use_weights else None
+        )
+        self._weights0 = engine.weights.copy()
+        self.payload = (
+            jnp.asarray(engine.payload.reshape(-1, engine.feature_dim))
+            if engine.payload is not None
+            else None
+        )
+        P = self.num_pes
+        self.last_placed = [np.array([], dtype=np.int64) for _ in range(P)]
+        self.last_slots = [np.array([], dtype=np.int64) for _ in range(P)]
+        self.last_hit_slots = [np.array([], dtype=np.int64) for _ in range(P)]
+
+    # ------------------------------------------------------------------ #
+    def occupancy_of(self, n_valid: np.ndarray) -> np.ndarray:
+        """`PrefetchEngine.occupancy` from a launch's n_valid output."""
+        return np.where(
+            self.capacity > 0, n_valid / np.maximum(self.capacity, 1), 0.0
+        )
+
+    def fused_step(
+        self,
+        queries: list[np.ndarray],
+        candidates: list[np.ndarray],
+        active_score: np.ndarray,
+        do_replace: np.ndarray,
+        active_probe: np.ndarray,
+    ) -> FusedStepOut:
+        """One fused launch: score (``end_round(active_score)``) →
+        replace (``replace_round(candidates, do_replace)``) → probe
+        (``lookup(queries, active_probe)``) — see the pipeline rotation
+        in :class:`repro.runtime.stage.FusedFetchStage`. Ragged inputs
+        are bucket-padded with -1 (candidate dedup happens in-kernel);
+        per-PE stats / last_* bookkeeping is updated exactly as the
+        staged engine does — all of it vectorized, no per-PE loop."""
+        import jax
+
+        P = self.num_pes
+        do_rep = np.asarray(do_replace, dtype=bool)
+        empty64 = np.array([], dtype=np.int64)
+        # np.concatenate(dtype=...) converts + flattens each ragged item
+        # at C speed — a per-item np.asarray listcomp costs ~0.4 ms/step
+        # at P=256, a real slice of the fused step's budget.
+        qlen = np.fromiter(map(len, queries), np.int64, count=P)
+        cands = (
+            list(candidates)
+            if do_rep.all()
+            else [candidates[p] if do_rep[p] else empty64 for p in range(P)]
+        )
+        clen = np.fromiter(map(len, cands), np.int64, count=P)
+        allq = (
+            np.concatenate(queries, dtype=np.int64, casting="unsafe")
+            if qlen.sum()
+            else empty64
+        )
+        allc = (
+            np.concatenate(cands, dtype=np.int64, casting="unsafe")
+            if clen.sum()
+            else empty64
+        )
+        i32max = np.iinfo(np.int32).max
+        if (allq.size and int(allq.max()) >= i32max) or (
+            allc.size and int(allc.max()) >= i32max
+        ):
+            raise ValueError("device engine needs node ids < 2^31")
+        M = _bucket(int(qlen.max(initial=0)))
+        K = _bucket(int(clen.max(initial=0)))
+        qmask = np.arange(M) < qlen[:, None]
+        cmask = np.arange(K) < clen[:, None]
+        q = np.full((P, M), -1, dtype=np.int32)
+        c = np.full((P, K), -1, dtype=np.int32)
+        q[qmask] = allq
+        c[cmask] = allc
+        cw = None
+        if self._weights is not None:
+            cw = np.ones((P, K), dtype=np.float32)
+            if self._node_weights is not None and allc.size:
+                cw[cmask] = self._node_weights[allc]
+
+        from ..kernels import ops
+
+        (
+            self._ids,
+            self._scores,
+            self._valid,
+            self._accessed,
+            w2,
+            hit_d,
+            hit_slot_d,
+            placed_d,
+            slot_pos_d,
+            _n_placed,
+            n_valid_d,
+        ) = ops.fused_step_batch(
+            self._ids,
+            self._scores,
+            self._valid,
+            self._accessed,
+            self._in_cap,
+            self._weights,
+            q,
+            c,
+            cw,
+            np.asarray(active_score, dtype=bool),
+            np.asarray(do_replace, dtype=bool),
+            np.asarray(active_probe, dtype=bool),
+            backend=self.backend,
+            interpret=self.interpret,
+            **self.policy.kernel_constants(),
+        )
+        if w2 is not None:
+            self._weights = w2
+        hit, hit_slot, placed_m, slot_pos, n_valid = jax.device_get(
+            (hit_d, hit_slot_d, placed_d, slot_pos_d, n_valid_d)
+        )
+        n_valid = n_valid.astype(np.int64)
+
+        # --- probe bookkeeping (PrefetchEngine.lookup) ----------------- #
+        lengths = np.where(np.asarray(active_probe, dtype=bool), qlen, 0)
+        self.stats.lookups += lengths
+        hits_per_pe = hit.sum(axis=1).astype(np.int64)
+        self.stats.hits += hits_per_pe
+        self.stats.misses += lengths - hits_per_pe
+        flat_hit = hit[qmask]
+        hit_masks = _split_by_counts(flat_hit, qlen)
+        missed = _split_by_counts(allq[~flat_hit], qlen - hits_per_pe)
+        hit_slots = _split_by_counts(
+            hit_slot[qmask][flat_hit].astype(np.int64), hits_per_pe
+        )
+        self.last_hit_slots = list(hit_slots)
+
+        # --- replacement bookkeeping (PrefetchEngine.replace_round) ---- #
+        pm = placed_m & cmask
+        n_per = pm.sum(axis=1).astype(np.int64)
+        rounds = do_rep & (n_per > 0)
+        self.stats.skipped_rounds += do_rep & (n_per == 0)
+        self.stats.replaced_total += np.where(rounds, n_per, 0)
+        self.stats.replacement_rounds += rounds
+        replaced = np.where(rounds, n_per, 0)
+        flat_pm = pm[cmask]
+        self.last_placed = _split_by_counts(allc[flat_pm], n_per)
+        # Placed candidates come out in candidate (= fresh-rank) order,
+        # and the r-th placed candidate fills the slot with fill rank r:
+        # a stable argsort of the per-slot fill ranks pairs them up —
+        # cheaper than having the kernel reduce a second (P, K, C) max
+        # for an explicit per-candidate slot output.
+        order = np.argsort(slot_pos, axis=1, kind="stable").astype(np.int64)
+        rank_mask = np.arange(slot_pos.shape[1]) < n_per[:, None]
+        self.last_slots = _split_by_counts(order[rank_mask], n_per)
+        return FusedStepOut(
+            hit_masks=hit_masks,
+            missed=missed,
+            hits=hits_per_pe,
+            hit_slots=hit_slots,
+            replaced=replaced,
+            placed=list(self.last_placed),
+            placed_slots=list(self.last_slots),
+            n_valid=n_valid,
+        )
+
+    # ------------------------------------------------------------------ #
+    # feature payload (device-resident)
+    # ------------------------------------------------------------------ #
+    def pull_rows(self, slots_per_pe: list[np.ndarray]) -> list[np.ndarray]:
+        """Payload rows at per-PE slots, one batched device gather
+        (the probe-time hit-row capture of the store data plane)."""
+        if self.payload is None:
+            raise ValueError("engine has no payload (feature_dim=0)")
+        jnp = self._jnp
+        C = self.max_capacity
+        lengths = [len(s) for s in slots_per_pe]
+        if sum(lengths) == 0:
+            empty = np.zeros((0, self.feature_dim), dtype=np.float32)
+            return [empty.copy() for _ in slots_per_pe]
+        flat = np.concatenate(
+            [
+                np.asarray(s, dtype=np.int64) + p * C
+                for p, s in enumerate(slots_per_pe)
+            ]
+        )
+        rows = np.asarray(jnp.take(self.payload, jnp.asarray(flat), axis=0))
+        return [
+            np.ascontiguousarray(b)
+            for b in np.split(rows, np.cumsum(lengths)[:-1])
+        ]
+
+    def place_rows_batch(self, slots_per_pe, blocks, device_block=None):
+        """Scatter admission rows into the device payload (one fused
+        ``.at[].set``); ``device_block`` skips the host→device upload
+        when the store gather already produced a device copy."""
+        if self.payload is None:
+            raise ValueError("engine has no payload (feature_dim=0)")
+        jnp = self._jnp
+        C = self.max_capacity
+        idx, rows = [], []
+        for p, slots in enumerate(slots_per_pe):
+            if len(slots) != len(blocks[p]):
+                raise ValueError(
+                    f"PE {p}: {len(slots)} slots != {len(blocks[p])} rows"
+                )
+            if len(slots):
+                idx.append(np.asarray(slots, dtype=np.int64) + p * C)
+                rows.append(blocks[p])
+        if not idx:
+            return
+        flat = np.concatenate(idx)
+        if device_block is not None:
+            data = device_block
+        else:
+            data = jnp.asarray(np.concatenate(rows, dtype=np.float32))
+        self.payload = self.payload.at[jnp.asarray(flat)].set(data)
+
+    # ------------------------------------------------------------------ #
+    def sync_to_engine(self) -> PrefetchEngine:
+        """Write the device state back into the numpy twin (end of a
+        device-mode run: snapshots, state-equality tests, reuse)."""
+        eng = self.engine
+        eng.ids = np.asarray(self._ids).astype(np.int64)
+        eng.scores = np.asarray(self._scores)
+        eng.valid = np.asarray(self._valid)
+        eng.accessed = np.asarray(self._accessed)
+        if self._weights is not None:
+            eng.weights = np.asarray(self._weights)
+        elif self._node_weights is not None:
+            # use_weights=False but node_weights given: the staged engine
+            # still refreshes slot weights at placement (dead state for
+            # scoring); reconstruct it instead of tracking it on device.
+            eng.weights = np.where(
+                eng.valid,
+                self._node_weights[np.maximum(eng.ids, 0)].astype(np.float32),
+                self._weights0,
+            ).astype(np.float32)
+        if self.payload is not None:
+            eng.payload = np.asarray(self.payload).reshape(
+                self.num_pes, self.max_capacity, self.feature_dim
+            )
+        eng.last_placed = [a.copy() for a in self.last_placed]
+        eng.last_slots = [a.copy() for a in self.last_slots]
+        eng.last_hit_slots = [a.copy() for a in self.last_hit_slots]
+        return eng

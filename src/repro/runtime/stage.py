@@ -313,3 +313,225 @@ class FetchStage:
             result.total_comm * self.feature_dim * self.feature_bytes
         )
         result.fetch_seconds = miss_gather.seconds + placed_gather.seconds
+
+
+class FusedFetchStage:
+    """Device-resident fetch plane: one fused launch per step.
+
+    The staged :class:`FetchStage` answers each step with two host
+    passes (probe, then commit) over numpy ``(P, C)`` state. This stage
+    drives a :class:`repro.runtime.engine.DeviceEngine` instead: buffer
+    state persists on device and each training step issues exactly one
+    fused score→replace→probe launch
+    (:func:`repro.kernels.ops.fused_step_batch`).
+
+    **Pipeline rotation.** The controller decision for step t is
+    computed on host from probe(t)'s metrics, so probe(t+1) — not
+    probe(t) — rides in step t's launch::
+
+        prime:   launch [probe(0)]                      (score/replace gated off)
+        step t:  decide(t) → sample(t+1) →
+                 launch [score(t), replace(t), probe(t+1)]
+
+    The in-kernel order score(t) → replace(t) → probe(t+1) is exactly
+    the staged order ``end_round`` → ``replace_round`` → next
+    ``lookup``, and the host order decide(t) → sample(t+1) matches the
+    staged driver's sample(t+1) → decide(t+1) interleaving, so RNG
+    draws, decision streams, and every exact trace stream stay
+    bit-identical (``tests/test_fused_step.py``, golden traces).
+
+    **Double-buffered gather.** With a feature store attached,
+    :meth:`begin_gather` lets the driver dispatch step t's miss-row
+    gather *before* drawing step t+1's sample — the gather overlaps the
+    ``SamplerPlane`` host work (true async overlap on the store's jax
+    backend; on the numpy backend the gather simply runs earlier with
+    identical results). Admission rows land in the device payload via
+    one batched scatter (``DeviceEngine.place_rows_batch``), and hit
+    rows for the *next* probe are captured from the updated payload —
+    the same capture-before-overwrite order the staged stage observes.
+    """
+
+    def __init__(
+        self,
+        dev,
+        uses_buffer: np.ndarray,
+        inference_cost: np.ndarray,
+        time_engine,
+        feature_dim: int,
+        mode: str,
+        part_of: np.ndarray | None = None,
+        store=None,
+        feature_bytes: int = 4,
+    ):
+        if time_engine.needs_pairs and part_of is None:
+            raise ValueError("per-home comm pricing needs part_of")
+        if store is not None and dev.payload is None:
+            raise ValueError(
+                "feature store needs an engine payload "
+                "(PrefetchEngine(feature_dim=...))"
+            )
+        P = dev.num_pes
+        self.dev = dev
+        self.uses_buffer = uses_buffer
+        self.inference_cost = inference_cost
+        self.time_engine = time_engine
+        self.feature_dim = feature_dim
+        self.feature_bytes = int(feature_bytes)
+        self.mode = mode
+        self.part_of = part_of
+        self.store = store
+        self.active = uses_buffer & (dev.capacity > 0)
+        self._capacity = dev.capacity.astype(np.float64)
+        self._prev_missed: list[np.ndarray] = [
+            np.array([], dtype=np.int64) for _ in range(P)
+        ]
+        self._pending: dict | None = None
+        self._last_replaced = np.zeros(P, dtype=np.int64)
+        self._have_replaced = False
+        self._no_decision = np.zeros(P, dtype=bool)
+
+    # ------------------------------------------------------------------ #
+    def prime(self, remote: list[np.ndarray], n_remote: np.ndarray) -> ProbeResult:
+        """Launch 0: probe the first minibatch only (score and replace
+        gated off), establishing the rotation invariant that a probe is
+        always in flight when the decision plane runs."""
+        if self._pending is not None:
+            raise RuntimeError("already primed: step() the pending round")
+        P = self.dev.num_pes
+        out = self.dev.fused_step(
+            remote,
+            [np.array([], dtype=np.int64)] * P,
+            self._no_decision,
+            self._no_decision,
+            self.active,
+        )
+        return self._stash_probe(remote, n_remote, out)
+
+    def begin_gather(self) -> None:
+        """Overlap hook: dispatch the pending round's miss-row gather now
+        (before the next sample draw). Idempotent; no-op without a store."""
+        pending = self._pending
+        if self.store is None or pending is None or "miss_gather" in pending:
+            return
+        pending["miss_gather"] = self.store.gather_batch(pending["missed"])
+
+    def step(
+        self,
+        decisions: np.ndarray,
+        stalls: np.ndarray,
+        next_remote: list[np.ndarray],
+        next_n_remote: np.ndarray,
+    ) -> tuple[CommitResult, ProbeResult]:
+        """Close round t and open round t+1 in one fused launch.
+
+        Returns ``(commit(t), probe(t+1))``; the final step passes empty
+        ``next_remote`` sets and discards the returned probe."""
+        if self._pending is None:
+            raise RuntimeError("nothing probed: prime() the pipeline first")
+        pending, self._pending = self._pending, None
+        dev = self.dev
+        out = dev.fused_step(
+            next_remote,
+            self._prev_missed,
+            self.uses_buffer,
+            decisions & self.uses_buffer,
+            self.active,
+        )
+        missed = pending["missed"]
+        self._prev_missed = missed
+        self._last_replaced = out.replaced
+        self._have_replaced = True
+        comm = np.array([len(m) for m in missed], dtype=np.int64)
+        total_comm = comm + out.replaced
+        t = self.time_engine.step(
+            build_step_comm(
+                missed,
+                dev.last_placed,
+                self.part_of,
+                dev.num_pes,
+                self.time_engine.needs_pairs,
+            ),
+            stalls,
+        )
+        commit = CommitResult(
+            replaced=out.replaced,
+            total_comm=total_comm,
+            step_time=t,
+            occupancy=dev.occupancy_of(out.n_valid),
+            missed=missed,
+            placed=list(dev.last_placed),
+        )
+        if self.store is not None:
+            self._serve_features(commit, pending)
+        # Stash after serving: probe(t+1)'s hit rows must see round t's
+        # admissions in the payload (capture-before-overwrite order).
+        probe = self._stash_probe(next_remote, next_n_remote, out)
+        return commit, probe
+
+    # ------------------------------------------------------------------ #
+    def _stash_probe(self, remote, n_remote, out) -> ProbeResult:
+        pending = {"missed": out.missed}
+        if self.store is not None:
+            pending["hit_masks"] = out.hit_masks
+            pending["hit_rows"] = self.dev.pull_rows(out.hit_slots)
+        self._pending = pending
+        pct_hits = np.where(
+            self.active,
+            np.where(
+                n_remote > 0, 100.0 * out.hits / np.maximum(n_remote, 1), 100.0
+            ),
+            0.0,
+        )
+        replaced_pct = np.where(
+            self._have_replaced & (self._capacity > 0),
+            100.0 * self._last_replaced / np.maximum(self._capacity, 1.0),
+            0.0,
+        )
+        return ProbeResult(
+            hit_masks=out.hit_masks,
+            missed=out.missed,
+            hits=out.hits,
+            pct_hits=pct_hits,
+            comm=np.array([len(m) for m in out.missed], dtype=np.int64),
+            occupancy=self.dev.occupancy_of(out.n_valid),
+            replaced_pct=replaced_pct,
+        )
+
+    def _serve_features(self, result: CommitResult, pending: dict) -> None:
+        """Store data path, fused-mode twin of ``FetchStage._serve_features``:
+        the miss gather may have been pre-dispatched by
+        :meth:`begin_gather`; admissions scatter into the *device*
+        payload in one batched ``.at[].set``."""
+        dev = self.dev
+        P = dev.num_pes
+        F = dev.feature_dim
+        miss_gather = pending.get("miss_gather") or self.store.gather_batch(
+            result.missed
+        )
+        placed_gather = self.store.gather_batch(dev.last_placed, device=True)
+        dev.place_rows_batch(
+            dev.last_slots,
+            placed_gather.blocks,
+            device_block=placed_gather.device_block,
+        )
+        hit_masks = pending["hit_masks"]
+        hit_rows = pending["hit_rows"]
+        features: list[np.ndarray] = []
+        feat_sums = np.zeros(P, dtype=np.float64)
+        bytes_measured = np.zeros(P, dtype=np.int64)
+        for p in range(P):
+            block = np.empty((len(hit_masks[p]), F), dtype=np.float32)
+            block[hit_masks[p]] = hit_rows[p]
+            block[~hit_masks[p]] = miss_gather.blocks[p]
+            features.append(block)
+            feat_sums[p] = block.sum(dtype=np.float64)
+            bytes_measured[p] = (
+                miss_gather.blocks[p].nbytes + placed_gather.blocks[p].nbytes
+            )
+        result.features = features
+        result.feat_sums = feat_sums
+        result.bytes_measured = bytes_measured
+        result.bytes_modeled = (
+            result.total_comm * self.feature_dim * self.feature_bytes
+        )
+        result.fetch_seconds = miss_gather.seconds + placed_gather.seconds

@@ -48,6 +48,11 @@ class StoreGather:
     blocks: list[np.ndarray]  # per-request (m_i, F) float32 feature blocks
     nbytes: int               # bytes actually moved out of the store
     seconds: float            # wall-clock time of the gather
+    #: Concatenated block as a jax device array (``gather_batch(...,
+    #: device=True)``) — the fused device hot path scatters it straight
+    #: into the device-resident engine payload without a second
+    #: host→device upload. None on host-only gathers.
+    device_block: object = None
 
 
 class FeatureStore:
@@ -220,13 +225,20 @@ class FeatureStore:
         block = self._gather_rows(rows)
         return block.reshape(arr.shape + (self.feature_dim,))
 
-    def gather_batch(self, id_lists) -> StoreGather:
+    def gather_batch(self, id_lists, device: bool = False) -> StoreGather:
         """One timed gather for a whole cluster's per-PE request lists.
 
         The P ragged requests are served by a single concatenated row
         gather and split back — this is the batched data path
         ``FetchStage.commit`` drives, and what the store microbenchmark
         races against a per-PE, per-home python pull loop.
+
+        ``device=True`` additionally returns the concatenated block as a
+        jax device array (``StoreGather.device_block``): the fused
+        device hot path (:class:`repro.runtime.stage.FusedFetchStage`)
+        scatters admission rows into the device-resident engine payload
+        without re-uploading the block it just pulled. The numpy blocks
+        (and every exact stream derived from them) are unchanged.
         """
         t0 = time.perf_counter()
         lengths = [len(x) for x in id_lists]
@@ -241,10 +253,16 @@ class FeatureStore:
             np.ascontiguousarray(b)
             for b in np.split(block, np.cumsum(lengths)[:-1])
         ]
+        device_block = None
+        if device:
+            import jax.numpy as jnp
+
+            device_block = jnp.asarray(block)
         return StoreGather(
             blocks=blocks,
             nbytes=int(block.nbytes),
             seconds=time.perf_counter() - t0,
+            device_block=device_block,
         )
 
     # ------------------------------------------------------------------ #

@@ -10,7 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def pytest_configure(config):
     # CI sets REQUIRE_HYPOTHESIS=1 (the `test` extra is installed there)
-    # so the six hypothesis property modules cannot silently degrade to
+    # so the seven hypothesis property modules cannot silently degrade to
     # skips: a missing/broken hypothesis install fails the session
     # instead of reporting green with the property tests never run.
     if os.environ.get("REQUIRE_HYPOTHESIS"):

@@ -1,0 +1,335 @@
+"""Parity + property tests for the device-resident fused hot path.
+
+The megakernel's contract has two halves:
+
+* **kernel parity** — one rotated ``DeviceEngine.fused_step`` launch per
+  step (score t → replace t → probe t+1) reproduces the staged
+  ``PrefetchEngine`` pipeline (``lookup`` → ``end_round`` →
+  ``replace_round``) *bit-identically*: per-query hit masks, buffer
+  state, per-PE stats and the placed-candidate/slot pairing, for every
+  scoring policy, on both the jnp oracle and the Pallas backend,
+  asserted here deterministically and (with the ``test`` extra) over
+  hypothesis-generated scenarios — ragged/empty/duplicate candidate
+  lists, zero-capacity PEs, warm-full buffers;
+* **runtime parity** — a full ``DistributedTrainer(device="jnp")`` run
+  produces the same exact-stream trace digest, engine state and logs as
+  the staged path for all four controllers in both queue modes. The
+  golden-trace half of this contract lives in ``tests/test_trace_golden``
+  (the device path must verify against unmodified golden traces).
+
+Catalog entry: ``docs/KERNELS.md#fused_step``.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.kernels import ops
+from repro.runtime.engine import DeviceEngine, PrefetchEngine
+
+# The property half of this module needs hypothesis (installed by the
+# `test` extra; CI's REQUIRE_HYPOTHESIS tier makes a missing install a
+# session failure via conftest). The deterministic half runs regardless.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover — conftest fails CI first
+    st = None
+
+POLICIES = ["rudder", "degree", "recency", "frequency", "hybrid"]
+BACKENDS = ["jnp", "pallas"]
+VARIANTS = ["distdgl", "fixed", "massivegnn", "rudder"]
+
+EMPTY = np.array([], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------- #
+# kernel parity: rotated fused launches vs the staged engine pipeline
+# ---------------------------------------------------------------------- #
+def _check_fused_vs_staged(
+    policy: str,
+    backend: str,
+    seed: int,
+    P: int = 5,
+    steps: int = 6,
+    n_nodes: int = 400,
+    warm_full: bool = False,
+) -> None:
+    """Drive the same step sequence through the staged pipeline and the
+    rotated fused launches; assert every observable is bit-identical."""
+    rng = np.random.default_rng(seed)
+    caps = [int(x) for x in rng.integers(1, 12, size=P)]
+    if P > 1:
+        caps[0] = 0  # zero-capacity PE rides along in every scenario
+    node_weights = (
+        (1.0 + rng.random(n_nodes)).astype(np.float32)
+        if policy == "degree"
+        else None
+    )
+    eng = PrefetchEngine(caps, policy=policy, node_weights=node_weights)
+    for p in range(P):
+        want = caps[p] if warm_full else int(rng.integers(0, 8))
+        ids = rng.choice(n_nodes, size=min(want, n_nodes), replace=False)
+        eng.insert(p, ids.astype(np.int64))
+    dev_src = copy.deepcopy(eng)
+    dev = DeviceEngine(dev_src, backend=backend)
+
+    uses_buffer = rng.random(P) > 0.2
+    active = uses_buffer & (eng.capacity > 0)
+    # Queries keep duplicates (no np.unique): the staged path dedups
+    # candidates on host, the fused path in-kernel — both must agree.
+    queries_all = [
+        [
+            rng.choice(n_nodes, size=rng.integers(0, 10)).astype(np.int64)
+            for _ in range(P)
+        ]
+        for _ in range(steps)
+    ]
+    decisions_all = [rng.random(P) > 0.4 for _ in range(steps)]
+
+    staged_hits = []
+    prev_missed = [EMPTY] * P
+    for t in range(steps):
+        hm, missed = eng.lookup(queries_all[t], active)
+        staged_hits.append([m.copy() for m in hm])
+        eng.end_round(uses_buffer)
+        eng.replace_round(prev_missed, decisions_all[t] & uses_buffer)
+        prev_missed = missed
+        staged_last = (list(eng.last_placed), list(eng.last_slots))
+
+    zeros = np.zeros(P, dtype=bool)
+    out = dev.fused_step(queries_all[0], [EMPTY] * P, zeros, zeros, active)
+    fused_hits = [out.hit_masks]
+    prev_missed_d = [EMPTY] * P
+    cur_missed = out.missed
+    for t in range(steps):
+        nq = queries_all[t + 1] if t + 1 < steps else [EMPTY] * P
+        out = dev.fused_step(
+            nq,
+            prev_missed_d,
+            uses_buffer,
+            decisions_all[t] & uses_buffer,
+            active,
+        )
+        if t + 1 < steps:
+            fused_hits.append(out.hit_masks)
+        prev_missed_d = cur_missed
+        cur_missed = out.missed
+        fused_last = (list(dev.last_placed), list(dev.last_slots))
+
+    dev.sync_to_engine()
+    for t in range(steps):
+        for p in range(P):
+            np.testing.assert_array_equal(
+                staged_hits[t][p], fused_hits[t][p], err_msg=f"hits t={t} p={p}"
+            )
+    for name in ("ids", "scores", "valid", "accessed", "weights"):
+        np.testing.assert_array_equal(
+            getattr(eng, name), getattr(dev_src, name), err_msg=name
+        )
+    for f in (
+        "lookups",
+        "hits",
+        "misses",
+        "replaced_total",
+        "replacement_rounds",
+        "skipped_rounds",
+    ):
+        np.testing.assert_array_equal(
+            getattr(eng.stats, f), getattr(dev_src.stats, f), err_msg=f
+        )
+    for p in range(P):
+        np.testing.assert_array_equal(
+            staged_last[0][p], fused_last[0][p], err_msg=f"last_placed p={p}"
+        )
+        np.testing.assert_array_equal(
+            staged_last[1][p], fused_last[1][p], err_msg=f"last_slots p={p}"
+        )
+
+
+class TestFusedKernelParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_matches_staged_pipeline(self, policy, backend):
+        _check_fused_vs_staged(policy, backend, seed=0)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_warm_full_buffers_replace_into_stale_only(self, backend):
+        """With every slot occupied at start, placements can only land in
+        slots the scoring round turned stale."""
+        _check_fused_vs_staged("frequency", backend, seed=1, warm_full=True)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_zero_capacity_cluster(self, backend):
+        """All-zero capacities (the distdgl baseline shape): every probe
+        misses, every replacement round places nothing."""
+        _check_fused_vs_staged("recency", backend, seed=2, P=1)
+
+    def test_device_engine_rejects_int64_overflow_ids(self):
+        eng = PrefetchEngine([4, 4], policy="frequency")
+        dev = DeviceEngine(copy.deepcopy(eng), backend="jnp")
+        big = np.array([2**31 + 7], dtype=np.int64)
+        active = np.ones(2, dtype=bool)
+        with pytest.raises(ValueError, match="2\\^31"):
+            dev.fused_step([big, EMPTY], [EMPTY, EMPTY], active, active, active)
+
+    def test_pallas_int64_fallback_matches_jnp(self):
+        """ids >= 2^31 cannot be represented in the Pallas kernel's int32
+        lanes: the dispatcher must fall back to the jnp oracle with
+        identical outputs (the ``frontier_unique_batch`` contract)."""
+        P, C, M = 2, 4, 3
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, 100, (P, C)).astype(np.int64)
+        ids[0, 0] = 2**31 + 11
+        q = rng.integers(0, 100, (P, M)).astype(np.int64)
+        c = rng.integers(0, 100, (P, M)).astype(np.int64)
+        state = dict(
+            scores=np.ones((P, C), np.float32),
+            valid=np.ones((P, C), bool),
+            accessed=np.zeros((P, C), bool),
+            in_capacity=np.ones((P, C), bool),
+        )
+        gate = np.ones(P, bool)
+        outs = {
+            b: ops.fused_step_batch(
+                ids,
+                state["scores"],
+                state["valid"],
+                state["accessed"],
+                state["in_capacity"],
+                None,
+                q,
+                c,
+                None,
+                gate,
+                gate,
+                gate,
+                backend=b,
+            )
+            for b in BACKENDS
+        }
+        for a, b in zip(outs["jnp"], outs["pallas"]):
+            if a is None or b is None:
+                assert a is b
+                continue
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_capacity_zero_state_direct(self, backend):
+        """C == 0 state arrays go through the oracle's static early
+        return on either backend (the Pallas grid never sees them)."""
+        P, M = 3, 4
+        empty = np.zeros((P, 0))
+        q = np.arange(P * M, dtype=np.int64).reshape(P, M)
+        gate = np.ones(P, bool)
+        out = ops.fused_step_batch(
+            empty.astype(np.int32),
+            empty.astype(np.float32),
+            empty.astype(bool),
+            empty.astype(bool),
+            empty.astype(bool),
+            None,
+            q,
+            q,
+            None,
+            gate,
+            gate,
+            gate,
+            backend=backend,
+        )
+        hit, hit_slot = np.asarray(out[5]), np.asarray(out[6])
+        assert not hit.any()
+        assert (hit_slot == -1).all()
+        assert np.asarray(out[9]).sum() == 0  # n_placed
+        assert np.asarray(out[10]).sum() == 0  # n_valid
+
+
+# ---------------------------------------------------------------------- #
+# hypothesis property suite: random scenarios through the same checker
+# ---------------------------------------------------------------------- #
+if st is not None:
+
+    @st.composite
+    def scenarios(draw):
+        """Random (policy, backend, seed, P, steps, warm_full): ragged /
+        empty / duplicate candidate streams arise from the seeded query
+        draws inside the checker."""
+        return (
+            draw(st.sampled_from(POLICIES)),
+            draw(st.sampled_from(BACKENDS)),
+            draw(st.integers(0, 2**31 - 1)),
+            draw(st.integers(min_value=1, max_value=6)),
+            draw(st.integers(min_value=1, max_value=5)),
+            draw(st.booleans()),
+        )
+
+    class TestFusedStepProperties:
+        @settings(max_examples=20, deadline=None)
+        @given(data=scenarios())
+        def test_fused_matches_staged_pipeline(self, data):
+            policy, backend, seed, P, steps, warm_full = data
+            _check_fused_vs_staged(
+                policy, backend, seed, P=P, steps=steps, warm_full=warm_full
+            )
+
+
+# ---------------------------------------------------------------------- #
+# runtime parity: DistributedTrainer(device=...) vs the staged path
+# ---------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def parts():
+    g = generate("products", seed=0, scale=0.15)
+    return partition_graph(g, 4)
+
+
+COMMON = dict(epochs=2, batch_size=16, train_model=False, buffer_frac=0.25)
+
+
+def _run(parts, variant, device, **extra):
+    kw = dict(COMMON, trace=True, **extra)
+    if variant == "rudder":
+        kw["deciders"] = ["gemma3-4b"]
+    tr = DistributedTrainer(parts, variant=variant, device=device, **kw)
+    return tr, tr.run()
+
+
+def _assert_device_run_matches(parts, variant, **extra):
+    t0, r0 = _run(parts, variant, False, **extra)
+    t1, r1 = _run(parts, variant, "jnp", **extra)
+    assert t0.last_trace.exact_digest() == t1.last_trace.exact_digest()
+    for name in ("ids", "scores", "valid", "accessed", "weights"):
+        np.testing.assert_array_equal(
+            getattr(t0.engine, name), getattr(t1.engine, name), err_msg=name
+        )
+    for p, (a, b) in enumerate(zip(r0.logs, r1.logs)):
+        assert a.pct_hits == b.pct_hits, f"PE {p} pct_hits"
+        assert a.comm_volume == b.comm_volume, f"PE {p} comm_volume"
+        assert a.replaced == b.replaced, f"PE {p} replaced"
+        assert a.decisions == b.decisions, f"PE {p} decisions"
+        assert a.step_time == b.step_time, f"PE {p} step_time"
+    assert r0.epoch_times == r1.epoch_times
+
+
+class TestDeviceTrainerParity:
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_async_trace_digest_and_state(self, parts, variant):
+        _assert_device_run_matches(parts, variant)
+
+    @pytest.mark.parametrize("variant", ["fixed", "rudder"])
+    def test_sync_mode_parity(self, parts, variant):
+        _assert_device_run_matches(parts, variant, mode="sync")
+
+    def test_feature_store_payload_parity(self, parts):
+        """With the sharded store enabled the device path double-buffers
+        the feature gather; payload bytes and streams must not drift."""
+        t0, r0 = _run(parts, "fixed", False, feature_store=True)
+        t1, r1 = _run(parts, "fixed", "jnp", feature_store=True)
+        assert t0.last_trace.exact_digest() == t1.last_trace.exact_digest()
+        assert (t0.engine.payload is None) == (t1.engine.payload is None)
+        if t0.engine.payload is not None:
+            np.testing.assert_array_equal(t0.engine.payload, t1.engine.payload)
+        for a, b in zip(r0.logs, r1.logs):
+            assert a.comm_volume == b.comm_volume
+            assert a.feat_sums == b.feat_sums
