@@ -14,6 +14,12 @@ fused-vs-staged runtime digest gate — ``--gate`` fails the run when any
 row reports ``streams_match=False``). ``--json`` writes a
 machine-readable artifact uploaded by CI next to ``BENCH_sweep.json``.
 
+``--device-e2e`` races the single-launch device step (raw frontier in,
+packed readback out — ``DeviceEngine.fused_step_raw``) against the
+staged-gather device path (host dedup feeding ``fused_step``) at P=256,
+asserting identical streams and reporting the raw path's host-transfer
+count per step (the CI ``BENCH_device_e2e.json`` artifact).
+
 ``--store`` benchmarks the feature-store data plane instead: batched
 ``FeatureStore.gather_batch`` GB/s against a per-PE, per-home python
 pull loop (the DistDGL KVStore shape) at P=8, the Pallas-kernel gather
@@ -215,6 +221,117 @@ def _fused_runtime_digest(quick: bool = False) -> None:
     )
 
 
+def _device_e2e_speedup(iters: int = 5, quick: bool = False) -> None:
+    """The single-launch claim: folding the frontier dedup into the
+    launch (``fused_step_raw`` — raw ``(P, Mt)`` frontier in, packed
+    readback out, ≤2 host transfers per step) beats the staged-gather
+    device path (host dedup/remote extraction + per-list padding feeding
+    ``fused_step``) at P=256.
+
+    Both sides run the same frontier/decision sequence from the same
+    warm state; the per-step miss/replacement streams are asserted
+    identical (``streams_match`` gates the run) and the raw side's
+    actual host-transfer count per step rides in the derived column.
+    """
+    import copy
+
+    from repro.runtime.engine import DeviceEngine, PrefetchEngine
+
+    n_nodes = 100_000
+    C, Mt = 64, 256
+    for P in ([256] if quick else [64, 256]):
+        rng = np.random.default_rng(0)
+        part_of = rng.integers(0, P, size=n_nodes).astype(np.int64)
+        eng = PrefetchEngine([C] * P)
+        for p in range(P):
+            eng.insert(
+                p, rng.choice(n_nodes, size=C // 2, replace=False).astype(np.int64)
+            )
+        steps = iters + 1
+        frontiers = [
+            rng.integers(0, n_nodes, size=(P, Mt)) for _ in range(steps)
+        ]
+        decisions = [rng.random(P) > 0.3 for _ in range(steps)]
+        ones = np.ones(P, dtype=bool)
+        zeros = np.zeros(P, dtype=bool)
+        own = np.arange(P)[:, None]
+        raw_src = copy.deepcopy(eng)
+
+        def dedup(f):
+            # The staged path's host work: vectorized sort + first-mask
+            # dedup + remote filter (what SamplerPlane.sample_all does),
+            # then the per-PE split fused_step re-concatenates.
+            sk = np.sort(f, axis=1)
+            first = np.concatenate(
+                [np.ones((P, 1), bool), sk[:, 1:] != sk[:, :-1]], axis=1
+            )
+            mask = first & (part_of[sk] != own)
+            counts = mask.sum(axis=1)
+            flat = sk[mask]
+            ends = np.cumsum(counts)
+            return [flat[a:b] for a, b in zip(ends - counts, ends)]
+
+        # -- staged-gather device path (host dedup + fused_step) -------- #
+        dev_a = DeviceEngine(eng, backend="jnp")
+        empty = [np.array([], dtype=np.int64) for _ in range(P)]
+        out = dev_a.fused_step(dedup(frontiers[0]), empty, zeros, zeros, ones)
+        prev_a, cur_missed = empty, out.missed
+        staged_streams, t_staged = [], []
+        for t in range(steps):
+            nf = frontiers[t + 1] if t + 1 < steps else None
+            t0 = time.perf_counter()
+            nq = dedup(nf) if nf is not None else empty
+            out = dev_a.fused_step(nq, prev_a, ones, decisions[t], ones)
+            jax.block_until_ready(dev_a._ids)
+            t_staged.append(time.perf_counter() - t0)
+            staged_streams.append(
+                ([len(m) for m in cur_missed], out.replaced.tolist())
+            )
+            prev_a = cur_missed
+            cur_missed = out.missed
+
+        # -- single-launch raw path (dedup folded into the kernel) ------ #
+        dev_b = DeviceEngine(raw_src, backend="jnp", part_of=part_of)
+        out = dev_b.fused_step_raw(frontiers[0], zeros, zeros, ones)
+        cur_missed = out.missed
+        t0_transfers = dict(dev_b.transfers)
+        raw_streams, t_raw = [], []
+        for t in range(steps):
+            nf = (
+                frontiers[t + 1]
+                if t + 1 < steps
+                else np.full((P, 0), -1, dtype=np.int64)
+            )
+            t0 = time.perf_counter()
+            out = dev_b.fused_step_raw(nf, ones, decisions[t], ones)
+            jax.block_until_ready(dev_b._ids)
+            t_raw.append(time.perf_counter() - t0)
+            raw_streams.append(
+                ([len(m) for m in cur_missed], out.replaced.tolist())
+            )
+            cur_missed = out.missed
+
+        match = staged_streams == raw_streams
+        per_step = (dev_b.transfers["h2d"] - t0_transfers["h2d"]) / steps + (
+            dev_b.transfers["d2h"] - t0_transfers["d2h"]
+        ) / steps
+        staged_us = min(t_staged[1:]) * 1e6
+        raw_us = min(t_raw[1:]) * 1e6
+        speedup = staged_us / raw_us if raw_us > 0 else float("inf")
+        _emit(
+            f"device_e2e_raw_p{P}_c{C}_mt{Mt}",
+            raw_us,
+            f"staged_us={staged_us:.1f} speedup={speedup:.2f}x "
+            f"transfers_per_step={per_step:.1f} streams_match={match}",
+        )
+
+
+def run_device_e2e(quick: bool = False):
+    _ROWS.clear()
+    _device_e2e_speedup(iters=8 if quick else 12, quick=quick)
+    return True
+
+
 def _store_gather_speedup(iters: int = 5, quick: bool = False) -> None:
     """The store-plane claim: one batched multi-PE gather beats the
     per-PE, per-home python pull loop (one slice per (trainer, home)
@@ -389,6 +506,7 @@ def validate_rows(rows: list[dict]) -> list[str]:
 def main(argv: list[str]) -> int:
     quick = "--quick" in argv
     store = "--store" in argv
+    device_e2e = "--device-e2e" in argv
     gate = "--gate" in argv
     json_path = None
     for arg in argv:
@@ -396,6 +514,8 @@ def main(argv: list[str]) -> int:
             json_path = arg.split("=", 1)[1]
     if store:
         run_store(quick=quick)
+    elif device_e2e:
+        run_device_e2e(quick=quick)
     else:
         run(quick=quick)
     if json_path:

@@ -265,6 +265,7 @@ class DistributedTrainer:
         trace: object = False,
         feature_store: object = False,
         device: object = False,
+        readback_every: int = 1,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -284,6 +285,20 @@ class DistributedTrainer:
         if device and runtime == "legacy":
             raise ValueError("device mode requires runtime='vectorized'")
         self.device = device or False
+        # K-step readback cadence for sweep runs: with device mode on and
+        # K > 1, the driver pulls only a stacked (K, P, 4) counter block
+        # every K launches instead of a per-step readback. Incompatible
+        # with anything that consumes per-step id streams — the driver
+        # raises (see repro.runtime.driver._check_cadence_eligible).
+        if not isinstance(readback_every, (int, np.integer)) or isinstance(
+            readback_every, bool
+        ) or readback_every < 1:
+            raise ValueError(
+                f"readback_every must be an int >= 1, got {readback_every!r}"
+            )
+        if readback_every > 1 and not device:
+            raise ValueError("readback_every > 1 requires device=...")
+        self.readback_every = int(readback_every)
         if time_engine not in ("closed_form", "event"):
             raise ValueError(
                 "time_engine must be 'closed_form' or 'event', "

@@ -24,7 +24,9 @@ from .generate import Graph
 class MiniBatch:
     seeds: np.ndarray            # (B,)
     layer_nbrs: list[np.ndarray]  # [(B, f1), (B*f1, f2), ...]
-    unique_nodes: np.ndarray     # all distinct node ids touched
+    #: All distinct node ids touched; None on the device-native raw path
+    #: (``SamplerPlane.sample_all_raw``), where dedup happens in-launch.
+    unique_nodes: np.ndarray | None
     labels: np.ndarray           # (B,)
 
 
@@ -164,6 +166,79 @@ class SamplerPlane:
         return frontier_dedup(sorted_keys, is_remote)
 
     # ------------------------------------------------------------------ #
+    def _expand_blocks(
+        self, seeds: list[np.ndarray], rng: np.random.Generator
+    ) -> tuple[np.ndarray, list[np.ndarray], np.ndarray]:
+        """Batched fanout expansion for P equal-size seed blocks.
+
+        Pre-draws each PE's uniform blocks in the legacy order
+        (PE-major, layer-minor: one flat draw per PE consumes the
+        generator stream exactly as that PE's sequence of per-layer
+        draws would) and expands all P frontiers on the shared CSR.
+        Returns ``(seed_mat (P, B), layers, touched (P, Mt))`` where
+        ``touched`` is the raw concatenated frontier — seeds plus every
+        sampled neighbor, unsorted and with duplicates.
+        """
+        P = len(seeds)
+        B = len(seeds[0])
+        g = self.graph
+        sizes = self._layer_sizes(B)
+        total = sum(n * f for n, f in sizes)
+        draws = np.stack([rng.random(total) for _ in range(P)])  # (P, total)
+        layer_u, off = [], 0
+        for n, f in sizes:
+            layer_u.append(draws[:, off : off + n * f].reshape(P, n, f))
+            off += n * f
+
+        seed_mat = np.stack(seeds)                               # (P, B)
+        frontier = seed_mat
+        layers: list[np.ndarray] = []
+        for (n, f), u in zip(sizes, layer_u):
+            deg = g.indptr[frontier + 1] - g.indptr[frontier]    # (P, n)
+            offs = (u * np.maximum(deg, 1)[..., None]).astype(np.int64)
+            nbrs = _gather_neighbors(g, frontier, deg, offs)     # (P, n, f)
+            layers.append(nbrs)
+            frontier = nbrs.reshape(P, -1)
+        touched = np.concatenate(
+            [seed_mat] + [nb.reshape(P, -1) for nb in layers], axis=1
+        )                                                        # (P, Mt)
+        return seed_mat, layers, touched
+
+    def sample_all_raw(
+        self,
+        seed_blocks: list[np.ndarray],
+        rng: np.random.Generator,
+    ) -> tuple[list[MiniBatch], np.ndarray]:
+        """Device-native output path: expansion only, no host dedup.
+
+        Returns ``(minibatches, touched)`` where ``touched`` is the raw
+        ``(P, Mt)`` frontier block (int32 when ids fit) destined for
+        :meth:`repro.runtime.engine.DeviceEngine.fused_step_raw` — the
+        fused launch performs the unique/remote extraction on device, so
+        the returned minibatches carry ``unique_nodes=None``. Consumes
+        the RNG identically to :meth:`sample_all`, which is what makes
+        the raw and staged device paths replay the same trace. Requires
+        equal-size seed blocks (the caller gates on this — see
+        ``runtime/driver.py``).
+        """
+        seeds = [np.asarray(s, dtype=np.int64) for s in seed_blocks]
+        if len(seeds) == 0 or len({len(s) for s in seeds}) != 1:
+            raise ValueError("sample_all_raw requires equal-size seed blocks")
+        g = self.graph
+        seed_mat, layers, touched = self._expand_blocks(seeds, rng)
+        if g.num_nodes <= np.iinfo(np.int32).max:
+            touched = touched.astype(np.int32)
+        minibatches = [
+            MiniBatch(
+                seeds=seeds[p],
+                layer_nbrs=[nb[p] for nb in layers],
+                unique_nodes=None,
+                labels=g.labels[seeds[p]],
+            )
+            for p in range(len(seeds))
+        ]
+        return minibatches, touched
+
     def sample_all(
         self,
         seed_blocks: list[np.ndarray],
@@ -183,38 +258,13 @@ class SamplerPlane:
         lengths = {len(s) for s in seeds}
         if P == 0 or len(lengths) != 1:
             return self._sample_ragged(seeds, rng, part_of)
-        B = lengths.pop()
         g = self.graph
-        sizes = self._layer_sizes(B)
-        total = sum(n * f for n, f in sizes)
-
-        # Pre-draw each PE's uniform blocks in the legacy order (PE-major,
-        # layer-minor): one flat draw per PE consumes the generator stream
-        # exactly as that PE's sequence of per-layer draws would.
-        draws = np.stack([rng.random(total) for _ in range(P)])  # (P, total)
-        layer_u, off = [], 0
-        for n, f in sizes:
-            layer_u.append(draws[:, off : off + n * f].reshape(P, n, f))
-            off += n * f
-
-        # Batched fanout expansion on the shared CSR.
-        seed_mat = np.stack(seeds)                               # (P, B)
-        frontier = seed_mat
-        layers: list[np.ndarray] = []
-        for (n, f), u in zip(sizes, layer_u):
-            deg = g.indptr[frontier + 1] - g.indptr[frontier]    # (P, n)
-            offs = (u * np.maximum(deg, 1)[..., None]).astype(np.int64)
-            nbrs = _gather_neighbors(g, frontier, deg, offs)     # (P, n, f)
-            layers.append(nbrs)
-            frontier = nbrs.reshape(P, -1)
+        seed_mat, layers, touched = self._expand_blocks(seeds, rng)
 
         # Fused unique + remote across all P frontiers: one row-sort,
         # one first-occurrence/remote mask, one ragged extraction. The
         # sort runs in int32 when ids fit (half the bandwidth of the
         # int64 ``np.unique`` the scalar path pays per PE).
-        touched = np.concatenate(
-            [seed_mat] + [nb.reshape(P, -1) for nb in layers], axis=1
-        )                                                        # (P, M)
         if g.num_nodes <= np.iinfo(np.int32).max:
             touched = touched.astype(np.int32)
         sorted_keys = np.sort(touched, axis=1)

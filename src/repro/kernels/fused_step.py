@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core import scoring
+from . import ref as _ref
 
 LANES = 128
 
@@ -422,4 +423,314 @@ def fused_step_pallas(
         jnp.minimum(slot_pos[:, :C], jnp.int32(C + K + 1)),
         jnp.sum(placed_b.astype(jnp.int32), axis=1),
         jnp.sum(valid2.astype(jnp.int32), axis=1),
+    )
+
+
+def _make_frontier_kernel(
+    increment, decay, threshold, score_cap, mode, initial_score, weighted
+):
+    """Kernel factory for the single-launch frontier step: the fused
+    score→replace→probe body of :func:`_make_fused_kernel` with the
+    frontier dedup folded in front (first-occurrence + remote masks
+    from the row-sorted keys) and the probe folded into one per-position
+    ``code`` output (0 local/dup, 1 remote miss, 2+slot remote hit)."""
+
+    def _run(ids, s, v, a, incap, w, sk, prev, rem, cand, cand_w, gates):
+        active_score = gates[0, 0] != 0
+        do_replace = gates[0, 1] != 0
+        active_probe = gates[0, 2] != 0
+        first = jnp.logical_and(sk != prev, sk >= 0)
+        remote = jnp.logical_and(first, rem != 0)
+        q = jnp.where(remote, sk, jnp.int32(-1))
+        ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = _fused_body(
+            ids,
+            s,
+            v != 0,
+            a != 0,
+            incap != 0,
+            w,
+            q,
+            cand,
+            cand_w,
+            active_score,
+            do_replace,
+            active_probe,
+            increment=increment,
+            decay=decay,
+            threshold=threshold,
+            score_cap=score_cap,
+            mode=mode,
+            initial_score=initial_score,
+        )
+        code = jnp.where(
+            remote,
+            jnp.where(hit, hit_slot + 2, jnp.int32(1)),
+            jnp.int32(0),
+        )
+        return ids2, s2, v2, acc3, w2, code, placed, slot_pos
+
+    if weighted:
+
+        def kernel(
+            ids_ref,
+            scores_ref,
+            valid_ref,
+            accessed_ref,
+            incap_ref,
+            weights_ref,
+            sk_ref,
+            prev_ref,
+            rem_ref,
+            cand_ref,
+            candw_ref,
+            gates_ref,
+            ids_out,
+            scores_out,
+            valid_out,
+            acc_out,
+            w_out,
+            code_out,
+            placed_out,
+            slotpos_out,
+        ):
+            ids2, s2, v2, acc3, w2, code, placed, slot_pos = _run(
+                ids_ref[...],
+                scores_ref[...],
+                valid_ref[...],
+                accessed_ref[...],
+                incap_ref[...],
+                weights_ref[...],
+                sk_ref[...],
+                prev_ref[...],
+                rem_ref[...],
+                cand_ref[...],
+                candw_ref[...],
+                gates_ref[...],
+            )
+            ids_out[...] = ids2
+            scores_out[...] = s2
+            valid_out[...] = v2.astype(jnp.int32)
+            acc_out[...] = acc3.astype(jnp.int32)
+            w_out[...] = w2
+            code_out[...] = code
+            placed_out[...] = placed.astype(jnp.int32)
+            slotpos_out[...] = slot_pos
+
+    else:
+
+        def kernel(
+            ids_ref,
+            scores_ref,
+            valid_ref,
+            accessed_ref,
+            incap_ref,
+            sk_ref,
+            prev_ref,
+            rem_ref,
+            cand_ref,
+            gates_ref,
+            ids_out,
+            scores_out,
+            valid_out,
+            acc_out,
+            code_out,
+            placed_out,
+            slotpos_out,
+        ):
+            ids2, s2, v2, acc3, _, code, placed, slot_pos = _run(
+                ids_ref[...],
+                scores_ref[...],
+                valid_ref[...],
+                accessed_ref[...],
+                incap_ref[...],
+                None,
+                sk_ref[...],
+                prev_ref[...],
+                rem_ref[...],
+                cand_ref[...],
+                None,
+                gates_ref[...],
+            )
+            ids_out[...] = ids2
+            scores_out[...] = s2
+            valid_out[...] = v2.astype(jnp.int32)
+            acc_out[...] = acc3.astype(jnp.int32)
+            code_out[...] = code
+            placed_out[...] = placed.astype(jnp.int32)
+            slotpos_out[...] = slot_pos
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cand_cap",
+        "increment",
+        "decay",
+        "threshold",
+        "score_cap",
+        "mode",
+        "initial_score",
+        "interpret",
+    ),
+)
+def fused_frontier_step_pallas(
+    ids,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    touched_aug,
+    part_of,
+    cand,
+    node_weights,
+    payload,
+    table,
+    loc,
+    *,
+    cand_cap: int,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+    interpret: bool = True,
+):
+    """Pallas twin of :func:`repro.kernels.ref.fused_frontier_step` —
+    one jit dispatch per training step covers the whole pipeline.
+
+    The (P, Mt) frontier sort, the ``part_of`` remoteness gather and the
+    epilogue (miss compaction, packed readback assembly, feature-table
+    payload scatter — all global gathers/sorts XLA already fuses well)
+    run as jnp stages *inside this jit*; the per-PE dedup + score +
+    replace + probe core runs as one ``grid=(P,)`` Pallas launch over
+    lane-padded blocks (padding: ``sk``/``prev``/``cand`` → -1, masks →
+    0 — a padded position is never first, never remote, never fresh).
+    Outputs are bit-identical to the oracle; dispatch via
+    :func:`repro.kernels.ops.fused_frontier_step_batch`. Catalog entry
+    ``docs/KERNELS.md#fused_step``.
+    """
+    P, C = ids.shape
+    (
+        active_score,
+        do_replace,
+        active_probe,
+        sk,
+        prev,
+        rem,
+        _remote,
+    ) = _ref.frontier_prologue(touched_aug, part_of)
+    Mt = sk.shape[1]
+    K = cand.shape[1]
+    weighted = weights is not None
+    cw = _ref.cand_weights_of(cand, node_weights) if weighted else None
+
+    ids_p = _pad_lanes(ids.astype(jnp.int32), LANES, -1)
+    s_p = _pad_lanes(scores.astype(jnp.float32), LANES, 1.0)
+    v_p = _pad_lanes(valid.astype(jnp.int32), LANES, 0)
+    a_p = _pad_lanes(accessed.astype(jnp.int32), LANES, 0)
+    cap_p = _pad_lanes(in_capacity.astype(jnp.int32), LANES, 0)
+    sk_p = _pad_lanes(sk, LANES, -1)
+    prev_p = _pad_lanes(prev, LANES, -1)
+    rem_p = _pad_lanes(rem.astype(jnp.int32), LANES, 0)
+    c_p = _pad_lanes(cand.astype(jnp.int32), LANES, -1)
+    gates = jnp.stack(
+        [
+            active_score.astype(jnp.int32),
+            do_replace.astype(jnp.int32),
+            active_probe.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    gates = _pad_lanes(gates, LANES, 0)
+    Cp, Mp, Kp = ids_p.shape[1], sk_p.shape[1], c_p.shape[1]
+
+    def spec(width):
+        return pl.BlockSpec((1, width), lambda i: (i, 0))
+
+    operands = [ids_p, s_p, v_p, a_p, cap_p]
+    if weighted:
+        operands.append(_pad_lanes(weights.astype(jnp.float32), LANES, 1.0))
+    operands += [sk_p, prev_p, rem_p, c_p]
+    if weighted:
+        operands.append(_pad_lanes(cw.astype(jnp.float32), LANES, 0.0))
+    operands.append(gates)
+
+    out_specs = [spec(Cp)] * (5 if weighted else 4) + [
+        spec(Mp),
+        spec(Kp),
+        spec(Cp),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.float32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+    if weighted:
+        out_shape.append(jax.ShapeDtypeStruct((P, Cp), jnp.float32))
+    out_shape += [
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Kp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+
+    outs = pl.pallas_call(
+        _make_frontier_kernel(
+            float(increment),
+            float(decay),
+            float(threshold),
+            float(score_cap),
+            mode,
+            float(initial_score),
+            weighted,
+        ),
+        grid=(P,),
+        in_specs=[spec(x.shape[1]) for x in operands],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+    if weighted:
+        ids2, s2, v2, acc3, w2, code, placed, slot_pos = outs
+        w_out = w2[:, :C]
+    else:
+        ids2, s2, v2, acc3, code, placed, slot_pos = outs
+        w_out = None
+    ids2 = ids2[:, :C]
+    valid2 = v2[:, :C] != 0
+    placed_b = placed[:, :K] != 0
+    code = code[:, :Mt]
+    # Same sentinel clamp as fused_step_pallas: the kernel's `big` uses
+    # lane-padded C/K widths.
+    slot_pos = jnp.minimum(slot_pos[:, :C], jnp.int32(C + K + 1))
+    n_place = jnp.sum(placed_b.astype(jnp.int32), axis=1)
+    n_valid = jnp.sum(valid2.astype(jnp.int32), axis=1)
+    cand_next, packed, counters, payload2 = _ref.frontier_pack(
+        sk,
+        code,
+        placed_b,
+        slot_pos,
+        n_place,
+        n_valid,
+        ids2,
+        payload,
+        table,
+        loc,
+        cand_cap=cand_cap,
+    )
+    return (
+        ids2,
+        s2[:, :C],
+        valid2,
+        acc3[:, :C] != 0,
+        w_out,
+        payload2,
+        cand_next,
+        packed,
+        counters,
     )

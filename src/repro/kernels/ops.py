@@ -17,6 +17,7 @@ import functools
 
 from . import ref
 from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
+from .fused_step import fused_frontier_step_pallas as _fused_frontier_step_pallas
 from .fused_step import fused_step_pallas as _fused_step_pallas
 from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
@@ -37,6 +38,8 @@ __all__ = [
     "score_policy_update_batch",
     "frontier_unique_batch",
     "fused_step_batch",
+    "fused_frontier_step_batch",
+    "pack_readback",
     "mla_flash_decode",
     "ref",
 ]
@@ -53,6 +56,32 @@ _FUSED_STATICS = (
 _fused_step_ref = functools.partial(
     jax.jit, static_argnames=_FUSED_STATICS
 )(ref.fused_step)
+
+_FRONTIER_STATICS = _FUSED_STATICS + ("cand_cap",)
+
+_fused_frontier_ref = functools.partial(
+    jax.jit, static_argnames=_FRONTIER_STATICS
+)(ref.fused_frontier_step)
+
+
+@jax.jit
+def pack_readback(hit, hit_slot, placed, slot_pos, n_valid):
+    """Pack the staged fused-step launch's five host-facing outputs into
+    one int32 block ``[hit | hit_slot | placed | slot_pos | n_valid]``
+    of width ``2*M + K + C + 1`` — a single device→host transfer per
+    step instead of five small pulls (the residual ~0.4 ms/step
+    ``np.asarray`` tax flagged in ``runtime/engine.py``). The host
+    slices by the widths it already knows."""
+    return jnp.concatenate(
+        [
+            hit.astype(jnp.int32),
+            hit_slot.astype(jnp.int32),
+            placed.astype(jnp.int32),
+            slot_pos.astype(jnp.int32),
+            n_valid[:, None].astype(jnp.int32),
+        ],
+        axis=1,
+    )
 
 
 def fused_step_batch(
@@ -151,6 +180,91 @@ def fused_step_batch(
         active_score,
         do_replace,
         active_probe,
+        **constants,
+    )
+
+
+def fused_frontier_step_batch(
+    ids,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    touched_aug,
+    part_of,
+    cand,
+    node_weights,
+    payload,
+    table,
+    loc,
+    *,
+    cand_cap: int,
+    increment: float = 1.0,
+    decay: float = 0.95,
+    threshold: float = 0.95,
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = 1.0,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    """Single-launch device step: dedup → score → replace → probe →
+    gather, one dispatch per minibatch.
+
+    ``touched_aug`` is the raw ``(P, Mt + 1)`` frontier block (unsorted,
+    duplicated) with the per-PE gate bits packed into its last column —
+    the step's one host→device transfer. ``cand`` is the previous
+    launch's on-device miss compaction; ``part_of`` / ``node_weights`` /
+    ``payload`` / ``table`` / ``loc`` are persistent device arrays. All
+    int arrays must already be int32 — the caller
+    (:class:`repro.runtime.engine.DeviceEngine`) owns the int64 range
+    guard up front, there is no per-step fallback to re-check.
+
+    Returns ``(ids2, scores2, valid2, accessed3, weights2, payload2,
+    cand_next, packed, counters)``; only ``packed`` (or, on the K-step
+    readback cadence, ``counters``) ever crosses back to host.
+    ``backend="jnp"`` runs the jit'd oracle
+    :func:`repro.kernels.ref.fused_frontier_step`; ``backend="pallas"``
+    the Pallas megakernel, falling back to the oracle — identical
+    outputs — for the degenerate shapes the grid cannot express
+    (zero-capacity buffers, the final launch's empty frontier).
+    Catalog entry ``docs/KERNELS.md#fused_step``.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend must be 'jnp' or 'pallas', got {backend!r}")
+    constants = dict(
+        cand_cap=int(cand_cap),
+        increment=float(increment),
+        decay=float(decay),
+        threshold=float(threshold),
+        score_cap=float(score_cap),
+        mode=mode,
+        initial_score=float(initial_score),
+    )
+    if backend == "pallas" and (
+        ids.shape[1] == 0 or touched_aug.shape[1] <= 1
+    ):
+        backend = "jnp"
+    fn = (
+        functools.partial(_fused_frontier_step_pallas, interpret=interpret)
+        if backend == "pallas"
+        else _fused_frontier_ref
+    )
+    return fn(
+        ids,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        touched_aug,
+        part_of,
+        cand,
+        node_weights,
+        payload,
+        table,
+        loc,
         **constants,
     )
 

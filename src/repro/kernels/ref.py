@@ -325,6 +325,238 @@ def fused_step(
     )
 
 
+def frontier_prologue(touched_aug: jax.Array, part_of: jax.Array):
+    """Device-side frontier ingest shared by the fused frontier-step
+    oracle and its Pallas twin.
+
+    ``touched_aug`` is the raw ``(P, Mt + 1)`` sampled-frontier block —
+    every node id the fanout expansion touched, **unsorted and with
+    duplicates** — whose last column packs the three per-PE gate bits
+    (``active_score | do_replace << 1 | active_probe << 2``), so one
+    host→device transfer carries both the frontier and the step's
+    control state. Returns the unpacked gates plus the row-sorted keys
+    ``sk``, their left-shifted predecessors ``prev``, the raw per-
+    position remoteness flag ``rem`` (``part_of[sk] != own``), and the
+    fused unique-remote mask ``remote = first & rem`` — exactly the
+    sorted-unique remote extraction ``SamplerPlane.sample_all`` performs
+    on host (``frontier_dedup`` over row-sorted keys), so the implied
+    query list ``where(remote, sk, -1)`` enumerates each PE's remote
+    fetch set in the same ascending order the staged pipeline probes.
+    """
+    P = touched_aug.shape[0]
+    touched = touched_aug[:, :-1].astype(jnp.int32)
+    gates = touched_aug[:, -1].astype(jnp.int32)
+    active_score = (gates & 1) != 0
+    do_replace = (gates & 2) != 0
+    active_probe = (gates & 4) != 0
+    sk = jnp.sort(touched, axis=1)
+    prev = jnp.concatenate(
+        [jnp.full((P, 1), -1, dtype=jnp.int32), sk[:, :-1]], axis=1
+    )
+    first = (sk != prev) & (sk >= 0)
+    own = jnp.arange(P, dtype=jnp.int32)[:, None]
+    rem = jnp.take(part_of, jnp.maximum(sk, 0)).astype(jnp.int32) != own
+    remote = first & rem
+    return active_score, do_replace, active_probe, sk, prev, rem, remote
+
+
+def cand_weights_of(cand: jax.Array, node_weights: jax.Array | None):
+    """Per-candidate degree weights, device twin of the staged gather
+    (``cw[cmask] = node_weights[allc]`` over a ones-filled array)."""
+    if node_weights is None:
+        return jnp.ones(cand.shape, dtype=jnp.float32)
+    return jnp.where(
+        cand >= 0,
+        jnp.take(node_weights, jnp.maximum(cand, 0)).astype(jnp.float32),
+        jnp.float32(1.0),
+    )
+
+
+def frontier_pack(
+    sk: jax.Array,
+    code: jax.Array,
+    placed: jax.Array,
+    slot_pos: jax.Array,
+    n_place: jax.Array,
+    n_valid: jax.Array,
+    ids2: jax.Array,
+    payload: jax.Array | None,
+    table: jax.Array | None,
+    loc: jax.Array | None,
+    *,
+    cand_cap: int,
+):
+    """Device-side epilogue of the fused frontier step (shared by the
+    oracle and the Pallas twin): miss compaction, packed readback and
+    the in-launch feature-payload scatter.
+
+    * ``cand_next`` — next launch's candidate list: this probe's misses
+      (``code == 1``) compacted to the first ``min(cand_cap, Mt)``
+      ascending ids (a sentinel-sort; misses are already unique and
+      sorted within ``sk``). With ``cand_cap = 2 * C`` the truncation is
+      *lossless* for placement: candidates are unique, at most ``C`` of
+      them can be resident (``member``), and at most ``C`` can place, so
+      the ``j``-th fresh candidate (``j < n_place <= C``) sits at
+      position ``<= j + C < 2C`` — every candidate the staged
+      ``replace_round`` could admit survives the cut bit-identically.
+    * ``packed`` — the step's entire host readback as one int32 block
+      ``[sk | code | placed | slot_pos | n_valid]`` of width
+      ``2*Mt + K + C + 1`` (one device→host transfer; the host slices by
+      the widths it already knows).
+    * ``counters`` — ``(P, 4)`` ``[n_remote, hits, n_place, n_valid]``
+      for the K-step readback cadence (sweep runs pull only these).
+    * ``payload2`` — with a feature table attached, admission rows
+      (``slot_pos < n_place``) gather straight from the store's flat
+      device table into the ``(P*C, F)`` payload — verbatim float32 row
+      copies, replacing the staged path's host gather + re-upload.
+    """
+    P, Mt = sk.shape
+    kc = min(int(cand_cap), Mt)
+    sent = jnp.int32(np.iinfo(np.int32).max)
+    miss_keys = jnp.where(code == 1, sk, sent)
+    cand_next = jnp.sort(miss_keys, axis=1)[:, :kc]
+    cand_next = jnp.where(cand_next == sent, jnp.int32(-1), cand_next)
+    n_remote = jnp.sum((code > 0).astype(jnp.int32), axis=1)
+    hits = jnp.sum((code >= 2).astype(jnp.int32), axis=1)
+    counters = jnp.stack(
+        [n_remote, hits, n_place.astype(jnp.int32), n_valid.astype(jnp.int32)],
+        axis=1,
+    )
+    packed = jnp.concatenate(
+        [
+            sk,
+            code,
+            placed.astype(jnp.int32),
+            slot_pos.astype(jnp.int32),
+            n_valid[:, None].astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    payload2 = payload
+    if table is not None:
+        C = ids2.shape[1]
+        F = table.shape[1]
+        filled = slot_pos < n_place[:, None]
+        rows = jnp.take(table, jnp.take(loc, jnp.maximum(ids2, 0)), axis=0)
+        payload2 = jnp.where(
+            filled[:, :, None], rows, payload.reshape(P, C, F)
+        ).reshape(P * C, F)
+    return cand_next, packed, counters, payload2
+
+
+def fused_frontier_step(
+    ids: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    accessed: jax.Array,
+    in_capacity: jax.Array,
+    weights: jax.Array | None,
+    touched_aug: jax.Array,
+    part_of: jax.Array,
+    cand: jax.Array,
+    node_weights: jax.Array | None,
+    payload: jax.Array | None,
+    table: jax.Array | None,
+    loc: jax.Array | None,
+    *,
+    cand_cap: int,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+):
+    """Oracle for the single-launch device step: the whole per-minibatch
+    pipeline — dedup → score → replace → probe → gather — in one pass.
+
+    Extends :func:`fused_step` at both ends. The **prologue** ingests
+    the raw ``(P, Mt)`` sampled frontier (duplicates and all, fusing the
+    standalone ``frontier_unique_batch`` dedup) with the step's gate
+    bits packed into the last ``touched_aug`` column — the launch's one
+    host→device transfer. Replacement candidates come from the
+    *previous* launch's on-device miss compaction (``cand``), so the
+    admission stream never round-trips through host. The **epilogue**
+    (:func:`frontier_pack`) compacts this probe's misses into the next
+    launch's candidates, scatters admission rows from the feature
+    table straight into the device payload, and packs every host-facing
+    output into one int32 block — the launch's one device→host transfer.
+
+    Probe results come back as a per-sorted-position ``code`` stream:
+    ``0`` = local or duplicate, ``1`` = remote miss, ``2 + slot`` =
+    remote hit at ``slot`` — one array encodes the hit mask, hit slots
+    and miss set in the staged pipeline's sorted query order. Returns
+    ``(ids2, scores2, valid2, accessed3, weights2, payload2, cand_next,
+    packed, counters)``.
+
+    The Pallas twin is ``kernels/fused_step.fused_frontier_step_pallas``
+    (dispatch: :func:`repro.kernels.ops.fused_frontier_step_batch`);
+    ground truth is the staged pipeline (``tests/test_fused_step.py``).
+    See ``docs/KERNELS.md#fused_step``.
+    """
+    (
+        active_score,
+        do_replace,
+        active_probe,
+        sk,
+        _prev,
+        _rem,
+        remote,
+    ) = frontier_prologue(touched_aug, part_of)
+    queries = jnp.where(remote, sk, jnp.int32(-1))
+    cand = cand.astype(jnp.int32)
+    cw = cand_weights_of(cand, node_weights) if weights is not None else None
+    (
+        ids2,
+        s2,
+        valid2,
+        acc3,
+        w2,
+        hit,
+        hit_slot,
+        placed,
+        slot_pos,
+        n_place,
+        n_valid,
+    ) = fused_step(
+        ids,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries,
+        cand,
+        cw,
+        active_score,
+        do_replace,
+        active_probe,
+        increment=increment,
+        decay=decay,
+        threshold=threshold,
+        score_cap=score_cap,
+        mode=mode,
+        initial_score=initial_score,
+    )
+    code = jnp.where(
+        remote, jnp.where(hit, hit_slot + 2, jnp.int32(1)), jnp.int32(0)
+    )
+    cand_next, packed, counters, payload2 = frontier_pack(
+        sk,
+        code,
+        placed,
+        slot_pos,
+        n_place,
+        n_valid,
+        ids2,
+        payload,
+        table,
+        loc,
+        cand_cap=cand_cap,
+    )
+    return ids2, s2, valid2, acc3, w2, payload2, cand_next, packed, counters
+
+
 def score_policy_update_batch(
     scores: jax.Array,
     accessed: jax.Array,

@@ -31,10 +31,18 @@ See ``docs/ARCHITECTURE.md`` for the diagram.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import numpy as np
 
+from ..core.controller import (
+    FixedController,
+    NoPrefetchController,
+    PeriodicController,
+)
 from ..core.metrics import Metrics
+from ..sim import StepComm
 from .stage import DecisionStage, FetchStage, FusedFetchStage, SampleStage
 
 
@@ -49,7 +57,18 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     streams, one fused kernel launch per step.
     """
     if getattr(trainer, "device", None):
-        return run_device(trainer)
+        if trainer.graph.num_nodes - 1 >= np.iinfo(np.int32).max:
+            # The device engine stores node ids as int32; rather than
+            # raising mid-run, run the staged pipeline (identical
+            # streams, no device residency).
+            warnings.warn(
+                "device=... requested but graph node ids exceed int32; "
+                "falling back to the staged pipeline",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        else:
+            return run_device(trainer)
     # Deferred: repro.gnn.train imports the engine from this package.
     from ..gnn.sage import sage_accuracy, sage_grads
     from ..gnn.train import RunResult, TrainerLog
@@ -209,6 +228,248 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     )
 
 
+def _device_raw_supported(trainer) -> bool:
+    """True when every PE's seed block has the same constant length for
+    all minibatches — the dense ``(P, Mt)`` frontier block the
+    single-launch raw path uploads. A PE with ``0 < len(local_train) <
+    batch_size`` yields ragged blocks (see ``_seed_batch``'s wraparound),
+    which fall back to the PR 7 staged-gather device loop."""
+    B = trainer.batch_size
+    lens = set()
+    for t in trainer.local_train:
+        L = len(t)
+        if L == 0:
+            lens.add(min(B, len(trainer.graph.train_nodes)))
+        elif L >= B:
+            lens.add(B)
+        else:
+            return False
+    return len(lens) == 1
+
+
+def _check_cadence_eligible(trainer, time_engine, use_raw: bool) -> None:
+    """``readback_every > 1`` trades per-step readbacks for epoch-level
+    aggregates — valid only when nothing consumes the per-step id
+    streams. Anything else is a config error, not a silent downgrade."""
+    K = trainer.readback_every
+    reasons = []
+    if not use_raw:
+        reasons.append("ragged per-PE seed blocks (staged fallback path)")
+    if trainer.trace:
+        reasons.append("trace recording needs per-step id streams")
+    if trainer.feature_store is not None:
+        reasons.append("the feature store moves per-step rows")
+    if time_engine.needs_pairs:
+        reasons.append("per-home comm pricing needs per-step id sets")
+    bad = [
+        type(c).__name__
+        for c in trainer.controllers
+        if type(c) not in (NoPrefetchController, FixedController, PeriodicController)
+    ]
+    if bad:
+        reasons.append(
+            f"controllers {sorted(set(bad))} read per-step metrics"
+        )
+    if reasons:
+        raise ValueError(
+            f"readback_every={K} is incompatible with this run: "
+            + "; ".join(reasons)
+        )
+
+
+def _run_device_cadence(
+    trainer, sample, decide, time_engine, dev, fused, K: int
+) -> "RunResult":  # noqa: F821 — see lazy import
+    """K-step readback cadence: the sweep-mode inner loop.
+
+    Launches run exactly as in :func:`run_device`'s raw path, but each
+    launch hands back only its ``(P, 4)`` ``[n_remote, hits, n_place,
+    n_valid]`` counter block *as a device array*
+    (``fused_step_raw(want="counts")``); every K launches one stacked
+    ``device_get`` pulls them all. Per-step logs, stats and step times
+    are then reconstructed from the counters — step t's probe counters
+    ride in launch t, its replace counters in launch t+1 (the pipeline
+    rotation), so a step is accounted once both launches have been
+    flushed. :func:`_check_cadence_eligible` guarantees nothing in the
+    run reads the per-step id streams this path never materializes; the
+    counter-derived logs (hit/miss/replaced/occupancy counts, decision
+    and step-time streams) are bit-identical to the K=1 path
+    (``tests/test_fused_step.py``). ``last_*`` bookkeeping is stale in
+    this mode — only :meth:`DeviceEngine.sync_to_engine`'s array state
+    and the shared stats are written back.
+    """
+    from ..gnn.sage import sage_accuracy, sage_grads
+    from ..gnn.train import RunResult, TrainerLog
+
+    jnp = dev._jnp
+    P = dev.num_pes
+    active = fused.active
+    uses_buffer = fused.uses_buffer
+    logs = [TrainerLog() for _ in range(P)]
+    epoch_times = [0.0] * trainer.epochs
+    losses: list[float] = []
+    total = trainer.epochs * trainer.mb_per_epoch
+
+    counters: list[np.ndarray] = []  # per launch, (P, 4) on host
+    pending: list = []               # device counter blocks not yet pulled
+    meta: list[tuple] = []           # per step: (epoch, decisions, stalls)
+    done = 0                         # steps fully accounted
+
+    def account(t: int) -> None:
+        nonlocal epoch_times
+        epoch, decisions, stalls = meta[t]
+        probe_c, repl_c = counters[t], counters[t + 1]
+        n_remote = probe_c[:, 0].astype(np.int64)
+        hits = probe_c[:, 1].astype(np.int64)
+        n_place = repl_c[:, 2].astype(np.int64)
+        n_valid = repl_c[:, 3].astype(np.int64)
+        do_rep = decisions & uses_buffer
+        # Probe bookkeeping (lookup): inactive PEs probe nothing but
+        # still fetch their whole remote set (hits == 0 there).
+        lengths = np.where(active, n_remote, 0)
+        miss = n_remote - hits
+        dev.stats.lookups += lengths
+        dev.stats.hits += hits
+        dev.stats.misses += lengths - hits
+        # Replacement bookkeeping (replace_round).
+        rounds = do_rep & (n_place > 0)
+        dev.stats.skipped_rounds += do_rep & (n_place == 0)
+        dev.stats.replaced_total += np.where(rounds, n_place, 0)
+        dev.stats.replacement_rounds += rounds
+        replaced = np.where(rounds, n_place, 0)
+        total_comm = miss + replaced
+        step_time = time_engine.step(StepComm(miss, replaced), stalls)
+        pct_hits = np.where(
+            active,
+            np.where(n_remote > 0, 100.0 * hits / np.maximum(n_remote, 1), 100.0),
+            0.0,
+        )
+        occupancy = dev.occupancy_of(n_valid)
+        for p in range(P):
+            logs[p].pct_hits.append(float(pct_hits[p]))
+            logs[p].comm_volume.append(int(total_comm[p]))
+            logs[p].comm_missed.append(int(miss[p]))
+            logs[p].occupancy.append(float(occupancy[p]))
+            logs[p].unique_remote.append(int(n_remote[p]))
+            logs[p].replaced.append(int(replaced[p]))
+            logs[p].decisions.append(bool(decisions[p]))
+            logs[p].step_time.append(float(step_time[p]))
+        epoch_times[epoch] += float(step_time.max())
+
+    def flush() -> None:
+        nonlocal pending, done
+        if pending:
+            block = jax.device_get(jnp.stack(pending))
+            dev.transfers["d2h"] += 1
+            dev.transfers["d2h_bytes"] += block.nbytes
+            counters.extend(block)
+            pending = []
+        while done < len(meta) and done + 1 < len(counters):
+            account(done)
+            done += 1
+
+    minibatches, touched = sample.run_raw(0, 0, trainer.rng)
+    pending.append(
+        dev.fused_step_raw(
+            touched, fused._no_decision, fused._no_decision, active,
+            want="counts",
+        )
+    )
+
+    for step in range(total):
+        epoch, mb = divmod(step, trainer.mb_per_epoch)
+        # The eligible controllers never read the metric values (that is
+        # what _check_cadence_eligible enforces), so stale zeros keep
+        # the decision stream bit-identical to the K=1 path while the
+        # real counters sit on device awaiting the next flush.
+        decide.submit(
+            [
+                Metrics(
+                    minibatch=mb,
+                    total_minibatches=trainer.mb_per_epoch,
+                    epoch=epoch,
+                    total_epochs=trainer.epochs,
+                    pct_hits=0.0,
+                    comm_volume=0,
+                    replaced_pct=0.0,
+                    buffer_occupancy=0.0,
+                    buffer_capacity=int(trainer.engine.capacity[p]),
+                )
+                for p in range(P)
+            ]
+        )
+        decisions, stalls = decide.collect()
+
+        if step + 1 < total:
+            e2, m2 = divmod(step + 1, trainer.mb_per_epoch)
+            nxt_mb, nxt_touched = sample.run_raw(e2, m2, trainer.rng)
+        else:
+            nxt_mb = None
+            nxt_touched = np.full((P, 0), -1, dtype=np.int64)
+        pending.append(
+            dev.fused_step_raw(
+                nxt_touched, uses_buffer, decisions & uses_buffer, active,
+                want="counts",
+            )
+        )
+        meta.append((epoch, decisions, stalls))
+        if len(pending) >= K:
+            flush()
+
+        if trainer.train_model:
+            grads_acc = None
+            loss_acc = 0.0
+            for p in range(P):
+                x_seed, x_n1, x_n2 = trainer._features_of(minibatches[p])
+                loss, grads = sage_grads(
+                    trainer.params, x_seed, x_n1, x_n2, minibatches[p].labels
+                )
+                loss_acc += float(loss) / P
+                grads_acc = (
+                    grads
+                    if grads_acc is None
+                    else jax.tree_util.tree_map(
+                        lambda a, b: a + b, grads_acc, grads
+                    )
+                )
+            if grads_acc is not None:
+                grads_mean = jax.tree_util.tree_map(lambda g: g / P, grads_acc)
+                trainer.params = jax.tree_util.tree_map(
+                    lambda prm, g: prm - trainer.lr * g,
+                    trainer.params,
+                    grads_mean,
+                )
+                losses.append(loss_acc)
+
+        minibatches = nxt_mb
+
+    flush()
+
+    accuracy = 0.0
+    if trainer.train_model:
+        batch = trainer.graph.train_nodes[
+            : min(512, len(trainer.graph.train_nodes))
+        ]
+        minibatch = trainer.sampler.sample(batch, trainer.rng)
+        x_seed, x_n1, x_n2 = trainer._features_of(minibatch)
+        accuracy = float(
+            sage_accuracy(trainer.params, x_seed, x_n1, x_n2, minibatch.labels)
+        )
+
+    dev.sync_to_engine()
+    return RunResult(
+        variant=trainer.variant,
+        epoch_times=epoch_times,
+        losses=losses,
+        accuracy=accuracy,
+        logs=logs,
+        controllers=trainer.controllers,
+        graph_meta=trainer.graph_meta,
+        sim_events=time_engine.events,
+        trace=None,
+    )
+
+
 def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     """Device-resident twin of :func:`run_vectorized`.
 
@@ -232,6 +493,18 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     :func:`run_vectorized` and the committed golden traces
     (``tests/test_fused_step.py``). At the end of the run the device
     state is written back to ``trainer.engine`` for introspection.
+
+    **Single-launch raw path.** When every PE's seed block has one
+    constant length (:func:`_device_raw_supported` — the common case),
+    the loop skips the host dedup entirely: ``sample`` hands the raw
+    ``(P, Mt)`` frontier to :meth:`FusedFetchStage.step_raw`, whose one
+    launch also covers dedup and the feature gather, with one upload and
+    one packed readback per step (``DeviceEngine.transfers`` audits
+    this). Ragged seed blocks keep the PR 7 staged-gather loop. With
+    ``DistributedTrainer(readback_every=K>1)``, sweep runs additionally
+    batch the readbacks of K steps into one counter pull
+    (:func:`_run_device_cadence`; per-step id streams are not
+    materialized — gated by :func:`_check_cadence_eligible`).
     """
     from ..gnn.sage import sage_accuracy, sage_grads
     from ..gnn.train import RunResult, TrainerLog
@@ -244,7 +517,11 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     decide = DecisionStage(trainer.controllers)
     time_engine = trainer.make_time_engine()
     backend = "jnp" if trainer.device is True else trainer.device
-    dev = DeviceEngine(trainer.engine, backend=backend)
+    dev = DeviceEngine(
+        trainer.engine, backend=backend, part_of=trainer.parts.part_of
+    )
+    if trainer.feature_store is not None:
+        dev.attach_store(trainer.feature_store)
     fused = FusedFetchStage(
         dev,
         decide.uses_buffer,
@@ -256,6 +533,13 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         store=trainer.feature_store,
         feature_bytes=trainer.tm.feature_bytes,
     )
+    use_raw = _device_raw_supported(trainer)
+    cadence = int(getattr(trainer, "readback_every", 1))
+    if cadence > 1:
+        _check_cadence_eligible(trainer, time_engine, use_raw)
+        return _run_device_cadence(
+            trainer, sample, decide, time_engine, dev, fused, cadence
+        )
 
     logs = [TrainerLog() for _ in range(P)]
     epoch_times = [0.0] * trainer.epochs
@@ -263,13 +547,13 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     recorder = trainer.make_trace_recorder()
     total = trainer.epochs * trainer.mb_per_epoch
 
-    minibatches, remote, n_remote = sample.run(0, 0, trainer.rng)
-    probe = fused.prime(remote, n_remote)
-    empty_next = (
-        None,
-        [np.array([], dtype=np.int64) for _ in range(P)],
-        np.zeros(P, dtype=np.int64),
-    )
+    if use_raw:
+        minibatches, touched = sample.run_raw(0, 0, trainer.rng)
+        probe = fused.prime_raw(touched)
+        remote, n_remote = probe.remote, probe.n_remote
+    else:
+        minibatches, remote, n_remote = sample.run(0, 0, trainer.rng)
+        probe = fused.prime(remote, n_remote)
 
     for step in range(total):
         epoch, mb = divmod(step, trainer.mb_per_epoch)
@@ -293,13 +577,27 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
 
         # Double buffer: this step's miss gather overlaps the next draw.
         fused.begin_gather()
+        nxt_mb = None
         if step + 1 < total:
             e2, m2 = divmod(step + 1, trainer.mb_per_epoch)
-            nxt = sample.run(e2, m2, trainer.rng)
+            if use_raw:
+                nxt_mb, nxt_touched = sample.run_raw(e2, m2, trainer.rng)
+            else:
+                nxt_mb, nxt_remote, nxt_n_remote = sample.run(
+                    e2, m2, trainer.rng
+                )
+        elif use_raw:
+            nxt_touched = np.full((P, 0), -1, dtype=np.int64)
         else:
-            nxt = empty_next
+            nxt_remote = [np.array([], dtype=np.int64) for _ in range(P)]
+            nxt_n_remote = np.zeros(P, dtype=np.int64)
 
-        commit, next_probe = fused.step(decisions, stalls, nxt[1], nxt[2])
+        if use_raw:
+            commit, next_probe = fused.step_raw(decisions, stalls, nxt_touched)
+        else:
+            commit, next_probe = fused.step(
+                decisions, stalls, nxt_remote, nxt_n_remote
+            )
 
         for p in range(P):
             logs[p].pct_hits.append(float(probe.pct_hits[p]))
@@ -372,8 +670,12 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                 )
                 losses.append(loss_acc)
 
-        minibatches, remote, n_remote = nxt
+        minibatches = nxt_mb
         probe = next_probe
+        if use_raw:
+            remote, n_remote = probe.remote, probe.n_remote
+        else:
+            remote, n_remote = nxt_remote, nxt_n_remote
 
     accuracy = 0.0
     if trainer.train_model:

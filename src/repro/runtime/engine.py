@@ -377,6 +377,17 @@ class FusedStepOut:
     n_valid: np.ndarray            # (P,) int64 post-round occupancy counts
 
 
+@dataclass
+class FrontierStepOut(FusedStepOut):
+    """:class:`FusedStepOut` of a single-launch frontier step
+    (:meth:`DeviceEngine.fused_step_raw`), which additionally derives
+    the deduped remote query sets on device — the host never sees the
+    raw frontier again after the upload."""
+
+    remote: list[np.ndarray] = None   # per PE, int64 unique remote ids (sorted)
+    n_remote: np.ndarray = None       # (P,) int64 remote query counts
+
+
 def _bucket(n: int, q: int = 64) -> int:
     """Round a ragged dimension up to a bucket so jit recompiles O(log)
     times, not once per distinct minibatch shape."""
@@ -423,6 +434,7 @@ class DeviceEngine:
         engine: PrefetchEngine,
         backend: str = "jnp",
         interpret: bool = True,
+        part_of: np.ndarray | None = None,
     ):
         import jax.numpy as jnp
 
@@ -465,6 +477,33 @@ class DeviceEngine:
         self.last_placed = [np.array([], dtype=np.int64) for _ in range(P)]
         self.last_slots = [np.array([], dtype=np.int64) for _ in range(P)]
         self.last_hit_slots = [np.array([], dtype=np.int64) for _ in range(P)]
+
+        # --- single-launch frontier path (fused_step_raw) -------------- #
+        # part_of rides on device so dedup + remoteness run in-launch;
+        # node degree weights likewise when the policy scores with them.
+        self._part_of_dev = (
+            jnp.asarray(np.asarray(part_of).astype(np.int32))
+            if part_of is not None
+            else None
+        )
+        self._node_w_dev = (
+            jnp.asarray(self._node_weights.astype(np.float32))
+            if (self.policy.use_weights and self._node_weights is not None)
+            else None
+        )
+        self._store = None  # FeatureStore for the in-launch payload scatter
+        # Two-deep candidate rotation: launch t replaces with the misses
+        # launch t-2 compacted on device (prime probes only, so the
+        # admission stream lags the probe stream by exactly one step —
+        # the same rotation FusedFetchStage drives through host memory).
+        self.cand_cap = 2 * self.max_capacity
+        empty64 = np.array([], dtype=np.int64)
+        self._cand_ready = jnp.full((P, 1), -1, dtype=jnp.int32)
+        self._cand_ready_ids = [empty64 for _ in range(P)]
+        self._cand_pending = None
+        self._cand_pending_ids = None
+        # Host-boundary audit: one upload + one packed readback per step.
+        self.transfers = {"h2d": 0, "h2d_bytes": 0, "d2h": 0, "d2h_bytes": 0}
 
     # ------------------------------------------------------------------ #
     def occupancy_of(self, n_valid: np.ndarray) -> np.ndarray:
@@ -565,10 +604,23 @@ class DeviceEngine:
         )
         if w2 is not None:
             self._weights = w2
-        hit, hit_slot, placed_m, slot_pos, n_valid = jax.device_get(
-            (hit_d, hit_slot_d, placed_d, slot_pos_d, n_valid_d)
+        # One packed int32 pull instead of five small device_gets — the
+        # staged-path half of the single-transfer readback contract.
+        packed = jax.device_get(
+            ops.pack_readback(hit_d, hit_slot_d, placed_d, slot_pos_d, n_valid_d)
         )
-        n_valid = n_valid.astype(np.int64)
+        C = slot_pos_d.shape[1]
+        hit = packed[:, :M] != 0
+        hit_slot = packed[:, M : 2 * M]
+        placed_m = packed[:, 2 * M : 2 * M + K] != 0
+        slot_pos = packed[:, 2 * M + K : 2 * M + K + C]
+        n_valid = packed[:, -1].astype(np.int64)
+        self.transfers["h2d"] += 6 if cw is not None else 5
+        self.transfers["h2d_bytes"] += q.nbytes + c.nbytes + 3 * P + (
+            cw.nbytes if cw is not None else 0
+        )
+        self.transfers["d2h"] += 1
+        self.transfers["d2h_bytes"] += packed.nbytes
 
         # --- probe bookkeeping (PrefetchEngine.lookup) ----------------- #
         lengths = np.where(np.asarray(active_probe, dtype=bool), qlen, 0)
@@ -614,6 +666,196 @@ class DeviceEngine:
         )
 
     # ------------------------------------------------------------------ #
+    # single-launch frontier path
+    # ------------------------------------------------------------------ #
+    def attach_store(self, store) -> None:
+        """Wire a :class:`repro.store.FeatureStore` into the launch: the
+        kernel gathers admission rows from the store's flat device table
+        (:meth:`FeatureStore.device_view`) straight into the payload."""
+        self._store = store
+
+    def fused_step_raw(
+        self,
+        touched: np.ndarray,
+        active_score: np.ndarray,
+        do_replace: np.ndarray,
+        active_probe: np.ndarray,
+        want: str = "full",
+    ):
+        """One single-launch device step over the *raw* sampled frontier:
+        dedup → score → replace → probe → gather, one dispatch, one
+        ``(P, Mt+1)`` upload (frontier + packed gate bits) and one packed
+        readback — ≤2 host transfers per step.
+
+        ``touched`` is the dense ``(P, Mt)`` frontier block straight from
+        the sampler (unsorted, duplicated; -1 padding allowed).
+        Replacement candidates are the misses the launch two steps back
+        compacted on device (:attr:`_cand_ready` — the same two-deep
+        pipeline rotation ``FusedFetchStage`` drives, minus the host
+        hop). Bookkeeping and stats mirror :meth:`fused_step` exactly.
+
+        ``want="counts"`` is the K-step readback cadence: the launch's
+        host-facing block stays on device and only a ``(P, 4)``
+        ``[n_remote, hits, n_place, n_valid]`` counter array is returned
+        (as a *device* array — the caller stacks K of them and pulls
+        once). No stats / last_* bookkeeping happens in counts mode; the
+        cadence driver reconstructs stats from the counters.
+        """
+        import jax
+
+        from ..kernels import ops
+
+        P = self.num_pes
+        if self._part_of_dev is None:
+            raise ValueError(
+                "fused_step_raw needs the partition map: construct the "
+                "DeviceEngine with part_of=..."
+            )
+        touched = np.asarray(touched)
+        if touched.ndim != 2 or touched.shape[0] != P:
+            raise ValueError(
+                f"touched must be (P, Mt) with P={P}, got {touched.shape}"
+            )
+        if touched.size and int(touched.max()) >= np.iinfo(np.int32).max:
+            raise ValueError("device engine needs node ids < 2^31")
+        touched = touched.astype(np.int32, copy=False)
+        if touched.shape[1] == 0:
+            # Final drained launch: keep the (P, Mt>=1) shape the sort
+            # prologue needs; an all(-1) row dedups to zero queries.
+            touched = np.full((P, 1), -1, dtype=np.int32)
+        do_rep = np.asarray(do_replace, dtype=bool)
+        gates = (
+            np.asarray(active_score, dtype=bool).astype(np.int32)
+            | (do_rep.astype(np.int32) << 1)
+            | (np.asarray(active_probe, dtype=bool).astype(np.int32) << 2)
+        )
+        aug = np.concatenate([touched, gates[:, None]], axis=1)
+        self.transfers["h2d"] += 1
+        self.transfers["h2d_bytes"] += aug.nbytes
+
+        table = loc = None
+        if self._store is not None and self.payload is not None:
+            table, loc = self._store.device_view()
+
+        Kc = self._cand_ready.shape[1]
+        (
+            self._ids,
+            self._scores,
+            self._valid,
+            self._accessed,
+            w2,
+            payload2,
+            cand_next,
+            packed_d,
+            counters_d,
+        ) = ops.fused_frontier_step_batch(
+            self._ids,
+            self._scores,
+            self._valid,
+            self._accessed,
+            self._in_cap,
+            self._weights,
+            aug,
+            self._part_of_dev,
+            self._cand_ready,
+            self._node_w_dev,
+            self.payload,
+            table,
+            loc,
+            cand_cap=self.cand_cap,
+            backend=self.backend,
+            interpret=self.interpret,
+            **self.policy.kernel_constants(),
+        )
+        if w2 is not None:
+            self._weights = w2
+        if payload2 is not None:
+            self.payload = payload2
+
+        if want == "counts":
+            # Rotate the device candidate buffers and hand back only the
+            # (P, 4) counters, still on device; the host mirrors are not
+            # maintained (no per-step bookkeeping on the cadence path).
+            self._cand_ready = (
+                self._cand_pending
+                if self._cand_pending is not None
+                else self._cand_ready
+            )
+            self._cand_pending = cand_next
+            return counters_d
+
+        packed = jax.device_get(packed_d)
+        self.transfers["d2h"] += 1
+        self.transfers["d2h_bytes"] += packed.nbytes
+        Mt = aug.shape[1] - 1
+        C = self.max_capacity
+        sk = packed[:, :Mt]
+        code = packed[:, Mt : 2 * Mt]
+        placed_m = packed[:, 2 * Mt : 2 * Mt + Kc] != 0
+        slot_pos = packed[:, 2 * Mt + Kc : 2 * Mt + Kc + C]
+        n_valid = packed[:, -1].astype(np.int64)
+
+        # --- probe bookkeeping (lookup over the deduped remote sets) --- #
+        remote_mask = code > 0
+        n_remote = remote_mask.sum(axis=1).astype(np.int64)
+        lengths = np.where(np.asarray(active_probe, dtype=bool), n_remote, 0)
+        self.stats.lookups += lengths
+        hits_per_pe = (code >= 2).sum(axis=1).astype(np.int64)
+        self.stats.hits += hits_per_pe
+        self.stats.misses += lengths - hits_per_pe
+        flat_code = code[remote_mask]
+        flat_hit = flat_code >= 2
+        sk_remote = sk[remote_mask].astype(np.int64)
+        remote = _split_by_counts(sk_remote, n_remote)
+        hit_masks = _split_by_counts(flat_hit, n_remote)
+        missed = _split_by_counts(sk_remote[~flat_hit], n_remote - hits_per_pe)
+        hit_slots = _split_by_counts(
+            (flat_code[flat_hit] - 2).astype(np.int64), hits_per_pe
+        )
+        self.last_hit_slots = list(hit_slots)
+
+        # --- replacement bookkeeping (replace_round) ------------------- #
+        clen = np.fromiter(map(len, self._cand_ready_ids), np.int64, count=P)
+        cmask = np.arange(Kc) < clen[:, None]
+        pm = placed_m & cmask
+        n_per = pm.sum(axis=1).astype(np.int64)
+        rounds = do_rep & (n_per > 0)
+        self.stats.skipped_rounds += do_rep & (n_per == 0)
+        self.stats.replaced_total += np.where(rounds, n_per, 0)
+        self.stats.replacement_rounds += rounds
+        replaced = np.where(rounds, n_per, 0)
+        allc = (
+            np.concatenate(self._cand_ready_ids)
+            if clen.sum()
+            else np.array([], dtype=np.int64)
+        )
+        self.last_placed = _split_by_counts(allc[pm[cmask]], n_per)
+        order = np.argsort(slot_pos, axis=1, kind="stable").astype(np.int64)
+        rank_mask = np.arange(slot_pos.shape[1]) < n_per[:, None]
+        self.last_slots = _split_by_counts(order[rank_mask], n_per)
+
+        # --- candidate rotation (device + host mirror) ----------------- #
+        kc_next = cand_next.shape[1]
+        if self._cand_pending is not None:
+            self._cand_ready = self._cand_pending
+            self._cand_ready_ids = self._cand_pending_ids
+        self._cand_pending = cand_next
+        self._cand_pending_ids = [m[:kc_next] for m in missed]
+
+        return FrontierStepOut(
+            hit_masks=hit_masks,
+            missed=missed,
+            hits=hits_per_pe,
+            hit_slots=hit_slots,
+            replaced=replaced,
+            placed=list(self.last_placed),
+            placed_slots=list(self.last_slots),
+            n_valid=n_valid,
+            remote=remote,
+            n_remote=n_remote,
+        )
+
+    # ------------------------------------------------------------------ #
     # feature payload (device-resident)
     # ------------------------------------------------------------------ #
     def pull_rows(self, slots_per_pe: list[np.ndarray]) -> list[np.ndarray]:
@@ -634,6 +876,8 @@ class DeviceEngine:
             ]
         )
         rows = np.asarray(jnp.take(self.payload, jnp.asarray(flat), axis=0))
+        self.transfers["d2h"] += 1
+        self.transfers["d2h_bytes"] += rows.nbytes
         return [
             np.ascontiguousarray(b)
             for b in np.split(rows, np.cumsum(lengths)[:-1])
@@ -663,6 +907,8 @@ class DeviceEngine:
             data = device_block
         else:
             data = jnp.asarray(np.concatenate(rows, dtype=np.float32))
+            self.transfers["h2d"] += 1
+            self.transfers["h2d_bytes"] += sum(int(r.nbytes) for r in rows)
         self.payload = self.payload.at[jnp.asarray(flat)].set(data)
 
     # ------------------------------------------------------------------ #

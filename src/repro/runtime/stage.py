@@ -94,6 +94,16 @@ class SampleStage:
         n_remote = np.array([len(r) for r in remote], dtype=np.int64)
         return minibatches, remote, n_remote
 
+    def run_raw(
+        self, epoch: int, mb: int, rng: np.random.Generator
+    ) -> tuple[list[MiniBatch], np.ndarray]:
+        """Device-native sampling: ``(minibatches, touched)`` where
+        ``touched`` is the raw ``(P, Mt)`` frontier destined for the
+        single-launch device step — no host dedup/remote extraction
+        (same RNG consumption as :meth:`run`)."""
+        seed_blocks = [self.seed_fn(p, epoch, mb) for p in range(self.num_pes)]
+        return self.plane.sample_all_raw(seed_blocks, rng)
+
 
 @dataclass
 class ProbeResult:
@@ -106,6 +116,11 @@ class ProbeResult:
     comm: np.ndarray          # (P,) int64 — miss fetches only
     occupancy: np.ndarray     # (P,) float64, pre-replacement
     replaced_pct: np.ndarray  # (P,) float64, previous round's churn
+    #: The probed remote query sets themselves (fused device path only,
+    #: where the host never computes them — the launch derives them from
+    #: the raw frontier and hands them back in the packed readback).
+    remote: list[np.ndarray] | None = None
+    n_remote: np.ndarray | None = None
 
 
 @dataclass
@@ -315,6 +330,7 @@ class FetchStage:
         result.fetch_seconds = miss_gather.seconds + placed_gather.seconds
 
 
+
 class FusedFetchStage:
     """Device-resident fetch plane: one fused launch per step.
 
@@ -407,6 +423,17 @@ class FusedFetchStage:
         )
         return self._stash_probe(remote, n_remote, out)
 
+    def prime_raw(self, touched: np.ndarray) -> ProbeResult:
+        """Single-launch twin of :meth:`prime`: launch 0 ingests the raw
+        first frontier; dedup and the remote extraction happen on device
+        (the returned probe carries the derived ``remote`` sets)."""
+        if self._pending is not None:
+            raise RuntimeError("already primed: step() the pending round")
+        out = self.dev.fused_step_raw(
+            touched, self._no_decision, self._no_decision, self.active
+        )
+        return self._stash_probe(out.remote, out.n_remote, out)
+
     def begin_gather(self) -> None:
         """Overlap hook: dispatch the pending round's miss-row gather now
         (before the next sample draw). Idempotent; no-op without a store."""
@@ -468,6 +495,64 @@ class FusedFetchStage:
         probe = self._stash_probe(next_remote, next_n_remote, out)
         return commit, probe
 
+    def step_raw(
+        self,
+        decisions: np.ndarray,
+        stalls: np.ndarray,
+        next_touched: np.ndarray,
+    ) -> tuple[CommitResult, ProbeResult]:
+        """Single-launch twin of :meth:`step`: close round t and open
+        round t+1 from the raw ``(P, Mt)`` frontier — one launch covers
+        dedup(t+1) → score(t) → replace(t) → probe(t+1) → gather(t).
+
+        Replacement candidates never touch the host: the launch two
+        steps back compacted its misses on device
+        (``DeviceEngine._cand_ready``), which the bit-identity proof in
+        :func:`repro.kernels.ref.frontier_pack` shows admits exactly the
+        nodes the staged ``replace_round`` would. With a store attached,
+        admission rows were already scattered into the payload *inside*
+        the launch, so ``_serve_features_raw`` only gathers miss rows.
+        The final step passes an empty ``next_touched`` block and
+        discards the returned probe."""
+        if self._pending is None:
+            raise RuntimeError("nothing probed: prime() the pipeline first")
+        pending, self._pending = self._pending, None
+        dev = self.dev
+        out = dev.fused_step_raw(
+            next_touched,
+            self.uses_buffer,
+            decisions & self.uses_buffer,
+            self.active,
+        )
+        missed = pending["missed"]
+        self._prev_missed = missed
+        self._last_replaced = out.replaced
+        self._have_replaced = True
+        comm = np.array([len(m) for m in missed], dtype=np.int64)
+        total_comm = comm + out.replaced
+        t = self.time_engine.step(
+            build_step_comm(
+                missed,
+                dev.last_placed,
+                self.part_of,
+                dev.num_pes,
+                self.time_engine.needs_pairs,
+            ),
+            stalls,
+        )
+        commit = CommitResult(
+            replaced=out.replaced,
+            total_comm=total_comm,
+            step_time=t,
+            occupancy=dev.occupancy_of(out.n_valid),
+            missed=missed,
+            placed=list(dev.last_placed),
+        )
+        if self.store is not None:
+            self._serve_features_raw(commit, pending)
+        probe = self._stash_probe(out.remote, out.n_remote, out)
+        return commit, probe
+
     # ------------------------------------------------------------------ #
     def _stash_probe(self, remote, n_remote, out) -> ProbeResult:
         pending = {"missed": out.missed}
@@ -495,6 +580,8 @@ class FusedFetchStage:
             comm=np.array([len(m) for m in out.missed], dtype=np.int64),
             occupancy=self.dev.occupancy_of(out.n_valid),
             replaced_pct=replaced_pct,
+            remote=list(remote),
+            n_remote=np.asarray(n_remote, dtype=np.int64),
         )
 
     def _serve_features(self, result: CommitResult, pending: dict) -> None:
@@ -535,3 +622,41 @@ class FusedFetchStage:
             result.total_comm * self.feature_dim * self.feature_bytes
         )
         result.fetch_seconds = miss_gather.seconds + placed_gather.seconds
+
+    def _serve_features_raw(self, result: CommitResult, pending: dict) -> None:
+        """Store data path for the single-launch step: admission rows
+        were scattered into the device payload *inside* the launch
+        (verbatim float32 store rows — see
+        :func:`repro.kernels.ref.frontier_pack`), so only the miss rows
+        cross the store here. Byte accounting charges the admissions at
+        exactly the staged gather's size (``n_placed * F * 4``); hit
+        rows were captured from the payload at probe time as usual."""
+        dev = self.dev
+        P = dev.num_pes
+        F = dev.feature_dim
+        miss_gather = pending.get("miss_gather") or self.store.gather_batch(
+            result.missed
+        )
+        hit_masks = pending["hit_masks"]
+        hit_rows = pending["hit_rows"]
+        row_bytes = F * 4  # store rows are float32
+        features: list[np.ndarray] = []
+        feat_sums = np.zeros(P, dtype=np.float64)
+        bytes_measured = np.zeros(P, dtype=np.int64)
+        for p in range(P):
+            block = np.empty((len(hit_masks[p]), F), dtype=np.float32)
+            block[hit_masks[p]] = hit_rows[p]
+            block[~hit_masks[p]] = miss_gather.blocks[p]
+            features.append(block)
+            feat_sums[p] = block.sum(dtype=np.float64)
+            bytes_measured[p] = (
+                miss_gather.blocks[p].nbytes
+                + len(dev.last_placed[p]) * row_bytes
+            )
+        result.features = features
+        result.feat_sums = feat_sums
+        result.bytes_measured = bytes_measured
+        result.bytes_modeled = (
+            result.total_comm * self.feature_dim * self.feature_bytes
+        )
+        result.fetch_seconds = miss_gather.seconds

@@ -124,6 +124,7 @@ class FeatureStore:
         self.use_kernel = bool(use_kernel)
         self._dev = None          # jax flat table (backend="jax")
         self._tables = None       # jax (K, N_max, F) shard view (kernel path)
+        self._dev_view = None     # (flat table, int32 loc) for the megakernel
         if backend == "jax":
             self._dev = self._device_table()
 
@@ -162,6 +163,30 @@ class FeatureStore:
         return jax.device_put(
             jnp.asarray(self._flat), NamedSharding(mesh, spec)
         )
+
+    def device_view(self):
+        """``(table, loc)`` device pair for the single-launch hot path.
+
+        ``table`` is the flat ``(K * N_max, F)`` float32 store as a jax
+        array and ``loc`` the int32 node→row map; the fused frontier
+        kernel gathers admission rows from these *inside* the launch, so
+        the feature payload never crosses the host boundary. Cached
+        until :meth:`poke` invalidates it. Requires the flat row count
+        to be int32-addressable — the same bound the device engine
+        already enforces on node ids."""
+        if self._dev_view is None:
+            import jax.numpy as jnp
+
+            if self._flat.shape[0] >= np.iinfo(np.int32).max:
+                raise ValueError(
+                    "feature store flat table has >= 2^31 rows; "
+                    "device view indexes rows as int32"
+                )
+            self._dev_view = (
+                self._dev if self._dev is not None else jnp.asarray(self._flat),
+                jnp.asarray(self._loc.astype(np.int32)),
+            )
+        return self._dev_view
 
     # ------------------------------------------------------------------ #
     def _rows_of(self, ids: np.ndarray) -> np.ndarray:
@@ -273,5 +298,6 @@ class FeatureStore:
         row = self._loc[int(node_id)]
         self._flat[row] += np.float32(delta)
         self._tables = None
+        self._dev_view = None
         if self.backend == "jax":
             self._dev = self._device_table()

@@ -54,6 +54,7 @@ CONFIG_DEFAULTS: dict = {
     "seed": 0,
     "runtime": "vectorized",
     "feature_store": False,
+    "device": False,
 }
 
 
@@ -113,6 +114,7 @@ def build_trainer(config: dict, runtime: str | None = None, parts=None):
         seed=int(cfg["seed"]),
         runtime=runtime or cfg.get("runtime", "vectorized"),
         feature_store=bool(cfg["feature_store"]),
+        device=cfg["device"],
     )
 
 

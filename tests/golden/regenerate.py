@@ -82,11 +82,23 @@ def main() -> int:
                     file=sys.stderr,
                 )
                 return 1
+            # Same contract for the device-resident hot path: the fused
+            # single-launch step must reproduce the staged streams
+            # bit-identically (tests/test_fused_step.py parity suite).
+            device_trace = record_trace({**config, "device": True})
+            if device_trace.exact_digest() != trace.exact_digest():
+                print(
+                    f"FATAL: {variant}_{mode} device-mode re-record "
+                    "diverges from the staged path — not committing",
+                    file=sys.stderr,
+                )
+                return 1
             print(
                 f"{os.path.basename(npz_path):24s} "
                 f"{trace.num_steps} steps x {trace.num_pes} PEs  "
                 f"digest {trace.digest()[:12]}  "
-                f"store-parity ok ({store_trace.exact_digest()[:12]})"
+                f"store-parity ok ({store_trace.exact_digest()[:12]})  "
+                f"device-parity ok ({device_trace.exact_digest()[:12]})"
             )
     return 0
 

@@ -1,0 +1,367 @@
+"""Parity + property tests for the single-launch frontier step.
+
+The frontier megakernel (``docs/KERNELS.md#fused_step``, single-launch
+extension) folds the host-side frontier dedup and the feature-store
+admission gather into the fused score→replace→probe launch:
+``DeviceEngine.fused_step_raw`` ingests the raw ``(P, Mt)`` sampled
+frontier (duplicates, -1 padding and all) and hands back the derived
+remote sets in the packed readback — one upload + one readback per step.
+
+Three contracts are asserted here:
+
+* **frontier parity** — rotated ``fused_step_raw`` launches over raw
+  frontiers reproduce the staged ``PrefetchEngine`` pipeline driven by
+  host-deduped queries *bit-identically*: remote sets, hit masks, stats,
+  buffer state and (with a store attached) the feature payload the
+  in-launch gather filled — deterministically and, with the ``test``
+  extra, over hypothesis-generated scenarios (random shapes, int32 and
+  int64 frontiers, empty and all-duplicate frontier rows);
+* **transfer budget** — the raw path's host boundary is exactly one
+  upload and one packed readback per launch (``DeviceEngine.transfers``),
+  and the K-step readback cadence collapses the readbacks further;
+* **trainer integration** — ``DistributedTrainer(device=...)`` falls
+  back to the staged pipeline with a warning when node ids exceed
+  int32, ``readback_every=K`` reproduces the K=1 logs bit-identically,
+  and incompatible cadence configs raise instead of silently degrading.
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.runtime.engine import DeviceEngine, PrefetchEngine
+from repro.store import FeatureStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover — conftest fails CI first
+    st = None
+
+EMPTY = np.array([], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------- #
+# frontier parity: raw single-launch steps vs the staged + host-dedup path
+# ---------------------------------------------------------------------- #
+def _host_dedup(frontier: np.ndarray, part_of: np.ndarray):
+    """The host-side unique-remote extraction the raw path replaces:
+    sorted unique ids, padding dropped, own-partition ids dropped —
+    exactly ``SamplerPlane.sample_all``'s per-PE remote sets."""
+    remote = []
+    for p in range(frontier.shape[0]):
+        u = np.unique(frontier[p].astype(np.int64))
+        u = u[u >= 0]
+        remote.append(u[part_of[u] != p])
+    return remote
+
+
+def _check_frontier_vs_staged(
+    backend: str,
+    seed: int,
+    P: int = 4,
+    steps: int = 5,
+    n_nodes: int = 300,
+    dtype=np.int64,
+    special_rows=(),
+    feature_dim: int = 0,
+) -> None:
+    """Drive the same raw-frontier step sequence through the staged
+    pipeline (host dedup + lookup/end_round/replace_round) and through
+    rotated ``fused_step_raw`` launches; assert every observable is
+    bit-identical."""
+    rng = np.random.default_rng(seed)
+    caps = [int(x) for x in rng.integers(1, 10, size=P)]
+    if P > 1:
+        caps[0] = 0  # zero-capacity PE rides along
+    part_of = rng.integers(0, P, size=n_nodes).astype(np.int64)
+    store = None
+    if feature_dim:
+        feats = rng.random((n_nodes, feature_dim)).astype(np.float32)
+        store = FeatureStore(feats, part_of, num_parts=P, backend="numpy")
+    eng = PrefetchEngine(caps, feature_dim=feature_dim)
+    for p in range(P):
+        ids = rng.choice(
+            n_nodes, size=int(rng.integers(0, 6)), replace=False
+        ).astype(np.int64)
+        eng.insert(p, ids)
+        if store is not None and len(eng.last_slots[p]):
+            eng.place_rows(p, eng.last_slots[p], store.gather(eng.ids[p][eng.last_slots[p]]))
+    dev = DeviceEngine(copy.deepcopy(eng), backend=backend, part_of=part_of)
+    if store is not None:
+        dev.attach_store(store)
+
+    uses_buffer = rng.random(P) > 0.2
+    active = uses_buffer & (eng.capacity > 0)
+    frontiers = []
+    for _ in range(steps):
+        Mt = int(rng.integers(1, 16))
+        f = rng.integers(0, n_nodes, size=(P, Mt))
+        f[rng.random((P, Mt)) < 0.2] = -1
+        for p, kind in special_rows:
+            if p < P:
+                f[p, :] = -1 if kind == "empty" else f[p, 0]
+        frontiers.append(f.astype(dtype))
+    decisions_all = [rng.random(P) > 0.4 for _ in range(steps)]
+
+    # -- staged reference: host dedup feeding the numpy engine ---------- #
+    staged_remote, staged_hits = [], []
+    prev_missed = [EMPTY] * P
+    for t in range(steps):
+        remote = _host_dedup(frontiers[t], part_of)
+        staged_remote.append(remote)
+        hm, missed = eng.lookup(remote, active)
+        staged_hits.append([m.copy() for m in hm])
+        eng.end_round(uses_buffer)
+        eng.replace_round(prev_missed, decisions_all[t] & uses_buffer)
+        if store is not None:
+            for p in range(P):
+                if len(eng.last_placed[p]):
+                    eng.place_rows(
+                        p, eng.last_slots[p], store.gather(eng.last_placed[p])
+                    )
+        prev_missed = missed
+
+    # -- fused raw path: rotated single launches ------------------------ #
+    zeros = np.zeros(P, dtype=bool)
+    out = dev.fused_step_raw(frontiers[0], zeros, zeros, active)
+    fused_remote = [out.remote]
+    fused_hits = [out.hit_masks]
+    for t in range(steps):
+        nf = (
+            frontiers[t + 1]
+            if t + 1 < steps
+            else np.full((P, 0), -1, dtype=dtype)
+        )
+        out = dev.fused_step_raw(
+            nf, uses_buffer, decisions_all[t] & uses_buffer, active
+        )
+        if t + 1 < steps:
+            fused_remote.append(out.remote)
+            fused_hits.append(out.hit_masks)
+
+    for t in range(steps):
+        for p in range(P):
+            np.testing.assert_array_equal(
+                staged_remote[t][p], fused_remote[t][p],
+                err_msg=f"step {t} PE {p} remote set",
+            )
+            np.testing.assert_array_equal(
+                staged_hits[t][p], fused_hits[t][p],
+                err_msg=f"step {t} PE {p} hit mask",
+            )
+    synced = dev.sync_to_engine()
+    for name in ("ids", "scores", "valid", "accessed"):
+        np.testing.assert_array_equal(
+            getattr(eng, name), getattr(synced, name), err_msg=name
+        )
+    for name in (
+        "lookups", "hits", "misses",
+        "replaced_total", "replacement_rounds", "skipped_rounds",
+    ):
+        np.testing.assert_array_equal(
+            getattr(eng.stats, name), getattr(dev.stats, name), err_msg=name
+        )
+    if store is not None:
+        np.testing.assert_array_equal(eng.payload, synced.payload)
+
+
+class TestFrontierParity:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_matches_staged_pipeline(self, backend):
+        _check_frontier_vs_staged(backend, seed=7)
+
+    @pytest.mark.parametrize("dtype", [np.int32, np.int64])
+    def test_dtype_and_special_rows(self, dtype):
+        _check_frontier_vs_staged(
+            "jnp", seed=11, dtype=dtype,
+            special_rows=((1, "empty"), (2, "dup")),
+        )
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_in_launch_store_gather(self, backend):
+        """Admission rows gathered *inside* the launch must equal the
+        staged host gather + re-upload, byte for byte."""
+        _check_frontier_vs_staged(backend, seed=3, feature_dim=5)
+
+    def test_transfer_budget(self):
+        """Exactly one upload + one packed readback per raw launch."""
+        rng = np.random.default_rng(0)
+        P, n_nodes = 3, 120
+        part_of = rng.integers(0, P, size=n_nodes).astype(np.int64)
+        eng = PrefetchEngine([4] * P)
+        dev = DeviceEngine(eng, part_of=part_of)
+        active = np.ones(P, dtype=bool)
+        zeros = np.zeros(P, dtype=bool)
+        dev.fused_step_raw(
+            rng.integers(0, n_nodes, size=(P, 9)), zeros, zeros, active
+        )
+        for _ in range(4):
+            dev.fused_step_raw(
+                rng.integers(0, n_nodes, size=(P, 9)), active, active, active
+            )
+        assert dev.transfers["h2d"] == 5
+        assert dev.transfers["d2h"] == 5
+
+    def test_rejects_int64_overflow_frontier(self):
+        eng = PrefetchEngine([4, 4])
+        dev = DeviceEngine(eng, part_of=np.zeros(10, dtype=np.int64))
+        bad = np.full((2, 3), 2**31 + 7, dtype=np.int64)
+        on = np.ones(2, dtype=bool)
+        with pytest.raises(ValueError, match="2\\^31"):
+            dev.fused_step_raw(bad, on, on, on)
+
+    def test_raw_needs_part_of(self):
+        dev = DeviceEngine(PrefetchEngine([4]))
+        on = np.ones(1, dtype=bool)
+        with pytest.raises(ValueError, match="part_of"):
+            dev.fused_step_raw(np.zeros((1, 2), dtype=np.int64), on, on, on)
+
+
+if st is not None:
+
+    @st.composite
+    def frontier_scenarios(draw):
+        P = draw(st.integers(min_value=1, max_value=5))
+        specials = draw(
+            st.lists(
+                st.tuples(
+                    st.integers(min_value=0, max_value=P - 1),
+                    st.sampled_from(["empty", "dup"]),
+                ),
+                max_size=2,
+            )
+        )
+        return (
+            draw(st.sampled_from(["jnp", "pallas"])),
+            draw(st.integers(min_value=0, max_value=2**31 - 1)),
+            P,
+            draw(st.integers(min_value=1, max_value=5)),
+            draw(st.sampled_from([np.int32, np.int64])),
+            tuple(specials),
+            draw(st.sampled_from([0, 4])),
+        )
+
+    class TestFrontierProperties:
+        @settings(max_examples=15, deadline=None)
+        @given(data=frontier_scenarios())
+        def test_raw_matches_staged_pipeline(self, data):
+            backend, seed, P, steps, dtype, specials, fdim = data
+            _check_frontier_vs_staged(
+                backend, seed, P=P, steps=steps, dtype=dtype,
+                special_rows=specials, feature_dim=fdim,
+            )
+
+
+# ---------------------------------------------------------------------- #
+# trainer integration: int64 fallback, readback cadence
+# ---------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def parts():
+    g = generate("products", seed=0, scale=0.15)
+    return partition_graph(g, 4)
+
+
+COMMON = dict(
+    epochs=2, batch_size=16, fanouts=(3, 5), train_model=False,
+    buffer_frac=0.25, interval=4,
+)
+
+
+def _log_digest(result):
+    return [
+        (
+            log.pct_hits, log.comm_volume, log.comm_missed, log.occupancy,
+            log.unique_remote, log.replaced, log.decisions, log.step_time,
+        )
+        for log in result.logs
+    ], result.epoch_times
+
+
+class TestTrainerIntegration:
+    def test_int64_graph_falls_back_to_staged(self, parts, monkeypatch):
+        t_ref = DistributedTrainer(parts, variant="fixed", **COMMON)
+        r_ref = t_ref.run()
+        t_dev = DistributedTrainer(
+            parts, variant="fixed", device="jnp", **COMMON
+        )
+        monkeypatch.setattr(
+            type(t_dev.graph), "num_nodes",
+            property(lambda self: 2**31 + 5),
+        )
+        with pytest.warns(RuntimeWarning, match="int32"):
+            r_dev = t_dev.run()
+        assert _log_digest(r_dev) == _log_digest(r_ref)
+
+    @pytest.mark.parametrize("variant", ["distdgl", "fixed", "massivegnn"])
+    def test_readback_cadence_parity(self, parts, variant):
+        """K-step counter readback reproduces the K=1 logs, stats and
+        engine state bit-identically."""
+        t1 = DistributedTrainer(
+            parts, variant=variant, device="jnp", **COMMON
+        )
+        r1 = t1.run()
+        tk = DistributedTrainer(
+            parts, variant=variant, device="jnp", readback_every=4, **COMMON
+        )
+        rk = tk.run()
+        assert _log_digest(rk) == _log_digest(r1)
+        for name in ("ids", "scores", "valid", "accessed"):
+            np.testing.assert_array_equal(
+                getattr(t1.engine, name), getattr(tk.engine, name),
+                err_msg=name,
+            )
+        for name in (
+            "lookups", "hits", "misses",
+            "replaced_total", "replacement_rounds", "skipped_rounds",
+        ):
+            np.testing.assert_array_equal(
+                getattr(t1.engine.stats, name),
+                getattr(tk.engine.stats, name), err_msg=name,
+            )
+
+    def test_cadence_rejects_trace(self, parts):
+        t = DistributedTrainer(
+            parts, variant="fixed", device="jnp", readback_every=2,
+            trace=True, **COMMON
+        )
+        with pytest.raises(ValueError, match="per-step id streams"):
+            t.run()
+
+    def test_cadence_rejects_store(self, parts):
+        t = DistributedTrainer(
+            parts, variant="fixed", device="jnp", readback_every=2,
+            feature_store=True, **COMMON
+        )
+        with pytest.raises(ValueError, match="feature store"):
+            t.run()
+
+    def test_readback_every_validation(self, parts):
+        with pytest.raises(ValueError, match="readback_every"):
+            DistributedTrainer(
+                parts, variant="fixed", readback_every=0, **COMMON
+            )
+        with pytest.raises(ValueError, match="device"):
+            DistributedTrainer(
+                parts, variant="fixed", readback_every=2, **COMMON
+            )
+
+    def test_device_run_transfer_budget(self, parts, monkeypatch):
+        """End to end: one upload + one readback per step (plus the
+        prime launch) on a full trainer run."""
+        made = {}
+        orig = DeviceEngine.__init__
+
+        def capture(self, *a, **k):
+            orig(self, *a, **k)
+            made["dev"] = self
+
+        monkeypatch.setattr(DeviceEngine, "__init__", capture)
+        t = DistributedTrainer(parts, variant="fixed", device="jnp", **COMMON)
+        t.run()
+        dev = made["dev"]
+        launches = t.epochs * t.mb_per_epoch + 1
+        assert dev.transfers["h2d"] == launches
+        assert dev.transfers["d2h"] == launches
