@@ -519,7 +519,15 @@ def main(argv: list[str]) -> int:
     else:
         run(quick=quick)
     if json_path:
-        payload = {"schema": 1, "quick": quick, "store": store, "rows": _ROWS}
+        from repro.telemetry import provenance
+
+        payload = {
+            "schema": 1,
+            "provenance": provenance(),
+            "quick": quick,
+            "store": store,
+            "rows": _ROWS,
+        }
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=1, sort_keys=True)
             fh.write("\n")

@@ -36,6 +36,10 @@ label (e.g. ``--sweep p4 massivegnn``). Sweep options:
   rows gain measured ``bytes_measured``/``bytes_modeled``/
   ``fetch_seconds_measured`` columns while the decision/byte streams
   stay bit-identical to the modeled path);
+* ``--telemetry`` — run every cell under its own
+  ``repro.telemetry.TelemetrySession``; rows gain a ``telemetry`` field
+  (wall seconds, span count, per-plane seconds, counter totals) in the
+  JSON artifact while all exact metrics stay bit-identical;
 * ``--quick`` — shrink the grid (1 partition count x 1 batch x 1
   fanout, 2 epochs) for the CI smoke legs;
 * ``--json=PATH`` — additionally write the deterministic sweep artifact
@@ -115,6 +119,7 @@ def run_sweep_cli(selected: list[str]) -> int:
     quick = False
     feature_store = False
     trace_dir = None
+    telemetry = False
     terms = []
     for arg in selected:
         if arg.startswith("--policies="):
@@ -150,6 +155,8 @@ def run_sweep_cli(selected: list[str]) -> int:
             quick = True
         elif arg == "--feature-store":
             feature_store = True
+        elif arg == "--telemetry":
+            telemetry = True
         elif arg.startswith("--json="):
             json_path = arg.split("=", 1)[1]
         elif arg.startswith("--trace="):
@@ -192,7 +199,7 @@ def run_sweep_cli(selected: list[str]) -> int:
         print(f"no sweep cells match {terms!r}", file=sys.stderr)
         return 1
     t0 = time.time()
-    rows = run_sweep(grid, verbose=True, trace_dir=trace_dir)
+    rows = run_sweep(grid, verbose=True, trace_dir=trace_dir, telemetry=telemetry)
     print(
         "label,dataset,variant,policy,topology,time_engine,stragglers,"
         "congestion,num_parts,batch_size,fanouts,"

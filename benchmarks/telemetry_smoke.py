@@ -1,0 +1,143 @@
+"""Telemetry overhead gate — one sweep cell, telemetry on vs. off.
+
+The telemetry plane's contract (``docs/OBSERVABILITY.md``) has two
+halves the CI ``bench-smoke`` job pins here:
+
+* **never perturbs**: the telemetry-on run reproduces the telemetry-off
+  run's ``Trace.exact_digest()`` bit-identically, and the *modeled*
+  step-time stream (what every paper figure is built from) is equal —
+  the gated "<5% step-time delta" is therefore expected to be exactly
+  0%;
+* **cheap when on**: wall-clock overhead is reported (and carried in
+  the artifact for trajectory tracking) but not hard-gated — CI runners
+  are too noisy for a wall-clock gate to be sound.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.telemetry_smoke \
+        [--gate] [--json=PATH] [--budget=0.05]
+
+``--json`` writes ``BENCH_telemetry.json`` (provenance header, digests,
+overhead numbers, per-plane breakdown, counter totals); ``--gate``
+exits non-zero when the digests differ or the modeled step-time delta
+exceeds ``--budget`` (default 5%).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.gnn.train import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.telemetry import TelemetrySession, provenance
+
+
+def _cell_kwargs() -> dict:
+    return dict(
+        variant="fixed",
+        epochs=2,
+        batch_size=16,
+        fanouts=(3, 5),
+        mode="async",
+        interval=4,
+        buffer_frac=0.25,
+        train_model=False,
+        trace=True,
+        seed=0,
+    )
+
+
+def run_cell(telemetry: bool):
+    parts = partition_graph(generate("products", seed=0, scale=0.12), 4)
+    session = TelemetrySession(label="telemetry_smoke") if telemetry else False
+    trainer = DistributedTrainer(parts, telemetry=session, **_cell_kwargs())
+    t0 = time.perf_counter()
+    result = trainer.run()
+    wall = time.perf_counter() - t0
+    return trainer, result, wall
+
+
+def run(gate: bool = False, json_path: str | None = None,
+        budget: float = 0.05) -> int:
+    tr_off, res_off, wall_off = run_cell(telemetry=False)
+    tr_on, res_on, wall_on = run_cell(telemetry=True)
+
+    digest_off = tr_off.last_trace.exact_digest()
+    digest_on = tr_on.last_trace.exact_digest()
+    digests_equal = digest_off == digest_on
+
+    # Modeled step time is the deterministic stream the figures use;
+    # telemetry must leave it bit-identical, so delta is exactly 0.
+    step_off = res_off.mean_epoch_time
+    step_on = res_on.mean_epoch_time
+    step_delta = abs(step_on - step_off) / step_off if step_off else 0.0
+    wall_delta = (wall_on - wall_off) / wall_off if wall_off else 0.0
+
+    brief = tr_on.last_telemetry.brief()
+    payload = {
+        "schema": 1,
+        "provenance": provenance(),
+        "cell": {k: list(v) if isinstance(v, tuple) else v
+                 for k, v in _cell_kwargs().items()},
+        "exact_digest_off": digest_off,
+        "exact_digest_on": digest_on,
+        "digests_equal": digests_equal,
+        "mean_epoch_time_off": step_off,
+        "mean_epoch_time_on": step_on,
+        "step_time_delta": step_delta,
+        "step_time_budget": budget,
+        "wall_s_off": round(wall_off, 4),
+        "wall_s_on": round(wall_on, 4),
+        "wall_overhead": round(wall_delta, 4),
+        "telemetry": brief,
+    }
+    print(
+        f"[telemetry] digests_equal={digests_equal} "
+        f"step_delta={step_delta:.2%} (budget {budget:.0%}) "
+        f"wall_overhead={wall_delta:+.1%} "
+        f"spans={brief['span_count']}"
+    )
+    print(f"telemetry_smoke,{wall_on * 1e6 / max(brief['span_count'], 1):.1f},"
+          f"digests_equal={digests_equal}")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# telemetry artifact written to {json_path}", file=sys.stderr)
+    if gate:
+        problems = []
+        if not digests_equal:
+            problems.append(
+                f"exact digest drifted: {digest_off[:12]} != {digest_on[:12]}"
+            )
+        if step_delta > budget:
+            problems.append(
+                f"modeled step-time delta {step_delta:.2%} > budget {budget:.0%}"
+            )
+        if brief["span_count"] == 0:
+            problems.append("telemetry-on run recorded 0 spans")
+        if problems:
+            for p in problems:
+                print(f"# GATE FAIL: {p}", file=sys.stderr)
+            return 1
+        print("# gate: telemetry overhead contract holds", file=sys.stderr)
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    gate = "--gate" in argv
+    json_path = None
+    budget = 0.05
+    for arg in argv:
+        if arg.startswith("--json="):
+            json_path = arg.split("=", 1)[1]
+        elif arg.startswith("--budget="):
+            budget = float(arg.split("=", 1)[1])
+    return run(gate=gate, json_path=json_path, budget=budget)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 from dataclasses import dataclass
 
+from .. import telemetry as tel
 from . import backends as backends_mod
 from . import prompt as prompt_mod
 from .backends import DecisionBackend
@@ -194,6 +195,7 @@ class LLMAgent:
         ) / len(self.decisions)
 
 
+@tel.spanned("agent.infer", plane="agent")
 def step_agents(agents: list[LLMAgent], metrics_list: list[Metrics]) -> list[Decision]:
     """One request/response round-trip for many agents at once.
 
@@ -215,6 +217,7 @@ def step_agents(agents: list[LLMAgent], metrics_list: list[Metrics]) -> list[Dec
     history mutates between steps — the batch degenerates to the scalar
     sequence to keep that behaviour exact.
     """
+    tel.count("agent.requests", len(agents))
     if len({id(a) for a in agents}) < len(agents):
         return [a.step(m) for a, m in zip(agents, metrics_list)]
     for agent, metrics in zip(agents, metrics_list):

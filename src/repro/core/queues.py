@@ -30,6 +30,7 @@ from typing import Callable
 
 import numpy as np
 
+from .. import telemetry as tel
 from .metrics import Metrics
 
 
@@ -174,9 +175,13 @@ class BatchedInferencePipe:
         if self.mode == "sync":
             # Every trainer blocks: request -> inference -> response.
             everyone = np.arange(P, dtype=np.int64)
+            if tel.enabled():
+                tel.count("pipe.submitted", np.ones(P))
             replace = np.asarray(
                 self.decide_batch(everyone, list(metrics_list)), dtype=bool
             )
+            if tel.enabled():
+                tel.count("pipe.ready", np.ones(P))
             self._note_gaps(everyone, now)
             return BatchedStepOutcome(
                 decision_available=np.ones(P, dtype=bool),
@@ -202,6 +207,10 @@ class BatchedInferencePipe:
             for_mb[due] = self.submitted_at[due]
             self._note_gaps(due, now)
             self.busy[due] = False
+            if tel.enabled():
+                ready = np.zeros(P)
+                ready[due] = 1.0
+                tel.count("pipe.ready", ready)
         idle = np.nonzero(~self.busy)[0]
         if idle.size:
             # Queues cleared of backlog; notify with the *latest* metrics.
@@ -210,6 +219,10 @@ class BatchedInferencePipe:
             self.submitted_at[idle] = now
             self.ready_at[idle] = now + np.maximum(self.latency[idle], 1e-9)
             self.busy[idle] = True
+            if tel.enabled():
+                fresh = np.zeros(P)
+                fresh[idle] = 1.0
+                tel.count("pipe.submitted", fresh)
         return BatchedStepOutcome(
             decision_available=available,
             replace=replace,

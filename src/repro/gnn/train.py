@@ -55,6 +55,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from .. import telemetry as tel
 from ..core import scoring
 from ..core.buffer import PersistentBuffer
 from ..core.controller import Controller, make_controller
@@ -180,6 +181,9 @@ class RunResult:
     #: Recorded run trace (``repro.trace.Trace``) when the trainer was
     #: built with ``trace=...``; None otherwise.
     trace: object | None = None
+    #: Flat telemetry summary (``TelemetrySession.summary()``) when the
+    #: trainer was built with ``telemetry=...``; None otherwise.
+    telemetry: dict | None = None
 
     # ---- aggregates used across the benchmark suite ------------------- #
     # Aggregates over an *empty* run (zero epochs / zero logged
@@ -266,6 +270,7 @@ class DistributedTrainer:
         feature_store: object = False,
         device: object = False,
         readback_every: int = 1,
+        telemetry: object = False,
     ):
         if runtime not in ("vectorized", "legacy"):
             raise ValueError(
@@ -364,6 +369,14 @@ class DistributedTrainer:
         # config). The finished Trace lands on self.last_trace.
         self.trace = trace
         self.last_trace = None
+        # Telemetry plane (repro.telemetry): False/None = off (zero
+        # overhead — no session is ever constructed); True = collect
+        # into a fresh TelemetrySession; a TelemetrySession instance is
+        # used as-is (single-use, like recorders). The finished session
+        # lands on self.last_telemetry and its summary on
+        # RunResult.telemetry. Never perturbs exact streams.
+        self.telemetry = telemetry
+        self.last_telemetry = None
         # Feature-store data plane (repro.store): False/None = modeled
         # bytes only; True = build a store over this graph's partitioned
         # features; a FeatureStore instance is used as-is. With the
@@ -576,8 +589,45 @@ class DistributedTrainer:
         return TraceRecorder.for_trainer(self)
 
     # ------------------------------------------------------------------ #
+    def make_telemetry(self):
+        """Resolve the ``telemetry`` flag to a session (or None when off).
+
+        Mirrors :meth:`make_trace_recorder`: a pre-built
+        :class:`repro.telemetry.TelemetrySession` is used as-is,
+        ``telemetry=True`` builds a fresh default session.
+        """
+        if not self.telemetry:
+            return None
+        from ..telemetry import TelemetrySession
+
+        if isinstance(self.telemetry, TelemetrySession):
+            return self.telemetry
+        return TelemetrySession(label=self.variant)
+
+    # ------------------------------------------------------------------ #
     def run(self) -> RunResult:
-        """Execute the experiment (vectorized runtime by default)."""
+        """Execute the experiment (vectorized runtime by default).
+
+        With ``telemetry=...`` set, the run executes under an active
+        :class:`repro.telemetry.TelemetrySession`; the session lands on
+        ``self.last_telemetry`` and its summary on the result.
+        """
+        session = self.make_telemetry()
+        if session is None:
+            return self._run_impl()
+        from .. import telemetry as tel
+
+        with tel.active(session):
+            with session.tracer.span("run", plane="runtime"):
+                result = self._run_impl()
+        session.meta.setdefault("variant", self.variant)
+        session.meta.setdefault("mode", self.mode)
+        session.meta.setdefault("num_pes", self.parts.num_parts)
+        self.last_telemetry = session
+        result.telemetry = session.summary()
+        return result
+
+    def _run_impl(self) -> RunResult:
         if self.runtime == "vectorized":
             from ..runtime.driver import run_vectorized
 
@@ -625,7 +675,9 @@ class DistributedTrainer:
                 # lookup time — replacement may overwrite their slots).
                 hit_mask_sets: list[np.ndarray] = []
                 hit_row_sets: list[np.ndarray] = []
+                _step_sp = tel.begin("step", plane="runtime")
                 for p in range(P):
+                    _pe_sp = tel.begin("pe_step", pe=p, plane="runtime")
                     ctrl = self.controllers[p]
                     buf = self.buffers[p]
                     batch = self._seed_batch(p, epoch, mb)
@@ -725,6 +777,7 @@ class DistributedTrainer:
                                 lambda a, b: a + b, grads_acc, grads
                             )
                         )
+                    tel.end(_pe_sp)
 
                 # Wall-clock pricing of the exact streams (§4.5.3 closed
                 # form or the event simulator), then the gradient sync
@@ -813,6 +866,7 @@ class DistributedTrainer:
                         lambda prm, g: prm - self.lr * g, self.params, grads_mean
                     )
                     losses.append(loss_acc)
+                tel.end(_step_sp)
             epoch_times.append(epoch_time)
 
         accuracy = 0.0

@@ -16,6 +16,7 @@ import numpy as np
 import functools
 
 from . import ref
+from .. import telemetry
 from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
 from .fused_step import fused_frontier_step_pallas as _fused_frontier_step_pallas
 from .fused_step import fused_step_pallas as _fused_step_pallas
@@ -64,6 +65,7 @@ _fused_frontier_ref = functools.partial(
 )(ref.fused_frontier_step)
 
 
+@telemetry.profiled("pack_readback")
 @jax.jit
 def pack_readback(hit, hit_slot, placed, slot_pos, n_valid):
     """Pack the staged fused-step launch's five host-facing outputs into
@@ -84,6 +86,7 @@ def pack_readback(hit, hit_slot, placed, slot_pos, n_valid):
     )
 
 
+@telemetry.profiled("fused_step_batch")
 def fused_step_batch(
     ids,
     scores,
@@ -184,6 +187,7 @@ def fused_step_batch(
     )
 
 
+@telemetry.profiled("fused_frontier_step_batch")
 def fused_frontier_step_batch(
     ids,
     scores,
@@ -269,6 +273,7 @@ def fused_frontier_step_batch(
     )
 
 
+@telemetry.profiled("frontier_unique_batch")
 def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):
     """Fused frontier dedup; accepts int32 **or** int64 row-sorted keys.
 
@@ -300,30 +305,37 @@ def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):
     return _frontier_unique_batch(sorted_keys, is_remote, interpret=interpret)
 
 
+@telemetry.profiled("gather_rows")
 def gather_rows(table, indices, *, interpret: bool = True):
     return _gather_rows(table, indices, interpret=interpret)
 
 
+@telemetry.profiled("gather_mean")
 def gather_mean(table, indices, *, interpret: bool = True):
     return _gather_mean(table, indices, interpret=interpret)
 
 
+@telemetry.profiled("segment_sum_equal")
 def segment_sum_equal(data, k: int, *, interpret: bool = True):
     return _segment_sum_equal(data, k, interpret=interpret)
 
 
+@telemetry.profiled("score_update")
 def score_update(scores, accessed, *, interpret: bool = True):
     return _score_update(scores, accessed, interpret=interpret)
 
 
+@telemetry.profiled("gather_rows_batch")
 def gather_rows_batch(tables, indices, *, interpret: bool = True):
     return _gather_rows_batch(tables, indices, interpret=interpret)
 
 
+@telemetry.profiled("score_update_batch")
 def score_update_batch(scores, accessed, *, interpret: bool = True):
     return _score_update_batch(scores, accessed, interpret=interpret)
 
 
+@telemetry.profiled("score_policy_update_batch")
 def score_policy_update_batch(
     scores,
     accessed,
@@ -349,6 +361,7 @@ def score_policy_update_batch(
     )
 
 
+@telemetry.profiled("mla_flash_decode")
 def mla_flash_decode(q_lat, q_rope, cache_c, cache_kr, pos, *, scale=None,
                      interpret: bool = True):
     return _mla_flash_decode(

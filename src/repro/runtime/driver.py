@@ -36,6 +36,7 @@ import warnings
 import jax
 import numpy as np
 
+from .. import telemetry as tel
 from ..core.controller import (
     FixedController,
     NoPrefetchController,
@@ -60,13 +61,18 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         if trainer.graph.num_nodes - 1 >= np.iinfo(np.int32).max:
             # The device engine stores node ids as int32; rather than
             # raising mid-run, run the staged pipeline (identical
-            # streams, no device residency).
-            warnings.warn(
-                "device=... requested but graph node ids exceed int32; "
-                "falling back to the staged pipeline",
-                RuntimeWarning,
-                stacklevel=2,
-            )
+            # streams, no device residency). Counted (not just warned)
+            # so sweeps can report how many cells took the staged path;
+            # the warning itself fires once per trainer, not per run.
+            tel.count("device.fallback_int64")
+            if not getattr(trainer, "_warned_int64_fallback", False):
+                trainer._warned_int64_fallback = True
+                warnings.warn(
+                    "device=... requested but graph node ids exceed int32; "
+                    "falling back to the staged pipeline",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
         else:
             return run_device(trainer)
     # Deferred: repro.gnn.train imports the engine from this package.
@@ -99,6 +105,7 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     for epoch in range(trainer.epochs):
         epoch_time = 0.0
         for mb in range(trainer.mb_per_epoch):
+            _step_sp = tel.begin("step", plane="runtime")
             # -- stage 1: batched sampling ----------------------------- #
             minibatches, remote, n_remote = sample.run(epoch, mb, trainer.rng)
 
@@ -172,6 +179,7 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                 )
 
             if trainer.train_model:
+                _train_sp = tel.begin("train", plane="train")
                 grads_acc = None
                 loss_acc = 0.0
                 for p in range(P):
@@ -197,6 +205,8 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
                         grads_mean,
                     )
                     losses.append(loss_acc)
+                tel.end(_train_sp)
+            tel.end(_step_sp)
         epoch_times.append(epoch_time)
 
     accuracy = 0.0
@@ -359,9 +369,11 @@ def _run_device_cadence(
     def flush() -> None:
         nonlocal pending, done
         if pending:
-            block = jax.device_get(jnp.stack(pending))
+            with tel.span("device.readback", plane="device"):
+                block = jax.device_get(jnp.stack(pending))
             dev.transfers["d2h"] += 1
             dev.transfers["d2h_bytes"] += block.nbytes
+            tel.count("device.d2h_bytes", block.nbytes)
             counters.extend(block)
             pending = []
         while done < len(meta) and done + 1 < len(counters):
@@ -377,6 +389,7 @@ def _run_device_cadence(
     )
 
     for step in range(total):
+        _step_sp = tel.begin("step", plane="runtime")
         epoch, mb = divmod(step, trainer.mb_per_epoch)
         # The eligible controllers never read the metric values (that is
         # what _check_cadence_eligible enforces), so stale zeros keep
@@ -442,6 +455,7 @@ def _run_device_cadence(
                 losses.append(loss_acc)
 
         minibatches = nxt_mb
+        tel.end(_step_sp)
 
     flush()
 
@@ -556,6 +570,7 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
         probe = fused.prime(remote, n_remote)
 
     for step in range(total):
+        _step_sp = tel.begin("step", plane="runtime")
         epoch, mb = divmod(step, trainer.mb_per_epoch)
         decide.submit(
             [
@@ -676,6 +691,7 @@ def run_device(trainer) -> "RunResult":  # noqa: F821 — see lazy import
             remote, n_remote = probe.remote, probe.n_remote
         else:
             remote, n_remote = nxt_remote, nxt_n_remote
+        tel.end(_step_sp)
 
     accuracy = 0.0
     if trainer.train_model:

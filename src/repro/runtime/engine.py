@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import telemetry as tel
 from ..core import scoring
 from ..core.buffer import _unique_preserve_order
 
@@ -573,6 +574,7 @@ class DeviceEngine:
 
         from ..kernels import ops
 
+        _launch_sp = tel.begin("device.launch", plane="device")
         (
             self._ids,
             self._scores,
@@ -602,13 +604,17 @@ class DeviceEngine:
             interpret=self.interpret,
             **self.policy.kernel_constants(),
         )
+        tel.end(_launch_sp)
         if w2 is not None:
             self._weights = w2
         # One packed int32 pull instead of five small device_gets — the
         # staged-path half of the single-transfer readback contract.
-        packed = jax.device_get(
-            ops.pack_readback(hit_d, hit_slot_d, placed_d, slot_pos_d, n_valid_d)
-        )
+        with tel.span("device.readback", plane="device"):
+            packed = jax.device_get(
+                ops.pack_readback(
+                    hit_d, hit_slot_d, placed_d, slot_pos_d, n_valid_d
+                )
+            )
         C = slot_pos_d.shape[1]
         hit = packed[:, :M] != 0
         hit_slot = packed[:, M : 2 * M]
@@ -621,6 +627,13 @@ class DeviceEngine:
         )
         self.transfers["d2h"] += 1
         self.transfers["d2h_bytes"] += packed.nbytes
+        if tel.enabled():
+            tel.count(
+                "device.h2d_bytes",
+                q.nbytes + c.nbytes + 3 * P
+                + (cw.nbytes if cw is not None else 0),
+            )
+            tel.count("device.d2h_bytes", packed.nbytes)
 
         # --- probe bookkeeping (PrefetchEngine.lookup) ----------------- #
         lengths = np.where(np.asarray(active_probe, dtype=bool), qlen, 0)
@@ -732,12 +745,14 @@ class DeviceEngine:
         aug = np.concatenate([touched, gates[:, None]], axis=1)
         self.transfers["h2d"] += 1
         self.transfers["h2d_bytes"] += aug.nbytes
+        tel.count("device.h2d_bytes", aug.nbytes)
 
         table = loc = None
         if self._store is not None and self.payload is not None:
             table, loc = self._store.device_view()
 
         Kc = self._cand_ready.shape[1]
+        _launch_sp = tel.begin("device.launch", plane="device")
         (
             self._ids,
             self._scores,
@@ -767,6 +782,7 @@ class DeviceEngine:
             interpret=self.interpret,
             **self.policy.kernel_constants(),
         )
+        tel.end(_launch_sp)
         if w2 is not None:
             self._weights = w2
         if payload2 is not None:
@@ -784,9 +800,11 @@ class DeviceEngine:
             self._cand_pending = cand_next
             return counters_d
 
-        packed = jax.device_get(packed_d)
+        with tel.span("device.readback", plane="device"):
+            packed = jax.device_get(packed_d)
         self.transfers["d2h"] += 1
         self.transfers["d2h_bytes"] += packed.nbytes
+        tel.count("device.d2h_bytes", packed.nbytes)
         Mt = aug.shape[1] - 1
         C = self.max_capacity
         sk = packed[:, :Mt]
@@ -875,9 +893,13 @@ class DeviceEngine:
                 for p, s in enumerate(slots_per_pe)
             ]
         )
-        rows = np.asarray(jnp.take(self.payload, jnp.asarray(flat), axis=0))
+        with tel.span("device.readback", plane="device"):
+            rows = np.asarray(
+                jnp.take(self.payload, jnp.asarray(flat), axis=0)
+            )
         self.transfers["d2h"] += 1
         self.transfers["d2h_bytes"] += rows.nbytes
+        tel.count("device.d2h_bytes", rows.nbytes)
         return [
             np.ascontiguousarray(b)
             for b in np.split(rows, np.cumsum(lengths)[:-1])
@@ -909,6 +931,9 @@ class DeviceEngine:
             data = jnp.asarray(np.concatenate(rows, dtype=np.float32))
             self.transfers["h2d"] += 1
             self.transfers["h2d_bytes"] += sum(int(r.nbytes) for r in rows)
+            tel.count(
+                "device.h2d_bytes", sum(int(r.nbytes) for r in rows)
+            )
         self.payload = self.payload.at[jnp.asarray(flat)].set(data)
 
     # ------------------------------------------------------------------ #

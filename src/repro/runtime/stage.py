@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import telemetry as tel
 from ..core.controller import Controller, DecisionPlane
 from ..core.metrics import Metrics
 from ..graph.sampler import MiniBatch, SamplerPlane
@@ -58,6 +59,7 @@ class DecisionStage:
             )
         self._request = list(metrics)
 
+    @tel.spanned("decision", plane="decision")
     def collect(self):
         """Drain the response buffer: ``(decisions, stall_ticks)`` per PE."""
         if self._request is None:
@@ -83,6 +85,7 @@ class SampleStage:
         self.seed_fn = seed_fn
         self.part_of = part_of
 
+    @tel.spanned("sample", plane="sampling")
     def run(
         self, epoch: int, mb: int, rng: np.random.Generator
     ) -> tuple[list[MiniBatch], list[np.ndarray], np.ndarray]:
@@ -94,6 +97,7 @@ class SampleStage:
         n_remote = np.array([len(r) for r in remote], dtype=np.int64)
         return minibatches, remote, n_remote
 
+    @tel.spanned("sample", plane="sampling")
     def run_raw(
         self, epoch: int, mb: int, rng: np.random.Generator
     ) -> tuple[list[MiniBatch], np.ndarray]:
@@ -151,6 +155,27 @@ class CommitResult:
         default_factory=lambda: np.zeros(0, dtype=np.int64)
     )                         # (P,) int64 — §4.5.3 accounting bytes
     fetch_seconds: float = 0.0  # wall-clock time of this step's gathers
+
+
+def _count_fetch(
+    missed, placed, part_of, num_pes, miss_comm, replaced, feature_dim, feature_bytes
+):
+    """Telemetry-on-only fetch accounting: per-PE node/byte counters and
+    the per-(PE, home) byte matrix. Observational — reads the same
+    exact streams the time engine already priced, never alters them."""
+    row_bytes = feature_dim * feature_bytes
+    miss_comm = np.asarray(miss_comm, dtype=np.float64)
+    replaced = np.asarray(replaced, dtype=np.float64)
+    tel.count("fetch.miss_nodes", miss_comm)
+    tel.count("fetch.replaced_nodes", replaced)
+    tel.count("fetch.bytes_modeled", (miss_comm + replaced) * row_bytes)
+    if part_of is not None:
+        by_home = np.zeros((num_pes, num_pes), dtype=np.float64)
+        for p in range(num_pes):
+            ids = np.concatenate([missed[p], placed[p]])
+            if len(ids):
+                by_home[p] = np.bincount(part_of[ids], minlength=num_pes)
+        tel.count("fetch.bytes_by_home", by_home * row_bytes)
 
 
 class FetchStage:
@@ -221,6 +246,7 @@ class FetchStage:
         self._last_replaced = np.zeros(P, dtype=np.int64)
         self._have_replaced = False
 
+    @tel.spanned("fetch.probe", plane="engine")
     def probe(self, remote: list[np.ndarray], n_remote: np.ndarray) -> ProbeResult:
         """Batched buffer lookup; buffers the miss sets for commit()."""
         if self._missed is not None:
@@ -256,6 +282,7 @@ class FetchStage:
             replaced_pct=replaced_pct,
         )
 
+    @tel.spanned("fetch.commit", plane="engine")
     def commit(self, decisions: np.ndarray, stalls: np.ndarray) -> CommitResult:
         """Scoring + replacement round + wall-clock accounting."""
         if self._missed is None:
@@ -272,6 +299,11 @@ class FetchStage:
         comm = np.array([len(m) for m in missed], dtype=np.int64)
         # Replacement traffic is communication (Alg. 1 line 14).
         total_comm = comm + replaced
+        if tel.enabled():
+            _count_fetch(
+                missed, engine.last_placed, self.part_of, engine.num_pes,
+                comm, replaced, self.feature_dim, self.feature_bytes,
+            )
         t = self.time_engine.step(
             build_step_comm(
                 missed,
@@ -294,6 +326,7 @@ class FetchStage:
             self._serve_features(result)
         return result
 
+    @tel.spanned("fetch.serve", plane="store")
     def _serve_features(self, result: CommitResult) -> None:
         """Move the bytes the accounting counted: one batched store
         gather for every PE's misses, one for every PE's admissions
@@ -407,6 +440,7 @@ class FusedFetchStage:
         self._no_decision = np.zeros(P, dtype=bool)
 
     # ------------------------------------------------------------------ #
+    @tel.spanned("fused.prime", plane="engine")
     def prime(self, remote: list[np.ndarray], n_remote: np.ndarray) -> ProbeResult:
         """Launch 0: probe the first minibatch only (score and replace
         gated off), establishing the rotation invariant that a probe is
@@ -423,6 +457,7 @@ class FusedFetchStage:
         )
         return self._stash_probe(remote, n_remote, out)
 
+    @tel.spanned("fused.prime", plane="engine")
     def prime_raw(self, touched: np.ndarray) -> ProbeResult:
         """Single-launch twin of :meth:`prime`: launch 0 ingests the raw
         first frontier; dedup and the remote extraction happen on device
@@ -442,6 +477,7 @@ class FusedFetchStage:
             return
         pending["miss_gather"] = self.store.gather_batch(pending["missed"])
 
+    @tel.spanned("fused.step", plane="engine")
     def step(
         self,
         decisions: np.ndarray,
@@ -470,6 +506,11 @@ class FusedFetchStage:
         self._have_replaced = True
         comm = np.array([len(m) for m in missed], dtype=np.int64)
         total_comm = comm + out.replaced
+        if tel.enabled():
+            _count_fetch(
+                missed, dev.last_placed, self.part_of, dev.num_pes,
+                comm, out.replaced, self.feature_dim, self.feature_bytes,
+            )
         t = self.time_engine.step(
             build_step_comm(
                 missed,
@@ -495,6 +536,7 @@ class FusedFetchStage:
         probe = self._stash_probe(next_remote, next_n_remote, out)
         return commit, probe
 
+    @tel.spanned("fused.step", plane="engine")
     def step_raw(
         self,
         decisions: np.ndarray,
@@ -530,6 +572,11 @@ class FusedFetchStage:
         self._have_replaced = True
         comm = np.array([len(m) for m in missed], dtype=np.int64)
         total_comm = comm + out.replaced
+        if tel.enabled():
+            _count_fetch(
+                missed, dev.last_placed, self.part_of, dev.num_pes,
+                comm, out.replaced, self.feature_dim, self.feature_bytes,
+            )
         t = self.time_engine.step(
             build_step_comm(
                 missed,
@@ -584,6 +631,7 @@ class FusedFetchStage:
             n_remote=np.asarray(n_remote, dtype=np.int64),
         )
 
+    @tel.spanned("fetch.serve", plane="store")
     def _serve_features(self, result: CommitResult, pending: dict) -> None:
         """Store data path, fused-mode twin of ``FetchStage._serve_features``:
         the miss gather may have been pre-dispatched by
@@ -623,6 +671,7 @@ class FusedFetchStage:
         )
         result.fetch_seconds = miss_gather.seconds + placed_gather.seconds
 
+    @tel.spanned("fetch.serve", plane="store")
     def _serve_features_raw(self, result: CommitResult, pending: dict) -> None:
         """Store data path for the single-launch step: admission rows
         were scattered into the device payload *inside* the launch

@@ -165,6 +165,7 @@ def run_sweep(
     scale: float = 0.12,
     verbose: bool = False,
     trace_dir: str | None = None,
+    telemetry: bool = False,
 ) -> list[dict]:
     """Run every configuration in-process; returns one result row per cell.
 
@@ -181,6 +182,12 @@ def run_sweep(
     under ``trace_dir/<label>.npz``; rows gain a ``trace`` field naming
     the artifact, so any sweep cell can be replayed or diffed in
     isolation later.
+
+    With ``telemetry=True`` each cell runs under its own
+    :class:`repro.telemetry.TelemetrySession` and the row gains a
+    ``telemetry`` field (:meth:`TelemetrySession.brief`: wall seconds,
+    span count, per-plane exclusive seconds, counter totals). Exact
+    metrics are unchanged — telemetry observes, never perturbs.
     """
     # Deferred: repro.gnn.train imports this package at module load.
     from ..graph import generate, partition_graph
@@ -208,8 +215,14 @@ def run_sweep(
             from ..trace import TraceRecorder
 
             trainer.trace = TraceRecorder.for_trainer(trainer, config=cell_config)
+        if telemetry:
+            from ..telemetry import TelemetrySession
+
+            trainer.telemetry = TelemetrySession(label=cfg.label())
         result = trainer.run()
         row = asdict(cfg)
+        if telemetry:
+            row["telemetry"] = trainer.last_telemetry.brief()
         if trace_dir is not None:
             import hashlib
 
@@ -291,10 +304,19 @@ def validate_rows(rows: list[dict]) -> list[str]:
 
 
 def sweep_artifact(rows: list[dict]) -> dict:
-    """The ``BENCH_sweep.json`` payload: sorted rows + grid summary."""
+    """The ``BENCH_sweep.json`` payload: sorted rows + grid summary.
+
+    Carries the shared provenance header (schema, git sha, platform,
+    library versions — :func:`repro.telemetry.provenance`) so every
+    uploaded baseline records what produced it. No wall-clock timestamp:
+    reruns of the same tree must stay byte-identical.
+    """
+    from ..telemetry import provenance
+
     rows = sorted(rows, key=_cell_key)
     return {
         "schema": 1,
+        "provenance": provenance(),
         "grid": {
             "cells": len(rows),
             "datasets": sorted({r["dataset"] for r in rows}),

@@ -40,6 +40,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .. import telemetry as tel
+
 
 @dataclass
 class StoreGather:
@@ -265,6 +267,8 @@ class FeatureStore:
         without re-uploading the block it just pulled. The numpy blocks
         (and every exact stream derived from them) are unchanged.
         """
+        sp = tel.span("store.gather", plane="store")
+        sp.__enter__()
         t0 = time.perf_counter()
         lengths = [len(x) for x in id_lists]
         if sum(lengths):
@@ -283,10 +287,20 @@ class FeatureStore:
             import jax.numpy as jnp
 
             device_block = jnp.asarray(block)
+        seconds = time.perf_counter() - t0
+        sp.nbytes = int(block.nbytes)
+        sp.__exit__(None, None, None)
+        if tel.enabled():
+            tel.count("store.bytes", block.nbytes)
+            tel.count("store.gathers", 1)
+            tel.count(
+                "store.rows",
+                np.asarray(lengths, dtype=np.float64),
+            )
         return StoreGather(
             blocks=blocks,
             nbytes=int(block.nbytes),
-            seconds=time.perf_counter() - t0,
+            seconds=seconds,
             device_block=device_block,
         )
 

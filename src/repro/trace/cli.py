@@ -272,8 +272,11 @@ def cmd_verify(args) -> int:
             print(report.render())
             failed += 1
     if args.json:
+        from ..telemetry import provenance
+
         payload = {
             "identical": failed == 0,
+            "provenance": provenance(),
             "traces": results,
             "golden_dir": args.dir,
         }
@@ -345,4 +348,10 @@ def make_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> int:
     args = make_parser().parse_args(argv)
-    return args.func(args)
+    try:
+        return args.func(args)
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        # Missing artifacts, digest/schema mismatches, corrupt manifests:
+        # operator errors, not crashes — report and exit like a CLI.
+        print(f"error: {exc}", file=sys.stderr)
+        return 2

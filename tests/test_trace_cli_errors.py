@@ -1,0 +1,91 @@
+"""``python -m repro.trace`` error paths.
+
+Operator mistakes — a missing artifact, a corrupted payload, a typo'd
+subcommand — must exit like a CLI (stderr + nonzero), never dump a
+traceback. ``main`` catches OSError/ValueError/JSONDecodeError and
+returns 2; argparse owns unknown subcommands (SystemExit 2).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.gnn.train import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.trace import save_trace
+from repro.trace.cli import main as trace_main
+
+
+@pytest.fixture(scope="module")
+def recorded(tmp_path_factory):
+    """One small recorded trace (base path) to corrupt in various ways."""
+    g = generate("products", seed=0, scale=0.05)
+    parts = partition_graph(g, 2)
+    t = DistributedTrainer(
+        parts, variant="fixed", epochs=1, batch_size=8, fanouts=(3, 5),
+        train_model=False, trace=True,
+    )
+    t.run()
+    base = tmp_path_factory.mktemp("trace") / "golden"
+    save_trace(t.last_trace, str(base))
+    return base
+
+
+class TestTraceCLIErrors:
+    def test_missing_manifest_exits_2(self, tmp_path, capsys):
+        missing = str(tmp_path / "nope")
+        assert trace_main(["replay", missing]) == 2
+        assert "error:" in capsys.readouterr().err
+        assert trace_main(["diff", missing, missing]) == 2
+        capsys.readouterr()
+
+    def test_missing_payload_exits_2(self, recorded, tmp_path, capsys):
+        # Manifest present, npz gone: load_trace raises OSError.
+        orphan = tmp_path / "orphan"
+        orphan.with_suffix(".json").write_text(
+            recorded.with_suffix(".json").read_text()
+        )
+        assert trace_main(["replay", str(orphan)]) == 2
+        assert "error:" in capsys.readouterr().err
+
+    def test_digest_mismatch_exits_2(self, recorded, tmp_path, capsys):
+        # Tamper with the payload without regenerating the digest.
+        tampered = tmp_path / "tampered"
+        tampered.with_suffix(".json").write_text(
+            recorded.with_suffix(".json").read_text()
+        )
+        with np.load(recorded.with_suffix(".npz")) as payload:
+            arrays = {k: payload[k].copy() for k in payload.files}
+        arrays["total_comm"][0, 0] += 1
+        np.savez_compressed(tampered.with_suffix(".npz"), **arrays)
+        assert trace_main(["replay", str(tampered)]) == 2
+        err = capsys.readouterr().err
+        assert "digest mismatch" in err
+
+    def test_corrupt_manifest_exits_2(self, recorded, tmp_path, capsys):
+        broken = tmp_path / "broken"
+        broken.with_suffix(".json").write_text("{not json")
+        broken.with_suffix(".npz").write_bytes(
+            recorded.with_suffix(".npz").read_bytes()
+        )
+        assert trace_main(["replay", str(broken)]) == 2
+        assert "error:" in capsys.readouterr().err
+
+    def test_unknown_subcommand_exits_2(self, capsys):
+        with pytest.raises(SystemExit) as exc:
+            trace_main(["frobnicate"])
+        assert exc.value.code == 2
+        capsys.readouterr()
+
+    def test_verify_provenance_in_report(self, recorded, capsys, tmp_path):
+        # verify of a dir with a non-replayable manifest: exit 1 (drift,
+        # not crash) and the JSON report carries the provenance header.
+        report = tmp_path / "report.json"
+        rc = trace_main(["verify", str(recorded.parent), "--json", str(report)])
+        assert rc in (0, 1)
+        payload = json.loads(report.read_text())
+        assert payload["provenance"]["schema"] == 1
+        capsys.readouterr()
