@@ -9,10 +9,12 @@ Standalone usage::
 
 ``--quick`` is the CI smoke leg: fewer iterations and the cheap kernels
 only (it still covers ``frontier_unique_batch``, the sampler-plane
-speedup, the fused-step megakernel speedup at P=256, and the
-fused-vs-staged runtime digest gate — ``--gate`` fails the run when any
-row reports ``streams_match=False``). ``--json`` writes a
+speedup, the fused-step megakernel speedup at P=256, the wide-id
+(ids > 2^31) vs narrow launch race, and the fused-vs-staged runtime
+digest gate — ``--gate`` fails the run when any row reports
+``streams_match=False`` or ``slowdown_ok=False``). ``--json`` writes a
 machine-readable artifact uploaded by CI next to ``BENCH_sweep.json``.
+``--big-ids`` runs the wide-id race standalone.
 
 ``--device-e2e`` races the single-launch device step (raw frontier in,
 packed readback out — ``DeviceEngine.fused_step_raw``) against the
@@ -185,6 +187,86 @@ def _fused_step_speedup(iters: int = 5, quick: bool = False) -> None:
             f"staged_us={staged_us:.1f} speedup={speedup:.2f}x "
             f"streams_match={match}",
         )
+
+
+def _big_ids_speedup(iters: int = 5, quick: bool = False) -> None:
+    """The wide-id claim: lifting the int32 ceiling must not lose the
+    megakernel. The same warm state and step sequence runs twice —
+    narrow (ids < 2^31) and wide (every id shifted past 2^31, the
+    ``(hi, lo)`` word-pair path) — and the hit/miss/replacement streams
+    are asserted identical before the slowdown is reported. The derived
+    column carries ``streams_match`` and ``slowdown_ok`` (wide must stay
+    within 1.3x of the narrow launch); ``--gate`` fails on either.
+    """
+    import copy
+
+    from repro.runtime.engine import DeviceEngine, PrefetchEngine
+
+    n_nodes = 100_000
+    BASE = 2**31 + 1000
+    C, M = 64, 64
+    for P in ([64] if quick else [64, 256]):
+        rng = np.random.default_rng(0)
+        eng = PrefetchEngine([C] * P)
+        eng_w = PrefetchEngine([C] * P, id_base=BASE)
+        for p in range(P):
+            seed = rng.choice(n_nodes, size=C // 2, replace=False).astype(np.int64)
+            eng.insert(p, seed)
+            eng_w.insert(p, seed + BASE)
+        steps = iters + 1
+        queries = [
+            [
+                rng.choice(n_nodes, size=M, replace=False).astype(np.int64)
+                for _ in range(P)
+            ]
+            for _ in range(steps)
+        ]
+        decisions = [rng.random(P) > 0.3 for _ in range(steps)]
+        ones = np.ones(P, dtype=bool)
+        zeros = np.zeros(P, dtype=bool)
+        empty = [np.array([], dtype=np.int64) for _ in range(P)]
+
+        def drive(dev, shift):
+            streams, times = [], []
+            qs = [[q + shift for q in step] for step in queries]
+            out = dev.fused_step(qs[0], empty, zeros, zeros, ones)  # prime
+            prev_d = empty
+            cur_missed = out.missed
+            for t in range(steps):
+                nq = qs[t + 1] if t + 1 < steps else empty
+                t0 = time.perf_counter()
+                out = dev.fused_step(nq, prev_d, ones, decisions[t], ones)
+                jax.block_until_ready(dev._ids)
+                times.append(time.perf_counter() - t0)
+                streams.append(
+                    ([len(m) for m in cur_missed], out.replaced.tolist())
+                )
+                prev_d = cur_missed
+                cur_missed = out.missed
+            return streams, times
+
+        dev_n = DeviceEngine(copy.deepcopy(eng), backend="jnp")
+        dev_w = DeviceEngine(copy.deepcopy(eng_w), backend="jnp")
+        assert not dev_n.wide and dev_w.wide
+        narrow_streams, t_narrow = drive(dev_n, 0)
+        wide_streams, t_wide = drive(dev_w, BASE)
+
+        match = narrow_streams == wide_streams
+        narrow_us = min(t_narrow[1:]) * 1e6
+        wide_us = min(t_wide[1:]) * 1e6
+        slowdown = wide_us / narrow_us if narrow_us > 0 else float("inf")
+        _emit(
+            f"fused_step_big_ids_p{P}_c{C}_m{M}",
+            wide_us,
+            f"narrow_us={narrow_us:.1f} slowdown={slowdown:.2f}x "
+            f"slowdown_ok={slowdown <= 1.3} streams_match={match}",
+        )
+
+
+def run_big_ids(quick: bool = False):
+    _ROWS.clear()
+    _big_ids_speedup(iters=8 if quick else 12, quick=quick)
+    return True
 
 
 def _fused_runtime_digest(quick: bool = False) -> None:
@@ -457,6 +539,7 @@ def run(quick: bool = False):
 
     _sampler_plane_speedup(iters=3 if quick else 5)
     _fused_step_speedup(iters=8 if quick else 12, quick=quick)
+    _big_ids_speedup(iters=8 if quick else 12, quick=quick)
     _fused_runtime_digest(quick=quick)
 
     if not quick:
@@ -497,6 +580,10 @@ def validate_rows(rows: list[dict]) -> list[str]:
             problems.append(f"{name}: empty derived column")
         if "streams_match=False" in (row.get("derived") or ""):
             problems.append(f"{name}: fused path diverged from staged path")
+        if "slowdown_ok=False" in (row.get("derived") or ""):
+            problems.append(
+                f"{name}: wide-id launch slower than 1.3x the narrow one"
+            )
         us = row.get("us_per_call")
         if us is None or not math.isfinite(float(us)):
             problems.append(f"{name}: us_per_call not finite ({us})")
@@ -507,6 +594,7 @@ def main(argv: list[str]) -> int:
     quick = "--quick" in argv
     store = "--store" in argv
     device_e2e = "--device-e2e" in argv
+    big_ids = "--big-ids" in argv
     gate = "--gate" in argv
     json_path = None
     for arg in argv:
@@ -516,6 +604,8 @@ def main(argv: list[str]) -> int:
         run_store(quick=quick)
     elif device_e2e:
         run_device_e2e(quick=quick)
+    elif big_ids:
+        run_big_ids(quick=quick)
     else:
         run(quick=quick)
     if json_path:

@@ -63,9 +63,13 @@ class PersistentBuffer:
         Scoring/eviction policy (name or :class:`repro.core.scoring.
         ScoringPolicy`); default is the paper's ``rudder`` policy.
     node_weights:
-        Optional per-*node* access weights indexed by node id (the
-        ``degree`` policy's input); resolved to per-slot weights at
+        Optional per-*node* access weights indexed by *local* node index
+        (the ``degree`` policy's input); resolved to per-slot weights at
         insertion time.
+    id_base:
+        The graph's global-id offset: buffer ids are global
+        (``id_base`` + local index), and the weight lookup rebases them
+        back to local before indexing ``node_weights``.
     """
 
     def __init__(
@@ -74,6 +78,7 @@ class PersistentBuffer:
         feature_dim: int = 0,
         policy: str | scoring.ScoringPolicy = "rudder",
         node_weights: np.ndarray | None = None,
+        id_base: int = 0,
     ):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
@@ -81,6 +86,7 @@ class PersistentBuffer:
         self.feature_dim = int(feature_dim)
         self.policy = scoring.make_policy(policy)
         self._node_weights = node_weights
+        self.id_base = int(id_base)
         self._slot_of: dict[int, int] = {}
         self._id_of = np.full(self.capacity, -1, dtype=np.int64)
         self._scores = np.zeros(self.capacity, dtype=np.float32)
@@ -231,7 +237,7 @@ class PersistentBuffer:
         self._id_of[slots] = ids
         self._scores[slots] = np.float32(self.policy.initial_score)
         if self._node_weights is not None:
-            self._weights[slots] = self._node_weights[ids]
+            self._weights[slots] = self._node_weights[ids - self.id_base]
         self._valid[slots] = True
         self._accessed_this_round[slots] = False
         if self.features is not None and features is not None:

@@ -442,6 +442,7 @@ class DistributedTrainer:
                 feature_dim=payload_dim,
                 policy=self.policy,
                 node_weights=node_weights,
+                id_base=self.graph.id_base,
             )
             for p in range(P)
         ]
@@ -451,6 +452,7 @@ class DistributedTrainer:
             policy=self.policy,
             node_weights=node_weights,
             feature_dim=payload_dim,
+            id_base=self.graph.id_base,
         )
 
         # Controllers (one per trainer, as in the paper: each trainer has
@@ -477,9 +479,12 @@ class DistributedTrainer:
         # nodes before training (§5.1 "Comparison with MassiveGNN").
         if variant == "massivegnn" and warm_start:
             deg = self.graph.degree()
+            base = np.int64(self.graph.id_base)
             for p in range(P):
                 halo = self.halos[p]
                 top = halo[np.argsort(-deg[halo])][: self.buffers[p].capacity]
+                # Buffer/engine/store ids live in the global id space.
+                top = top + base
                 n = self.buffers[p].insert(top)
                 self.engine.insert(p, top)
                 if self.feature_store is not None and n:
@@ -527,11 +532,13 @@ class DistributedTrainer:
         if self.feature_store is not None:
             # The training step consumes actual store rows (bit-identical
             # to graph.features rows — the store only re-homes them).
+            # Minibatch ids are local; the store is keyed by global id.
             store = self.feature_store
-            x_seed = store.gather(minibatch.seeds)
-            x_n1 = store.gather(minibatch.layer_nbrs[0])
+            base = np.int64(self.graph.id_base)
+            x_seed = store.gather(minibatch.seeds + base)
+            x_n1 = store.gather(minibatch.layer_nbrs[0] + base)
             b, f1 = minibatch.layer_nbrs[0].shape
-            x_n2 = store.gather(minibatch.layer_nbrs[1]).reshape(
+            x_n2 = store.gather(minibatch.layer_nbrs[1] + base).reshape(
                 b, f1, -1, store.feature_dim
             )
             return x_seed, x_n1, x_n2
@@ -683,7 +690,8 @@ class DistributedTrainer:
                     batch = self._seed_batch(p, epoch, mb)
                     minibatch = self.sampler.sample(batch, self.rng)
                     remote = unique_remote(
-                        minibatch, self.parts.part_of, p
+                        minibatch, self.parts.part_of, p,
+                        id_base=self.graph.id_base,
                     )
                     n_remote = len(remote)
 
@@ -789,6 +797,7 @@ class DistributedTrainer:
                         self.parts.part_of,
                         P,
                         time_engine.needs_pairs,
+                        id_base=self.graph.id_base,
                     ),
                     np.asarray(stall_ticks, dtype=np.float64),
                 )

@@ -52,7 +52,17 @@ def validate_csr(indptr: np.ndarray, indices: np.ndarray) -> None:
 
 @dataclass
 class Graph:
-    """Undirected graph in CSR form, with node features and labels."""
+    """Undirected graph in CSR form, with node features and labels.
+
+    ``id_base`` offsets the graph's *global* node-id space: local CSR
+    index ``i`` names global node ``id_base + i`` (the partition-major
+    id layout DistDGL-scale deployments use, where a shard's ids start
+    far above zero). The CSR, features, labels and train set stay
+    local-indexed; only the prefetch plane (sampled unique/remote sets,
+    the raw device frontier) speaks global ids, so a nonzero base — in
+    particular one pushing ids past 2^31 — exercises the wide-id device
+    path without materializing billions of rows.
+    """
 
     name: str
     indptr: np.ndarray          # (N+1,) int64
@@ -62,9 +72,12 @@ class Graph:
     train_nodes: np.ndarray     # (T,) int64
     num_classes: int
     communities: np.ndarray | None = None  # (N,) int32 ground-truth blocks
+    id_base: int = 0            # global id of local node 0
 
     def __post_init__(self):
         validate_csr(self.indptr, self.indices)
+        if self.id_base < 0:
+            raise ValueError(f"id_base must be >= 0, got {self.id_base}")
 
     @property
     def num_nodes(self) -> int:
@@ -79,6 +92,16 @@ class Graph:
 
     def neighbors(self, u: int) -> np.ndarray:
         return self.indices[self.indptr[u] : self.indptr[u + 1]]
+
+    def rebase(self, id_base: int) -> "Graph":
+        """Copy of this graph with its global id space moved to
+        ``id_base`` — same topology, features and draws, shifted ids.
+        The vehicle for big-id parity tests and the ``--big-ids`` bench
+        leg: a rebase at ``2**31`` makes every global id wide without
+        changing any local structure."""
+        from dataclasses import replace
+
+        return replace(self, id_base=int(id_base))
 
 
 @dataclass(frozen=True)

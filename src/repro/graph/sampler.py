@@ -22,10 +22,12 @@ from .generate import Graph
 
 @dataclass
 class MiniBatch:
-    seeds: np.ndarray            # (B,)
-    layer_nbrs: list[np.ndarray]  # [(B, f1), (B*f1, f2), ...]
-    #: All distinct node ids touched; None on the device-native raw path
-    #: (``SamplerPlane.sample_all_raw``), where dedup happens in-launch.
+    seeds: np.ndarray            # (B,) local CSR indices
+    layer_nbrs: list[np.ndarray]  # [(B, f1), (B*f1, f2), ...] local
+    #: All distinct node ids touched, as *global* ids
+    #: (``graph.id_base`` + local index); None on the device-native raw
+    #: path (``SamplerPlane.sample_all_raw``), where dedup happens
+    #: in-launch.
     unique_nodes: np.ndarray | None
     labels: np.ndarray           # (B,)
 
@@ -80,6 +82,8 @@ class NeighborSampler:
             frontier = nbrs.reshape(-1)
             touched.append(frontier)
         unique_nodes = np.unique(np.concatenate(touched))
+        if self.graph.id_base:
+            unique_nodes = unique_nodes + np.int64(self.graph.id_base)
         return MiniBatch(
             seeds=seeds,
             layer_nbrs=layer_nbrs,
@@ -88,10 +92,15 @@ class NeighborSampler:
         )
 
 
-def unique_remote(minibatch: MiniBatch, part_of: np.ndarray, part: int) -> np.ndarray:
-    """Unique sampled nodes homed on other partitions (the fetch set)."""
+def unique_remote(
+    minibatch: MiniBatch, part_of: np.ndarray, part: int, id_base: int = 0
+) -> np.ndarray:
+    """Unique sampled nodes homed on other partitions (the fetch set).
+
+    ``unique_nodes`` carries global ids; ``part_of`` is local-indexed,
+    so pass the graph's ``id_base`` when it is nonzero."""
     nodes = minibatch.unique_nodes
-    return nodes[part_of[nodes] != part]
+    return nodes[part_of[nodes - id_base] != part]
 
 
 # Re-exported for its long-standing home: the implementation moved to
@@ -226,7 +235,12 @@ class SamplerPlane:
             raise ValueError("sample_all_raw requires equal-size seed blocks")
         g = self.graph
         seed_mat, layers, touched = self._expand_blocks(seeds, rng)
-        if g.num_nodes <= np.iinfo(np.int32).max:
+        if g.id_base:
+            # Global ids: int64 block for the wide-id device path (the
+            # narrow int32 megakernel indexes part_of by raw id, so it
+            # only ever serves id_base == 0).
+            touched = touched + np.int64(g.id_base)
+        elif g.num_nodes <= np.iinfo(np.int32).max:
             touched = touched.astype(np.int32)
         minibatches = [
             MiniBatch(
@@ -279,13 +293,19 @@ class SamplerPlane:
         counts = first.sum(axis=1)
         bounds = np.cumsum(counts)[:-1]
         flat_uniq = sorted_keys.ravel()[first.ravel()].astype(np.int64)
-        uniq = np.split(flat_uniq, bounds)
+        # ``sorted_keys`` are local CSR indices (part_of lookups below
+        # stay local); the emitted unique/remote sets are global ids.
+        base = np.int64(g.id_base)
+        uniq = np.split(flat_uniq + base if g.id_base else flat_uniq, bounds)
         remote = None
         if part_of is not None:
             if remote_mask is not None:  # kernel path: masks came fused
                 rcounts = remote_mask.sum(axis=1)
+                rem_ids = sorted_keys.ravel()[remote_mask.ravel()].astype(
+                    np.int64
+                )
                 remote = np.split(
-                    sorted_keys.ravel()[remote_mask.ravel()].astype(np.int64),
+                    rem_ids + base if g.id_base else rem_ids,
                     np.cumsum(rcounts)[:-1],
                 )
             else:
@@ -319,6 +339,7 @@ class SamplerPlane:
         remote = None
         if part_of is not None:
             remote = [
-                unique_remote(mb, part_of, p) for p, mb in enumerate(minibatches)
+                unique_remote(mb, part_of, p, id_base=self.graph.id_base)
+                for p, mb in enumerate(minibatches)
             ]
         return minibatches, remote

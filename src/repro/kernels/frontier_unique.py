@@ -105,3 +105,90 @@ def frontier_unique_batch(
     ucount = jnp.sum(ucount.reshape(P, tiles_per_pe), axis=1)
     rcount = jnp.sum(rcount.reshape(P, tiles_per_pe), axis=1)
     return first, rmask, ucount, rcount
+
+
+def _frontier_kernel_wide(
+    keys_lo_ref,
+    keys_hi_ref,
+    prev_lo_ref,
+    prev_hi_ref,
+    remote_ref,
+    first_ref,
+    rmask_ref,
+    ucount_ref,
+    rcount_ref,
+):
+    kl = keys_lo_ref[...]
+    kh = keys_hi_ref[...]
+    first = jnp.logical_or(
+        kl != prev_lo_ref[...], kh != prev_hi_ref[...]
+    ).astype(jnp.int32)
+    rmask = first * remote_ref[...]
+    first_ref[...] = first
+    rmask_ref[...] = rmask
+    ucount_ref[0, 0] = jnp.sum(first)
+    rcount_ref[0, 0] = jnp.sum(rmask)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_unique_batch_wide(
+    sorted_lo: jax.Array,
+    sorted_hi: jax.Array,
+    is_remote: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Wide-id twin of :func:`frontier_unique_batch`: rows are sorted
+    ``(hi, lo)`` int32 word-pair planes (numeric 64-bit order under the
+    lexicographic two-key sort — see ``kernels/ref.py`` ``WIDE_SHIFT``),
+    so first-occurrence is a pair inequality against the row-shifted
+    neighbours. Same outputs and tiling as the narrow kernel; both
+    planes pad with :data:`_PAD_KEY` so padded lanes are never first.
+    """
+    P, M = sorted_lo.shape
+    if M == 0:
+        empty = jnp.zeros((P, 0), dtype=bool)
+        zeros = jnp.zeros((P,), dtype=jnp.int32)
+        return empty, empty, zeros, zeros
+    kl = sorted_lo.astype(jnp.int32)
+    kh = sorted_hi.astype(jnp.int32)
+    neg = jnp.full((P, 1), -1, dtype=jnp.int32)
+    prev_lo = jnp.concatenate([neg, kl[:, :-1]], axis=1)
+    prev_hi = jnp.concatenate([neg, kh[:, :-1]], axis=1)
+    row = TILE_ROWS * LANES
+    pad = (row - M % row) % row
+
+    def _pad(x, constant):
+        return jnp.pad(x, ((0, 0), (0, pad)), constant_values=constant)
+
+    kl2, kh2 = _pad(kl, _PAD_KEY), _pad(kh, _PAD_KEY)
+    pl2, ph2 = _pad(prev_lo, _PAD_KEY), _pad(prev_hi, _PAD_KEY)
+    r2 = _pad(is_remote.astype(jnp.int32), 0)
+    tiles_per_pe = kl2.shape[1] // row
+    tiles = P * tiles_per_pe
+    kl2 = kl2.reshape(tiles * TILE_ROWS, LANES)
+    kh2 = kh2.reshape(tiles * TILE_ROWS, LANES)
+    pl2 = pl2.reshape(tiles * TILE_ROWS, LANES)
+    ph2 = ph2.reshape(tiles * TILE_ROWS, LANES)
+    r2 = r2.reshape(tiles * TILE_ROWS, LANES)
+
+    block = pl.BlockSpec((TILE_ROWS, LANES), lambda i: (i, 0))
+    count = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    first, rmask, ucount, rcount = pl.pallas_call(
+        _frontier_kernel_wide,
+        grid=(tiles,),
+        in_specs=[block, block, block, block, block],
+        out_specs=[block, block, count, count],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * TILE_ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((tiles * TILE_ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.int32),
+            jax.ShapeDtypeStruct((tiles, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(kl2, kh2, pl2, ph2, r2)
+    first = first.reshape(P, -1)[:, :M].astype(bool)
+    rmask = rmask.reshape(P, -1)[:, :M].astype(bool)
+    ucount = jnp.sum(ucount.reshape(P, tiles_per_pe), axis=1)
+    rcount = jnp.sum(rcount.reshape(P, tiles_per_pe), axis=1)
+    return first, rmask, ucount, rcount

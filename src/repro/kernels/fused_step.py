@@ -62,6 +62,9 @@ def _fused_body(
     active_score,
     do_replace,
     active_probe,
+    ids_hi=None,
+    q_hi=None,
+    cand_hi=None,
     *,
     increment,
     decay,
@@ -70,7 +73,14 @@ def _fused_body(
     mode,
     initial_score,
 ):
-    """Single-PE fused round; shapes (1, C) / (1, M) / (1, K)."""
+    """Single-PE fused round; shapes (1, C) / (1, M) / (1, K).
+
+    With the optional ``*_hi`` planes present (the two-word id
+    encoding — ``kernels/ref.py`` ``WIDE_SHIFT``), every id compare is
+    a pair equality over both int32 planes, candidate/query validity is
+    ``hi >= 0``, and the returned ``ids2_hi`` carries the new hi plane
+    (None on the narrow path)."""
+    wide = ids_hi is not None
     C = ids.shape[1]
     K = cand.shape[1]
     M = q.shape[1]
@@ -91,21 +101,32 @@ def _fused_body(
 
     # -- 2. replacement round (replace_round) -------------------------- #
     cand_t = cand.reshape(K, 1)
+    eq_m = cand_t == ids.reshape(1, C)
+    if wide:
+        eq_m = jnp.logical_and(
+            eq_m, cand_hi.reshape(K, 1) == ids_hi.reshape(1, C)
+        )
     member = jnp.any(
-        jnp.logical_and(cand_t == ids.reshape(1, C), v.reshape(1, C)), axis=1
+        jnp.logical_and(eq_m, v.reshape(1, C)), axis=1
     ).reshape(1, K)
     # First-occurrence dedup (`_unique_preserve_order` in-kernel): a
     # candidate equal to an earlier position is never fresh.
+    eq_d = cand_t == cand.reshape(1, K)
+    if wide:
+        eq_d = jnp.logical_and(
+            eq_d, cand_hi.reshape(K, 1) == cand_hi.reshape(1, K)
+        )
     dup = jnp.any(
         jnp.logical_and(
-            cand_t == cand.reshape(1, K),
+            eq_d,
             jax.lax.broadcasted_iota(jnp.int32, (K, K), 1)
             < jax.lax.broadcasted_iota(jnp.int32, (K, K), 0),
         ),
         axis=1,
     ).reshape(1, K)
+    cand_ok = (cand_hi >= 0) if wide else (cand >= 0)
     fresh = jnp.logical_and(
-        jnp.logical_and(cand >= 0, jnp.logical_not(member)),
+        jnp.logical_and(cand_ok, jnp.logical_not(member)),
         jnp.logical_and(jnp.logical_not(dup), do_replace),
     )
     free = jnp.logical_and(jnp.logical_not(v), incap)
@@ -133,6 +154,13 @@ def _fused_body(
     )
     new_id = jnp.sum(jnp.where(match, cand_t, 0), axis=0).reshape(1, C)
     ids2 = jnp.where(filled, new_id, ids)
+    if wide:
+        new_id_hi = jnp.sum(
+            jnp.where(match, cand_hi.reshape(K, 1), 0), axis=0
+        ).reshape(1, C)
+        ids2_hi = jnp.where(filled, new_id_hi, ids_hi)
+    else:
+        ids2_hi = None
     s2 = jnp.where(filled, jnp.float32(initial_score), s1)
     v2 = jnp.logical_or(v, filled)
     if w is not None:
@@ -146,9 +174,15 @@ def _fused_body(
 
     # -- 3. membership probe of the next round (lookup) ---------------- #
     q_t = q.reshape(M, 1)
+    eq_q = q_t == ids2.reshape(1, C)
+    if wide:
+        eq_q = jnp.logical_and(
+            eq_q, q_hi.reshape(M, 1) == ids2_hi.reshape(1, C)
+        )
+    q_ok = (q_hi.reshape(M, 1) >= 0) if wide else (q_t >= 0)
     qhit = jnp.logical_and(
-        jnp.logical_and(q_t == ids2.reshape(1, C), v2.reshape(1, C)),
-        jnp.logical_and(q_t >= 0, active_probe),
+        jnp.logical_and(eq_q, v2.reshape(1, C)),
+        jnp.logical_and(q_ok, active_probe),
     )
     hit = jnp.any(qhit, axis=1).reshape(1, M)
     slot_iota_mc = jax.lax.broadcasted_iota(jnp.int32, (M, C), 1)
@@ -156,17 +190,56 @@ def _fused_body(
         hit, jnp.sum(jnp.where(qhit, slot_iota_mc, 0), axis=1).reshape(1, M), -1
     )
     acc3 = jnp.logical_or(acc2, jnp.any(qhit, axis=0).reshape(1, C))
-    return ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos
+    return ids2, ids2_hi, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos
 
 
 def _make_fused_kernel(
-    increment, decay, threshold, score_cap, mode, initial_score, weighted
+    increment,
+    decay,
+    threshold,
+    score_cap,
+    mode,
+    initial_score,
+    weighted,
+    wide=False,
 ):
-    def _run(ids, s, v, a, incap, w, q, cand, cand_w, gates):
-        active_score = gates[0, 0] != 0
-        do_replace = gates[0, 1] != 0
-        active_probe = gates[0, 2] != 0
-        return _fused_body(
+    """Kernel factory for the fused score→replace→probe launch.
+
+    The operand list is computed from the (weighted, wide) configuration
+    rather than hand-written per variant — inputs arrive as
+    ``[ids, (ids_hi), s, v, a, incap, (w), q, (q_hi), cand, (cand_hi),
+    (cand_w), gates]`` and outputs as ``[ids2, (ids2_hi), s2, v2, acc3,
+    (w2), hit, hit_slot, placed, slot_pos]`` (parenthesised planes only
+    when the matching flag is set)."""
+    n_in = 8 + (2 if weighted else 0) + (3 if wide else 0)
+
+    def kernel(*refs):
+        it = iter(refs[:n_in])
+        ids = next(it)[...]
+        ids_hi = next(it)[...] if wide else None
+        s = next(it)[...]
+        v = next(it)[...]
+        a = next(it)[...]
+        incap = next(it)[...]
+        w = next(it)[...] if weighted else None
+        q = next(it)[...]
+        q_hi = next(it)[...] if wide else None
+        cand = next(it)[...]
+        cand_hi = next(it)[...] if wide else None
+        cand_w = next(it)[...] if weighted else None
+        gates = next(it)[...]
+        (
+            ids2,
+            ids2_hi,
+            s2,
+            v2,
+            acc3,
+            w2,
+            hit,
+            hit_slot,
+            placed,
+            slot_pos,
+        ) = _fused_body(
             ids,
             s,
             v != 0,
@@ -176,9 +249,12 @@ def _make_fused_kernel(
             q,
             cand,
             cand_w,
-            active_score,
-            do_replace,
-            active_probe,
+            gates[0, 0] != 0,
+            gates[0, 1] != 0,
+            gates[0, 2] != 0,
+            ids_hi=ids_hi,
+            q_hi=q_hi,
+            cand_hi=cand_hi,
             increment=increment,
             decay=decay,
             threshold=threshold,
@@ -186,92 +262,20 @@ def _make_fused_kernel(
             mode=mode,
             initial_score=initial_score,
         )
-
-    if weighted:
-
-        def kernel(
-            ids_ref,
-            scores_ref,
-            valid_ref,
-            accessed_ref,
-            incap_ref,
-            weights_ref,
-            queries_ref,
-            cand_ref,
-            candw_ref,
-            gates_ref,
-            ids_out,
-            scores_out,
-            valid_out,
-            acc_out,
-            w_out,
-            hit_out,
-            hitslot_out,
-            placed_out,
-            slotpos_out,
-        ):
-            ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = _run(
-                ids_ref[...],
-                scores_ref[...],
-                valid_ref[...],
-                accessed_ref[...],
-                incap_ref[...],
-                weights_ref[...],
-                queries_ref[...],
-                cand_ref[...],
-                candw_ref[...],
-                gates_ref[...],
-            )
-            ids_out[...] = ids2
-            scores_out[...] = s2
-            valid_out[...] = v2.astype(jnp.int32)
-            acc_out[...] = acc3.astype(jnp.int32)
-            w_out[...] = w2
-            hit_out[...] = hit.astype(jnp.int32)
-            hitslot_out[...] = hit_slot
-            placed_out[...] = placed.astype(jnp.int32)
-            slotpos_out[...] = slot_pos
-
-    else:
-
-        def kernel(
-            ids_ref,
-            scores_ref,
-            valid_ref,
-            accessed_ref,
-            incap_ref,
-            queries_ref,
-            cand_ref,
-            gates_ref,
-            ids_out,
-            scores_out,
-            valid_out,
-            acc_out,
-            hit_out,
-            hitslot_out,
-            placed_out,
-            slotpos_out,
-        ):
-            ids2, s2, v2, acc3, _, hit, hit_slot, placed, slot_pos = _run(
-                ids_ref[...],
-                scores_ref[...],
-                valid_ref[...],
-                accessed_ref[...],
-                incap_ref[...],
-                None,
-                queries_ref[...],
-                cand_ref[...],
-                None,
-                gates_ref[...],
-            )
-            ids_out[...] = ids2
-            scores_out[...] = s2
-            valid_out[...] = v2.astype(jnp.int32)
-            acc_out[...] = acc3.astype(jnp.int32)
-            hit_out[...] = hit.astype(jnp.int32)
-            hitslot_out[...] = hit_slot
-            placed_out[...] = placed.astype(jnp.int32)
-            slotpos_out[...] = slot_pos
+        vals = [ids2]
+        if wide:
+            vals.append(ids2_hi)
+        vals += [s2, v2.astype(jnp.int32), acc3.astype(jnp.int32)]
+        if weighted:
+            vals.append(w2)
+        vals += [
+            hit.astype(jnp.int32),
+            hit_slot,
+            placed.astype(jnp.int32),
+            slot_pos,
+        ]
+        for out_ref, val in zip(refs[n_in:], vals):
+            out_ref[...] = val
 
     return kernel
 
@@ -426,23 +430,218 @@ def fused_step_pallas(
     )
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "increment",
+        "decay",
+        "threshold",
+        "score_cap",
+        "mode",
+        "initial_score",
+        "interpret",
+    ),
+)
+def fused_step_wide_pallas(
+    ids,
+    ids_hi,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    queries,
+    queries_hi,
+    cand,
+    cand_hi,
+    cand_weights,
+    active_score,
+    do_replace,
+    active_probe,
+    *,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+    interpret: bool = True,
+):
+    """Pallas twin of :func:`repro.kernels.ref.fused_step_wide` — the
+    two-word ``(hi, lo)`` id encoding in the same single launch.
+
+    Both planes lane-pad with -1 (the empty-pair sentinel), so padded
+    slots/queries/candidates stay invalid under the pair semantics
+    (validity is ``hi >= 0``). Returns the 12-tuple of the oracle with
+    ``ids2_hi`` after ``ids2``. Dispatch via
+    :func:`repro.kernels.ops.fused_step_wide_batch`.
+    """
+    P, C = ids.shape
+    M = queries.shape[1]
+    K = cand.shape[1]
+    weighted = weights is not None
+
+    ids_p = _pad_lanes(ids.astype(jnp.int32), LANES, -1)
+    idshi_p = _pad_lanes(ids_hi.astype(jnp.int32), LANES, -1)
+    s_p = _pad_lanes(scores.astype(jnp.float32), LANES, 1.0)
+    v_p = _pad_lanes(valid.astype(jnp.int32), LANES, 0)
+    a_p = _pad_lanes(accessed.astype(jnp.int32), LANES, 0)
+    cap_p = _pad_lanes(in_capacity.astype(jnp.int32), LANES, 0)
+    q_p = _pad_lanes(queries.astype(jnp.int32), LANES, -1)
+    qhi_p = _pad_lanes(queries_hi.astype(jnp.int32), LANES, -1)
+    c_p = _pad_lanes(cand.astype(jnp.int32), LANES, -1)
+    chi_p = _pad_lanes(cand_hi.astype(jnp.int32), LANES, -1)
+    gates = jnp.stack(
+        [
+            active_score.astype(jnp.int32),
+            do_replace.astype(jnp.int32),
+            active_probe.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    gates = _pad_lanes(gates, LANES, 0)
+    Cp, Mp, Kp = ids_p.shape[1], q_p.shape[1], c_p.shape[1]
+
+    def spec(width):
+        return pl.BlockSpec((1, width), lambda i: (i, 0))
+
+    operands = [ids_p, idshi_p, s_p, v_p, a_p, cap_p]
+    if weighted:
+        operands.append(_pad_lanes(weights.astype(jnp.float32), LANES, 1.0))
+    operands += [q_p, qhi_p, c_p, chi_p]
+    if weighted:
+        operands.append(
+            _pad_lanes(cand_weights.astype(jnp.float32), LANES, 0.0)
+        )
+    operands.append(gates)
+
+    out_specs = [spec(Cp)] * (6 if weighted else 5) + [
+        spec(Mp),
+        spec(Mp),
+        spec(Kp),
+        spec(Cp),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.float32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+    if weighted:
+        out_shape.append(jax.ShapeDtypeStruct((P, Cp), jnp.float32))
+    out_shape += [
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Kp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+
+    outs = pl.pallas_call(
+        _make_fused_kernel(
+            float(increment),
+            float(decay),
+            float(threshold),
+            float(score_cap),
+            mode,
+            float(initial_score),
+            weighted,
+            wide=True,
+        ),
+        grid=(P,),
+        in_specs=[spec(x.shape[1]) for x in operands],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+    if weighted:
+        ids2, ids2_hi2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = outs
+        w_out = w2[:, :C]
+    else:
+        ids2, ids2_hi2, s2, v2, acc3, hit, hit_slot, placed, slot_pos = outs
+        w_out = None
+    valid2 = v2[:, :C] != 0
+    placed_b = placed[:, :K] != 0
+    return (
+        ids2[:, :C],
+        ids2_hi2[:, :C],
+        s2[:, :C],
+        valid2,
+        acc3[:, :C] != 0,
+        w_out,
+        hit[:, :M] != 0,
+        hit_slot[:, :M],
+        placed_b,
+        jnp.minimum(slot_pos[:, :C], jnp.int32(C + K + 1)),
+        jnp.sum(placed_b.astype(jnp.int32), axis=1),
+        jnp.sum(valid2.astype(jnp.int32), axis=1),
+    )
+
+
 def _make_frontier_kernel(
-    increment, decay, threshold, score_cap, mode, initial_score, weighted
+    increment,
+    decay,
+    threshold,
+    score_cap,
+    mode,
+    initial_score,
+    weighted,
+    wide=False,
 ):
     """Kernel factory for the single-launch frontier step: the fused
     score→replace→probe body of :func:`_make_fused_kernel` with the
     frontier dedup folded in front (first-occurrence + remote masks
     from the row-sorted keys) and the probe folded into one per-position
-    ``code`` output (0 local/dup, 1 remote miss, 2+slot remote hit)."""
+    ``code`` output (0 local/dup, 1 remote miss, 2+slot remote hit).
 
-    def _run(ids, s, v, a, incap, w, sk, prev, rem, cand, cand_w, gates):
-        active_score = gates[0, 0] != 0
-        do_replace = gates[0, 1] != 0
-        active_probe = gates[0, 2] != 0
-        first = jnp.logical_and(sk != prev, sk >= 0)
+    Operand layout is computed from (weighted, wide): inputs ``[ids,
+    (ids_hi), s, v, a, incap, (w), sk, (sk_hi), prev, (prev_hi), rem,
+    cand, (cand_hi), (cand_w), gates]``, outputs ``[ids2, (ids2_hi),
+    s2, v2, acc3, (w2), code, placed, slot_pos]``. In wide mode the
+    first-occurrence test is a pair inequality over both word planes
+    and frontier validity is ``hi >= 0``."""
+    n_in = 10 + (2 if weighted else 0) + (4 if wide else 0)
+
+    def kernel(*refs):
+        it = iter(refs[:n_in])
+        ids = next(it)[...]
+        ids_hi = next(it)[...] if wide else None
+        s = next(it)[...]
+        v = next(it)[...]
+        a = next(it)[...]
+        incap = next(it)[...]
+        w = next(it)[...] if weighted else None
+        sk = next(it)[...]
+        sk_hi = next(it)[...] if wide else None
+        prev = next(it)[...]
+        prev_hi = next(it)[...] if wide else None
+        rem = next(it)[...]
+        cand = next(it)[...]
+        cand_hi = next(it)[...] if wide else None
+        cand_w = next(it)[...] if weighted else None
+        gates = next(it)[...]
+        if wide:
+            first = jnp.logical_and(
+                jnp.logical_or(sk != prev, sk_hi != prev_hi), sk_hi >= 0
+            )
+        else:
+            first = jnp.logical_and(sk != prev, sk >= 0)
         remote = jnp.logical_and(first, rem != 0)
         q = jnp.where(remote, sk, jnp.int32(-1))
-        ids2, s2, v2, acc3, w2, hit, hit_slot, placed, slot_pos = _fused_body(
+        q_hi = jnp.where(remote, sk_hi, jnp.int32(-1)) if wide else None
+        (
+            ids2,
+            ids2_hi,
+            s2,
+            v2,
+            acc3,
+            w2,
+            hit,
+            hit_slot,
+            placed,
+            slot_pos,
+        ) = _fused_body(
             ids,
             s,
             v != 0,
@@ -452,9 +651,12 @@ def _make_frontier_kernel(
             q,
             cand,
             cand_w,
-            active_score,
-            do_replace,
-            active_probe,
+            gates[0, 0] != 0,
+            gates[0, 1] != 0,
+            gates[0, 2] != 0,
+            ids_hi=ids_hi,
+            q_hi=q_hi,
+            cand_hi=cand_hi,
             increment=increment,
             decay=decay,
             threshold=threshold,
@@ -467,97 +669,15 @@ def _make_frontier_kernel(
             jnp.where(hit, hit_slot + 2, jnp.int32(1)),
             jnp.int32(0),
         )
-        return ids2, s2, v2, acc3, w2, code, placed, slot_pos
-
-    if weighted:
-
-        def kernel(
-            ids_ref,
-            scores_ref,
-            valid_ref,
-            accessed_ref,
-            incap_ref,
-            weights_ref,
-            sk_ref,
-            prev_ref,
-            rem_ref,
-            cand_ref,
-            candw_ref,
-            gates_ref,
-            ids_out,
-            scores_out,
-            valid_out,
-            acc_out,
-            w_out,
-            code_out,
-            placed_out,
-            slotpos_out,
-        ):
-            ids2, s2, v2, acc3, w2, code, placed, slot_pos = _run(
-                ids_ref[...],
-                scores_ref[...],
-                valid_ref[...],
-                accessed_ref[...],
-                incap_ref[...],
-                weights_ref[...],
-                sk_ref[...],
-                prev_ref[...],
-                rem_ref[...],
-                cand_ref[...],
-                candw_ref[...],
-                gates_ref[...],
-            )
-            ids_out[...] = ids2
-            scores_out[...] = s2
-            valid_out[...] = v2.astype(jnp.int32)
-            acc_out[...] = acc3.astype(jnp.int32)
-            w_out[...] = w2
-            code_out[...] = code
-            placed_out[...] = placed.astype(jnp.int32)
-            slotpos_out[...] = slot_pos
-
-    else:
-
-        def kernel(
-            ids_ref,
-            scores_ref,
-            valid_ref,
-            accessed_ref,
-            incap_ref,
-            sk_ref,
-            prev_ref,
-            rem_ref,
-            cand_ref,
-            gates_ref,
-            ids_out,
-            scores_out,
-            valid_out,
-            acc_out,
-            code_out,
-            placed_out,
-            slotpos_out,
-        ):
-            ids2, s2, v2, acc3, _, code, placed, slot_pos = _run(
-                ids_ref[...],
-                scores_ref[...],
-                valid_ref[...],
-                accessed_ref[...],
-                incap_ref[...],
-                None,
-                sk_ref[...],
-                prev_ref[...],
-                rem_ref[...],
-                cand_ref[...],
-                None,
-                gates_ref[...],
-            )
-            ids_out[...] = ids2
-            scores_out[...] = s2
-            valid_out[...] = v2.astype(jnp.int32)
-            acc_out[...] = acc3.astype(jnp.int32)
-            code_out[...] = code
-            placed_out[...] = placed.astype(jnp.int32)
-            slotpos_out[...] = slot_pos
+        vals = [ids2]
+        if wide:
+            vals.append(ids2_hi)
+        vals += [s2, v2.astype(jnp.int32), acc3.astype(jnp.int32)]
+        if weighted:
+            vals.append(w2)
+        vals += [code, placed.astype(jnp.int32), slot_pos]
+        for out_ref, val in zip(refs[n_in:], vals):
+            out_ref[...] = val
 
     return kernel
 
@@ -731,6 +851,204 @@ def fused_frontier_step_pallas(
         w_out,
         payload2,
         cand_next,
+        packed,
+        counters,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "cand_cap",
+        "id_base",
+        "increment",
+        "decay",
+        "threshold",
+        "score_cap",
+        "mode",
+        "initial_score",
+        "interpret",
+    ),
+)
+def fused_frontier_step_wide_pallas(
+    ids,
+    ids_hi,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    touched_aug,
+    part_of,
+    cand,
+    cand_hi,
+    node_weights,
+    payload,
+    table,
+    loc,
+    *,
+    cand_cap: int,
+    id_base: int,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+    interpret: bool = True,
+):
+    """Pallas twin of :func:`repro.kernels.ref.fused_frontier_step_wide`
+    — the single-launch device step over ``(hi, lo)`` word-pair ids.
+
+    ``touched_aug`` is the raw ``(P, 2*Mt + 1)`` ``[lo | hi | gates]``
+    ingest block (still one host→device transfer); the prologue's
+    two-key sort, the wide ``part_of`` gather, and the wide epilogue
+    (:func:`repro.kernels.ref.frontier_pack_wide`) run as jnp stages
+    inside this jit while the per-PE core runs as one ``grid=(P,)``
+    Pallas launch with both word planes lane-padded to -1. Outputs are
+    bit-identical to the wide oracle; dispatch via
+    :func:`repro.kernels.ops.fused_frontier_step_wide_batch`.
+    """
+    P, C = ids.shape
+    (
+        active_score,
+        do_replace,
+        active_probe,
+        sk_lo,
+        sk_hi,
+        prev_lo,
+        prev_hi,
+        rem,
+        _remote,
+    ) = _ref.frontier_prologue_wide(touched_aug, part_of, id_base=id_base)
+    Mt = sk_lo.shape[1]
+    K = cand.shape[1]
+    weighted = weights is not None
+    cw = (
+        _ref.cand_weights_of_wide(cand, cand_hi, node_weights, id_base=id_base)
+        if weighted
+        else None
+    )
+
+    ids_p = _pad_lanes(ids.astype(jnp.int32), LANES, -1)
+    idshi_p = _pad_lanes(ids_hi.astype(jnp.int32), LANES, -1)
+    s_p = _pad_lanes(scores.astype(jnp.float32), LANES, 1.0)
+    v_p = _pad_lanes(valid.astype(jnp.int32), LANES, 0)
+    a_p = _pad_lanes(accessed.astype(jnp.int32), LANES, 0)
+    cap_p = _pad_lanes(in_capacity.astype(jnp.int32), LANES, 0)
+    sk_p = _pad_lanes(sk_lo, LANES, -1)
+    skhi_p = _pad_lanes(sk_hi, LANES, -1)
+    prev_p = _pad_lanes(prev_lo, LANES, -1)
+    prevhi_p = _pad_lanes(prev_hi, LANES, -1)
+    rem_p = _pad_lanes(rem.astype(jnp.int32), LANES, 0)
+    c_p = _pad_lanes(cand.astype(jnp.int32), LANES, -1)
+    chi_p = _pad_lanes(cand_hi.astype(jnp.int32), LANES, -1)
+    gates = jnp.stack(
+        [
+            active_score.astype(jnp.int32),
+            do_replace.astype(jnp.int32),
+            active_probe.astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    gates = _pad_lanes(gates, LANES, 0)
+    Cp, Mp, Kp = ids_p.shape[1], sk_p.shape[1], c_p.shape[1]
+
+    def spec(width):
+        return pl.BlockSpec((1, width), lambda i: (i, 0))
+
+    operands = [ids_p, idshi_p, s_p, v_p, a_p, cap_p]
+    if weighted:
+        operands.append(_pad_lanes(weights.astype(jnp.float32), LANES, 1.0))
+    operands += [sk_p, skhi_p, prev_p, prevhi_p, rem_p, c_p, chi_p]
+    if weighted:
+        operands.append(_pad_lanes(cw.astype(jnp.float32), LANES, 0.0))
+    operands.append(gates)
+
+    out_specs = [spec(Cp)] * (6 if weighted else 5) + [
+        spec(Mp),
+        spec(Kp),
+        spec(Cp),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.float32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+    if weighted:
+        out_shape.append(jax.ShapeDtypeStruct((P, Cp), jnp.float32))
+    out_shape += [
+        jax.ShapeDtypeStruct((P, Mp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Kp), jnp.int32),
+        jax.ShapeDtypeStruct((P, Cp), jnp.int32),
+    ]
+
+    outs = pl.pallas_call(
+        _make_frontier_kernel(
+            float(increment),
+            float(decay),
+            float(threshold),
+            float(score_cap),
+            mode,
+            float(initial_score),
+            weighted,
+            wide=True,
+        ),
+        grid=(P,),
+        in_specs=[spec(x.shape[1]) for x in operands],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+    if weighted:
+        ids2, ids2_hi2, s2, v2, acc3, w2, code, placed, slot_pos = outs
+        w_out = w2[:, :C]
+    else:
+        ids2, ids2_hi2, s2, v2, acc3, code, placed, slot_pos = outs
+        w_out = None
+    ids2 = ids2[:, :C]
+    ids2_hi2 = ids2_hi2[:, :C]
+    valid2 = v2[:, :C] != 0
+    placed_b = placed[:, :K] != 0
+    code = code[:, :Mt]
+    slot_pos = jnp.minimum(slot_pos[:, :C], jnp.int32(C + K + 1))
+    n_place = jnp.sum(placed_b.astype(jnp.int32), axis=1)
+    n_valid = jnp.sum(valid2.astype(jnp.int32), axis=1)
+    (
+        cand_next_lo,
+        cand_next_hi,
+        packed,
+        counters,
+        payload2,
+    ) = _ref.frontier_pack_wide(
+        sk_lo,
+        sk_hi,
+        code,
+        placed_b,
+        slot_pos,
+        n_place,
+        n_valid,
+        ids2,
+        ids2_hi2,
+        payload,
+        table,
+        loc,
+        cand_cap=cand_cap,
+        id_base=id_base,
+    )
+    return (
+        ids2,
+        ids2_hi2,
+        s2[:, :C],
+        valid2,
+        acc3[:, :C] != 0,
+        w_out,
+        payload2,
+        cand_next_lo,
+        cand_next_hi,
         packed,
         counters,
     )

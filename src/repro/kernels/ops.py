@@ -18,8 +18,15 @@ import functools
 from . import ref
 from .. import telemetry
 from .frontier_unique import frontier_unique_batch as _frontier_unique_batch
+from .frontier_unique import (
+    frontier_unique_batch_wide as _frontier_unique_batch_wide,
+)
 from .fused_step import fused_frontier_step_pallas as _fused_frontier_step_pallas
+from .fused_step import (
+    fused_frontier_step_wide_pallas as _fused_frontier_step_wide_pallas,
+)
 from .fused_step import fused_step_pallas as _fused_step_pallas
+from .fused_step import fused_step_wide_pallas as _fused_step_wide_pallas
 from .gather_mean import gather_mean as _gather_mean
 from .gather_rows import gather_rows as _gather_rows
 from .gather_rows import gather_rows_batch as _gather_rows_batch
@@ -39,11 +46,82 @@ __all__ = [
     "score_policy_update_batch",
     "frontier_unique_batch",
     "fused_step_batch",
+    "fused_step_wide_batch",
     "fused_frontier_step_batch",
+    "fused_frontier_step_wide_batch",
     "pack_readback",
     "mla_flash_decode",
     "ref",
+    "INT32_SENTINEL",
+    "INT32_ID_MAX",
+    "WIDE_ID_MAX",
+    "int32_id_eligible",
+    "wide_id_eligible",
+    "split_ids",
+    "join_ids",
 ]
+
+#: The device kernels' padding sentinel (``frontier_pack``'s miss
+#: compaction sorts empty positions to ``int32.max``). A *legitimate* id
+#: equal to the sentinel would alias empty slots, so the narrow-id
+#: eligibility bound strictly excludes it.
+INT32_SENTINEL = int(np.iinfo(np.int32).max)
+
+#: Largest node id the narrow (single-word int32) device path may carry:
+#: ``2**31 - 2`` — one below ``INT32_SENTINEL``, see above.
+INT32_ID_MAX = INT32_SENTINEL - 1
+
+#: Largest node id the wide (two-word ``(hi, lo)``) device path may
+#: carry: ``hi`` must stay below ``INT32_SENTINEL`` so the wide sentinel
+#: pair ``(int32.max, int32.max)`` never aliases a real id, and
+#: ``lo < 2**WIDE_SHIFT`` by construction.
+WIDE_ID_MAX = (INT32_ID_MAX << ref.WIDE_SHIFT) | ref.WIDE_MASK
+
+
+def int32_id_eligible(max_id) -> bool:
+    """True when ids up to ``max_id`` fit the narrow int32 device path.
+
+    The single eligibility predicate shared by every guard (dispatchers,
+    ``DeviceEngine``, the driver's auto-upgrade, ``FeatureStore``) — the
+    bound is ``max_id <= 2**31 - 2``, *strictly excluding* the
+    ``int32.max`` padding sentinel."""
+    return int(max_id) <= INT32_ID_MAX
+
+
+def wide_id_eligible(max_id) -> bool:
+    """True when ids up to ``max_id`` fit the two-word wide device path
+    (``max_id <= WIDE_ID_MAX``, about 2^61)."""
+    return int(max_id) <= WIDE_ID_MAX
+
+
+def split_ids(ids):
+    """Split an int64 id array into ``(hi, lo)`` int32 word planes.
+
+    Non-negative ids split base-``2**WIDE_SHIFT`` (``hi = id >> 30``,
+    ``lo = id & (2**30 - 1)``); negative sentinels (-1 empty, -2 masked)
+    map to the equal pair ``(v, v)`` so pair equality is id equality and
+    ``hi >= 0`` is validity. Numeric order of non-negative ids equals
+    lexicographic ``(hi, lo)`` order — row-sorted int64 keys stay sorted
+    plane-wise."""
+    ids = np.asarray(ids, dtype=np.int64)
+    neg = ids < 0
+    v32 = ids.astype(np.int32)  # only read where negative (small values)
+    hi = np.where(neg, v32, (ids >> ref.WIDE_SHIFT).astype(np.int32))
+    lo = np.where(neg, v32, (ids & ref.WIDE_MASK).astype(np.int32))
+    return hi, lo
+
+
+def join_ids(hi, lo):
+    """Inverse of :func:`split_ids`: rebuild int64 ids on host
+    (``hi < 0`` rows are sentinels and pass through as ``hi``)."""
+    hi = np.asarray(hi)
+    lo = np.asarray(lo)
+    return np.where(
+        hi < 0,
+        hi.astype(np.int64),
+        (hi.astype(np.int64) << ref.WIDE_SHIFT) | lo.astype(np.int64),
+    )
+
 
 _FUSED_STATICS = (
     "increment",
@@ -58,11 +136,21 @@ _fused_step_ref = functools.partial(
     jax.jit, static_argnames=_FUSED_STATICS
 )(ref.fused_step)
 
+_fused_step_wide_ref = functools.partial(
+    jax.jit, static_argnames=_FUSED_STATICS
+)(ref.fused_step_wide)
+
 _FRONTIER_STATICS = _FUSED_STATICS + ("cand_cap",)
 
 _fused_frontier_ref = functools.partial(
     jax.jit, static_argnames=_FRONTIER_STATICS
 )(ref.fused_frontier_step)
+
+_FRONTIER_WIDE_STATICS = _FRONTIER_STATICS + ("id_base",)
+
+_fused_frontier_wide_ref = functools.partial(
+    jax.jit, static_argnames=_FRONTIER_WIDE_STATICS
+)(ref.fused_frontier_step_wide)
 
 
 @telemetry.profiled("pack_readback")
@@ -125,11 +213,13 @@ def fused_step_batch(
     ``backend="jnp"`` (default) runs the jit'd oracle
     :func:`repro.kernels.ref.fused_step`; ``backend="pallas"`` runs the
     Pallas kernel (``kernels/fused_step.py``; ``interpret=True`` on
-    CPU). The Pallas kernel computes ids in int32: int64 inputs with ids
-    >= 2^31 fall back to the jnp oracle with **identical outputs** (the
-    ``frontier_unique_batch`` contract). Ground truth is the staged
-    ``PrefetchEngine`` pipeline itself (``tests/test_fused_step.py``);
-    catalog entry ``docs/KERNELS.md#fused_step``.
+    CPU). The device math is int32: int64 inputs with ids beyond the
+    narrow bound (:func:`int32_id_eligible`) are split into ``(hi, lo)``
+    word planes and routed through the wide twin on *either* backend —
+    same outputs either way, ``ids`` rejoined to int64 on host. Ground
+    truth is the staged ``PrefetchEngine`` pipeline itself
+    (``tests/test_fused_step.py``); catalog entry
+    ``docs/KERNELS.md#fused_step``.
     """
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"backend must be 'jnp' or 'pallas', got {backend!r}")
@@ -141,18 +231,50 @@ def fused_step_batch(
         mode=mode,
         initial_score=float(initial_score),
     )
+    needs_wide = False
+    for arr in (ids, cand, queries):
+        if getattr(arr, "dtype", None) == np.int64:
+            vals = np.asarray(arr)
+            if vals.size and not int32_id_eligible(vals.max()):
+                needs_wide = True
+                break
+    if needs_wide:
+        for arr in (ids, cand, queries):
+            vals = np.asarray(arr)
+            if vals.size and not wide_id_eligible(vals.max()):
+                raise ValueError(
+                    "node ids exceed the wide-id device bound "
+                    f"(max {int(vals.max())} > {WIDE_ID_MAX})"
+                )
+        ids_hi, ids_lo = split_ids(np.asarray(ids))
+        q_hi, q_lo = split_ids(np.asarray(queries))
+        c_hi, c_lo = split_ids(np.asarray(cand))
+        out = fused_step_wide_batch(
+            ids_lo,
+            ids_hi,
+            scores,
+            valid,
+            accessed,
+            in_capacity,
+            weights,
+            q_lo,
+            q_hi,
+            c_lo,
+            c_hi,
+            cand_weights,
+            active_score,
+            do_replace,
+            active_probe,
+            backend=backend,
+            interpret=interpret,
+            **constants,
+        )
+        ids2 = join_ids(np.asarray(out[1]), np.asarray(out[0]))
+        return (ids2,) + tuple(out[2:])
     if backend == "pallas" and ids.shape[1] == 0:
         # Zero-capacity cluster: the oracle's static early return handles
         # C == 0; the Pallas grid would reduce over empty lane blocks.
         backend = "jnp"
-    if backend == "pallas":
-        i32max = np.iinfo(np.int32).max
-        for arr in (ids, cand, queries):
-            if getattr(arr, "dtype", None) == np.int64:
-                vals = np.asarray(arr)
-                if vals.size and int(vals.max()) >= i32max:
-                    backend = "jnp"  # int64 fallback, identical outputs
-                    break
     if backend == "pallas":
         return _fused_step_pallas(
             ids,
@@ -179,6 +301,75 @@ def fused_step_batch(
         weights,
         queries,
         cand,
+        cand_weights,
+        active_score,
+        do_replace,
+        active_probe,
+        **constants,
+    )
+
+
+@telemetry.profiled("fused_step_wide_batch")
+def fused_step_wide_batch(
+    ids,
+    ids_hi,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    queries,
+    queries_hi,
+    cand,
+    cand_hi,
+    cand_weights,
+    active_score,
+    do_replace,
+    active_probe,
+    *,
+    increment: float = 1.0,
+    decay: float = 0.95,
+    threshold: float = 0.95,
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = 1.0,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    """Wide-id twin of :func:`fused_step_batch`: every id operand is an
+    ``(hi, lo)`` int32 word-pair plane (:func:`split_ids`), covering
+    64-bit id universes without leaving the device. Returns the
+    12-tuple of :func:`repro.kernels.ref.fused_step_wide` — the narrow
+    outputs with ``ids2_hi`` inserted after ``ids2``."""
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend must be 'jnp' or 'pallas', got {backend!r}")
+    constants = dict(
+        increment=float(increment),
+        decay=float(decay),
+        threshold=float(threshold),
+        score_cap=float(score_cap),
+        mode=mode,
+        initial_score=float(initial_score),
+    )
+    if backend == "pallas" and ids.shape[1] == 0:
+        backend = "jnp"
+    fn = (
+        functools.partial(_fused_step_wide_pallas, interpret=interpret)
+        if backend == "pallas"
+        else _fused_step_wide_ref
+    )
+    return fn(
+        ids,
+        ids_hi,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries,
+        queries_hi,
+        cand,
+        cand_hi,
         cand_weights,
         active_score,
         do_replace,
@@ -273,33 +464,117 @@ def fused_frontier_step_batch(
     )
 
 
+@telemetry.profiled("fused_frontier_step_wide_batch")
+def fused_frontier_step_wide_batch(
+    ids,
+    ids_hi,
+    scores,
+    valid,
+    accessed,
+    in_capacity,
+    weights,
+    touched_aug,
+    part_of,
+    cand,
+    cand_hi,
+    node_weights,
+    payload,
+    table,
+    loc,
+    *,
+    cand_cap: int,
+    id_base: int = 0,
+    increment: float = 1.0,
+    decay: float = 0.95,
+    threshold: float = 0.95,
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = 1.0,
+    backend: str = "jnp",
+    interpret: bool = True,
+):
+    """Wide-id twin of :func:`fused_frontier_step_batch`.
+
+    ``touched_aug`` is the raw ``(P, 2*Mt + 1)`` ``[lo | hi | gates]``
+    ingest block (still one host→device transfer per step); buffer /
+    candidate ids ride as ``(hi, lo)`` planes; ``id_base`` is the
+    graph's global-id offset for the local-indexed ``part_of`` /
+    ``node_weights`` / ``loc`` gathers (static under jit — one
+    compilation per graph). Returns the 11-tuple of
+    :func:`repro.kernels.ref.fused_frontier_step_wide`; only ``packed``
+    (width ``3*Mt + K + C + 1``) ever crosses back to host."""
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"backend must be 'jnp' or 'pallas', got {backend!r}")
+    constants = dict(
+        cand_cap=int(cand_cap),
+        id_base=int(id_base),
+        increment=float(increment),
+        decay=float(decay),
+        threshold=float(threshold),
+        score_cap=float(score_cap),
+        mode=mode,
+        initial_score=float(initial_score),
+    )
+    if backend == "pallas" and (
+        ids.shape[1] == 0 or touched_aug.shape[1] <= 1
+    ):
+        backend = "jnp"
+    fn = (
+        functools.partial(_fused_frontier_step_wide_pallas, interpret=interpret)
+        if backend == "pallas"
+        else _fused_frontier_wide_ref
+    )
+    return fn(
+        ids,
+        ids_hi,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        touched_aug,
+        part_of,
+        cand,
+        cand_hi,
+        node_weights,
+        payload,
+        table,
+        loc,
+        **constants,
+    )
+
+
 @telemetry.profiled("frontier_unique_batch")
 def frontier_unique_batch(sorted_keys, is_remote, *, interpret: bool = True):
     """Fused frontier dedup; accepts int32 **or** int64 row-sorted keys.
 
-    The Pallas kernel runs in int32; keys that cannot be represented in
-    int32 take a numpy fallback with **identical output dtypes** (bool
-    masks, int32 counts), so downstream consumers — and the trace
-    schema's id normalization — see one contract on every platform.
-    The previous behaviour cast int64 keys blindly, which silently
-    wrapped ids >= 2^31 on the kernel path while the fallback produced
-    different dtypes; traces recorded on the two paths then failed to
-    replay bit-identically.
+    The narrow Pallas kernel runs in int32; keys beyond the narrow bound
+    (:func:`int32_id_eligible`) are split into ``(hi, lo)`` word planes
+    and routed through the wide Pallas twin
+    (:func:`repro.kernels.frontier_unique.frontier_unique_batch_wide`)
+    with **identical output dtypes** (bool masks, int32 counts), so
+    downstream consumers — and the trace schema's id normalization —
+    see one contract on every platform. (The pre-wide behaviour cast
+    int64 keys blindly, which silently wrapped ids >= 2^31 on the
+    kernel path; then a numpy fallback fixed the values but left the
+    device.)
     """
     if getattr(sorted_keys, "dtype", None) != np.int32:
         # Only non-int32 inputs pay the range check (and, for numpy
         # callers, it is free of any device transfer; int32 jax arrays
         # go straight to the kernel).
         keys = np.asarray(sorted_keys)
-        if keys.size and int(keys.max()) >= np.iinfo(np.int32).max:
-            first, remote = ref.frontier_dedup(
-                keys, np.asarray(is_remote, dtype=bool)
-            )
-            return (
-                first,
-                remote,
-                first.sum(axis=1, dtype=np.int32),
-                remote.sum(axis=1, dtype=np.int32),
+        if keys.size and not int32_id_eligible(keys.max()):
+            if not wide_id_eligible(keys.max()):
+                raise ValueError(
+                    "frontier keys exceed the wide-id device bound "
+                    f"(max {int(keys.max())} > {WIDE_ID_MAX})"
+                )
+            hi, lo = split_ids(keys)
+            # Numeric int64 order == lexicographic (hi, lo) order, so
+            # the row-sorted invariant carries over plane-wise.
+            return _frontier_unique_batch_wide(
+                lo, hi, is_remote, interpret=interpret
             )
         sorted_keys = keys.astype(np.int32, copy=False)
     return _frontier_unique_batch(sorted_keys, is_remote, interpret=interpret)

@@ -15,6 +15,38 @@ import numpy as np
 
 from ..core import scoring
 
+#: Two-word id encoding: a 64-bit id splits into int32 word planes
+#: ``hi = id >> WIDE_SHIFT`` / ``lo = id & WIDE_MASK`` (non-negative
+#: ids), while the negative sentinels (-1 padding, -2 masked-invalid)
+#: map to ``(v, v)`` pairs — so plane-wise pair equality is id equality
+#: and ``hi >= 0`` is the validity test, exactly as in the narrow path.
+#: Host-side split/join live in :mod:`repro.kernels.ops`.
+WIDE_SHIFT = 30
+WIDE_MASK = (1 << WIDE_SHIFT) - 1
+
+
+def wide_local_index(hi: jax.Array, lo: jax.Array, id_base: int, num_nodes: int):
+    """Local CSR index of ``(hi, lo)``-encoded global ids, in int32.
+
+    Global id = ``id_base + local`` (the partition-major id-space
+    contract of :class:`repro.graph.generate.Graph`), so
+    ``local = (hi - base_hi) * 2^30 + (lo - base_lo)`` — but that
+    product overflows int32 when ``hi - base_hi == 2``. The shift form
+    ``(((d_hi << 29) + (d_lo >> 1)) << 1) + (d_lo & 1)`` is exact for
+    every in-range id (local < 2^31 - 1) using int32 arithmetic only
+    (arithmetic right shift floors, so the identity holds for negative
+    ``d_lo`` too). Out-of-range lanes (sentinels, padding) produce
+    garbage that the caller masks by validity; the result is clamped to
+    ``[0, num_nodes)`` so it is always safe to gather with.
+    """
+    base = int(id_base)
+    d_hi = hi - jnp.int32(base >> WIDE_SHIFT)
+    d_lo = lo - jnp.int32(base & WIDE_MASK)
+    local = ((
+        (d_hi << jnp.int32(WIDE_SHIFT - 1)) + (d_lo >> jnp.int32(1))
+    ) << jnp.int32(1)) + (d_lo & jnp.int32(1))
+    return jnp.clip(local, jnp.int32(0), jnp.int32(num_nodes - 1))
+
 
 def frontier_dedup(
     sorted_keys: np.ndarray, is_remote: np.ndarray | None = None
@@ -174,6 +206,114 @@ def fused_step(
     staged ``PrefetchEngine`` pipeline itself (``tests/test_fused_step.py``).
     See ``docs/KERNELS.md#fused_step``.
     """
+    out = _fused_step_impl(
+        ids,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries,
+        cand,
+        cand_weights,
+        active_score,
+        do_replace,
+        active_probe,
+        increment=increment,
+        decay=decay,
+        threshold=threshold,
+        score_cap=score_cap,
+        mode=mode,
+        initial_score=initial_score,
+    )
+    return out[:1] + out[2:]
+
+
+def fused_step_wide(
+    ids: jax.Array,
+    ids_hi: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    accessed: jax.Array,
+    in_capacity: jax.Array,
+    weights: jax.Array | None,
+    queries: jax.Array,
+    queries_hi: jax.Array,
+    cand: jax.Array,
+    cand_hi: jax.Array,
+    cand_weights: jax.Array | None,
+    active_score: jax.Array,
+    do_replace: jax.Array,
+    active_probe: jax.Array,
+    *,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+):
+    """Wide-id twin of :func:`fused_step`: ids/queries/candidates arrive
+    as ``(hi, lo)`` int32 word-pair planes (see :data:`WIDE_SHIFT`), so
+    the launch covers 64-bit id universes that int32 lanes cannot hold.
+    Same semantics, with every id comparison a plane-wise pair equality
+    and candidate validity read off ``hi >= 0``. Returns the 11-tuple of
+    :func:`fused_step` with ``ids2_hi`` inserted after ``ids2`` (the new
+    hi plane of the buffer state)."""
+    return _fused_step_impl(
+        ids,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries,
+        cand,
+        cand_weights,
+        active_score,
+        do_replace,
+        active_probe,
+        ids_hi=ids_hi,
+        queries_hi=queries_hi,
+        cand_hi=cand_hi,
+        increment=increment,
+        decay=decay,
+        threshold=threshold,
+        score_cap=score_cap,
+        mode=mode,
+        initial_score=initial_score,
+    )
+
+
+def _fused_step_impl(
+    ids: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    accessed: jax.Array,
+    in_capacity: jax.Array,
+    weights: jax.Array | None,
+    queries: jax.Array,
+    cand: jax.Array,
+    cand_weights: jax.Array | None,
+    active_score: jax.Array,
+    do_replace: jax.Array,
+    active_probe: jax.Array,
+    ids_hi: jax.Array | None = None,
+    queries_hi: jax.Array | None = None,
+    cand_hi: jax.Array | None = None,
+    *,
+    increment: float,
+    decay: float,
+    threshold: float,
+    score_cap: float,
+    mode: str,
+    initial_score: float,
+):
+    """Shared narrow/wide fused-step body. With the optional ``*_hi``
+    planes absent this is exactly the narrow int32 oracle; with them
+    present every id compare becomes a pair equality over both planes
+    and ``ids2_hi`` (second tuple slot) carries the new hi plane."""
+    wide = ids_hi is not None
     ids = ids.astype(jnp.int32)
     scores = scores.astype(jnp.float32)
     valid = valid.astype(bool)
@@ -181,6 +321,10 @@ def fused_step(
     in_capacity = in_capacity.astype(bool)
     queries = queries.astype(jnp.int32)
     cand = cand.astype(jnp.int32)
+    if wide:
+        ids_hi = ids_hi.astype(jnp.int32)
+        queries_hi = queries_hi.astype(jnp.int32)
+        cand_hi = cand_hi.astype(jnp.int32)
     active_score = active_score.astype(bool)
     do_replace = do_replace.astype(bool)
     active_probe = active_probe.astype(bool)
@@ -193,6 +337,7 @@ def fused_step(
         K = cand.shape[1]
         return (
             ids,
+            ids_hi,
             scores,
             valid,
             accessed,
@@ -230,15 +375,20 @@ def fused_step(
     # P=256 (see ``benchmarks/kernels_micro.py`` fused rows).
     K = cand.shape[1]
     ids_pre = jnp.where(valid, ids, jnp.int32(-2))
-    member = (cand[:, :, None] == ids_pre[:, None, :]).any(-1)
+    eq_member = cand[:, :, None] == ids_pre[:, None, :]
+    if wide:
+        ids_pre_hi = jnp.where(valid, ids_hi, jnp.int32(-2))
+        eq_member &= cand_hi[:, :, None] == ids_pre_hi[:, None, :]
+    member = eq_member.any(-1)
     # In-kernel first-occurrence dedup (`_unique_preserve_order`): a
     # candidate repeating an earlier position is never fresh, so the
     # host hands raw candidate lists — no per-PE python dedup loop.
-    dup = (
-        (cand[:, :, None] == cand[:, None, :])
-        & jnp.tril(jnp.ones((K, K), dtype=bool), k=-1)[None]
-    ).any(-1)
-    fresh = (cand >= 0) & ~member & ~dup & do_replace[:, None]
+    eq_dup = cand[:, :, None] == cand[:, None, :]
+    if wide:
+        eq_dup &= cand_hi[:, :, None] == cand_hi[:, None, :]
+    dup = (eq_dup & jnp.tril(jnp.ones((K, K), dtype=bool), k=-1)[None]).any(-1)
+    cand_ok = (cand_hi >= 0) if wide else (cand >= 0)
+    fresh = cand_ok & ~member & ~dup & do_replace[:, None]
     free = ~valid & in_capacity
     stale = valid & (s1 < jnp.float32(threshold))
     n_free = free.sum(axis=1)
@@ -279,6 +429,11 @@ def fused_step(
     )
     cand_idx = jnp.maximum(enc.max(axis=1).astype(jnp.int32) - 1, 0)
     ids2 = jnp.where(filled, jnp.take_along_axis(cand, cand_idx, axis=1), ids)
+    ids2_hi = (
+        jnp.where(filled, jnp.take_along_axis(cand_hi, cand_idx, axis=1), ids_hi)
+        if wide
+        else None
+    )
     s2 = jnp.where(filled, jnp.float32(initial_score), s1)
     valid2 = valid | filled
     if weights is not None and cand_weights is not None:
@@ -303,6 +458,9 @@ def fused_step(
     slot_dt = jnp.int16 if C + 1 <= np.iinfo(np.int16).max else jnp.int32
     ids_post = jnp.where(valid2, ids2, jnp.int32(-2))
     eq_q = queries[:, :, None] == ids_post[:, None, :]
+    if wide:
+        ids_post_hi = jnp.where(valid2, ids2_hi, jnp.int32(-2))
+        eq_q &= queries_hi[:, :, None] == ids_post_hi[:, None, :]
     slot1 = jnp.max(
         jnp.where(eq_q, (slot_iota + 1).astype(slot_dt), slot_dt(0)),
         axis=2,
@@ -312,6 +470,7 @@ def fused_step(
     acc3 = acc2 | (jnp.any(eq_q, axis=1) & active_probe[:, None])
     return (
         ids2,
+        ids2_hi,
         s2,
         valid2,
         acc3,
@@ -360,6 +519,51 @@ def frontier_prologue(touched_aug: jax.Array, part_of: jax.Array):
     return active_score, do_replace, active_probe, sk, prev, rem, remote
 
 
+def frontier_prologue_wide(
+    touched_aug: jax.Array, part_of: jax.Array, *, id_base: int
+):
+    """Wide-id twin of :func:`frontier_prologue`.
+
+    ``touched_aug`` is the raw ``(P, 2*Mt + 1)`` block ``[lo | hi |
+    gates]`` — both word planes of the sampled frontier plus the packed
+    gate column, still one host→device transfer. The row sort is a
+    two-key lexicographic ``lax.sort`` over ``(hi, lo)`` (numeric 64-bit
+    order, since ``lo < 2^30`` for every valid id and sentinels split to
+    equal pairs), first-occurrence is a pair inequality, validity is
+    ``hi >= 0``, and the ``part_of`` gather indexes by the reconstructed
+    local id (:func:`wide_local_index` under ``id_base``). Returns the
+    gates plus ``(sk_lo, sk_hi, prev_lo, prev_hi, rem, remote)``.
+    """
+    P = touched_aug.shape[0]
+    Mt = (touched_aug.shape[1] - 1) // 2
+    lo = touched_aug[:, :Mt].astype(jnp.int32)
+    hi = touched_aug[:, Mt : 2 * Mt].astype(jnp.int32)
+    gates = touched_aug[:, -1].astype(jnp.int32)
+    active_score = (gates & 1) != 0
+    do_replace = (gates & 2) != 0
+    active_probe = (gates & 4) != 0
+    sk_hi, sk_lo = jax.lax.sort((hi, lo), dimension=1, num_keys=2)
+    pad = jnp.full((P, 1), -1, dtype=jnp.int32)
+    prev_lo = jnp.concatenate([pad, sk_lo[:, :-1]], axis=1)
+    prev_hi = jnp.concatenate([pad, sk_hi[:, :-1]], axis=1)
+    first = ((sk_lo != prev_lo) | (sk_hi != prev_hi)) & (sk_hi >= 0)
+    own = jnp.arange(P, dtype=jnp.int32)[:, None]
+    local = wide_local_index(sk_hi, sk_lo, id_base, part_of.shape[0])
+    rem = jnp.take(part_of, local).astype(jnp.int32) != own
+    remote = first & rem
+    return (
+        active_score,
+        do_replace,
+        active_probe,
+        sk_lo,
+        sk_hi,
+        prev_lo,
+        prev_hi,
+        rem,
+        remote,
+    )
+
+
 def cand_weights_of(cand: jax.Array, node_weights: jax.Array | None):
     """Per-candidate degree weights, device twin of the staged gather
     (``cw[cmask] = node_weights[allc]`` over a ones-filled array)."""
@@ -368,6 +572,26 @@ def cand_weights_of(cand: jax.Array, node_weights: jax.Array | None):
     return jnp.where(
         cand >= 0,
         jnp.take(node_weights, jnp.maximum(cand, 0)).astype(jnp.float32),
+        jnp.float32(1.0),
+    )
+
+
+def cand_weights_of_wide(
+    cand_lo: jax.Array,
+    cand_hi: jax.Array,
+    node_weights: jax.Array | None,
+    *,
+    id_base: int,
+):
+    """Wide-id twin of :func:`cand_weights_of`: ``node_weights`` is
+    local-indexed, so the gather goes through the reconstructed local
+    id of each ``(hi, lo)`` candidate pair."""
+    if node_weights is None:
+        return jnp.ones(cand_lo.shape, dtype=jnp.float32)
+    local = wide_local_index(cand_hi, cand_lo, id_base, node_weights.shape[0])
+    return jnp.where(
+        cand_hi >= 0,
+        jnp.take(node_weights, local).astype(jnp.float32),
         jnp.float32(1.0),
     )
 
@@ -412,6 +636,12 @@ def frontier_pack(
     """
     P, Mt = sk.shape
     kc = min(int(cand_cap), Mt)
+    # int32.max is reserved as the compaction sentinel: a *legitimate*
+    # id equal to it would alias empty slots and vanish from the
+    # candidate stream. The eligibility bound therefore strictly
+    # excludes it — ids on this path are <= 2^31 - 2
+    # (`kernels.ops.int32_id_eligible`); wider universes take the
+    # two-word path (:func:`frontier_pack_wide`).
     sent = jnp.int32(np.iinfo(np.int32).max)
     miss_keys = jnp.where(code == 1, sk, sent)
     cand_next = jnp.sort(miss_keys, axis=1)[:, :kc]
@@ -442,6 +672,78 @@ def frontier_pack(
             filled[:, :, None], rows, payload.reshape(P, C, F)
         ).reshape(P * C, F)
     return cand_next, packed, counters, payload2
+
+
+def frontier_pack_wide(
+    sk_lo: jax.Array,
+    sk_hi: jax.Array,
+    code: jax.Array,
+    placed: jax.Array,
+    slot_pos: jax.Array,
+    n_place: jax.Array,
+    n_valid: jax.Array,
+    ids2_lo: jax.Array,
+    ids2_hi: jax.Array,
+    payload: jax.Array | None,
+    table: jax.Array | None,
+    loc: jax.Array | None,
+    *,
+    cand_cap: int,
+    id_base: int,
+):
+    """Wide-id twin of :func:`frontier_pack`.
+
+    The miss compaction sorts ``(hi, lo)`` pairs with a two-key
+    ``lax.sort``; the ``(int32.max, int32.max)`` sentinel pair sorts
+    strictly after every eligible id because the hi word of a
+    wide-eligible id is < int32.max (``kernels.ops.wide_id_eligible``)
+    and lo < 2^30. The packed readback grows one plane:
+    ``[sk_hi | sk_lo | code | placed | slot_pos | n_valid]`` of width
+    ``3*Mt + K + C + 1`` — still one device→host transfer. The payload
+    scatter gathers ``loc`` by the reconstructed local id of each
+    ``(hi, lo)`` buffer pair. Returns ``(cand_next_lo, cand_next_hi,
+    packed, counters, payload2)``.
+    """
+    P, Mt = sk_lo.shape
+    kc = min(int(cand_cap), Mt)
+    sent = jnp.int32(np.iinfo(np.int32).max)
+    miss_lo = jnp.where(code == 1, sk_lo, sent)
+    miss_hi = jnp.where(code == 1, sk_hi, sent)
+    srt_hi, srt_lo = jax.lax.sort((miss_hi, miss_lo), dimension=1, num_keys=2)
+    cand_next_lo = jnp.where(
+        srt_hi[:, :kc] == sent, jnp.int32(-1), srt_lo[:, :kc]
+    )
+    cand_next_hi = jnp.where(
+        srt_hi[:, :kc] == sent, jnp.int32(-1), srt_hi[:, :kc]
+    )
+    n_remote = jnp.sum((code > 0).astype(jnp.int32), axis=1)
+    hits = jnp.sum((code >= 2).astype(jnp.int32), axis=1)
+    counters = jnp.stack(
+        [n_remote, hits, n_place.astype(jnp.int32), n_valid.astype(jnp.int32)],
+        axis=1,
+    )
+    packed = jnp.concatenate(
+        [
+            sk_hi,
+            sk_lo,
+            code,
+            placed.astype(jnp.int32),
+            slot_pos.astype(jnp.int32),
+            n_valid[:, None].astype(jnp.int32),
+        ],
+        axis=1,
+    )
+    payload2 = payload
+    if table is not None:
+        C = ids2_lo.shape[1]
+        F = table.shape[1]
+        filled = slot_pos < n_place[:, None]
+        local = wide_local_index(ids2_hi, ids2_lo, id_base, loc.shape[0])
+        rows = jnp.take(table, jnp.take(loc, local), axis=0)
+        payload2 = jnp.where(
+            filled[:, :, None], rows, payload.reshape(P, C, F)
+        ).reshape(P * C, F)
+    return cand_next_lo, cand_next_hi, packed, counters, payload2
 
 
 def fused_frontier_step(
@@ -555,6 +857,131 @@ def fused_frontier_step(
         cand_cap=cand_cap,
     )
     return ids2, s2, valid2, acc3, w2, payload2, cand_next, packed, counters
+
+
+def fused_frontier_step_wide(
+    ids_lo: jax.Array,
+    ids_hi: jax.Array,
+    scores: jax.Array,
+    valid: jax.Array,
+    accessed: jax.Array,
+    in_capacity: jax.Array,
+    weights: jax.Array | None,
+    touched_aug: jax.Array,
+    part_of: jax.Array,
+    cand_lo: jax.Array,
+    cand_hi: jax.Array,
+    node_weights: jax.Array | None,
+    payload: jax.Array | None,
+    table: jax.Array | None,
+    loc: jax.Array | None,
+    *,
+    cand_cap: int,
+    id_base: int,
+    increment: float = float(scoring.ACCESS_INCREMENT),
+    decay: float = float(scoring.DECAY_FACTOR),
+    threshold: float = float(scoring.STALE_THRESHOLD),
+    score_cap: float = 4.0,
+    mode: str = "accumulate",
+    initial_score: float = float(scoring.INITIAL_SCORE),
+):
+    """Wide-id oracle for the single-launch device step: the
+    :func:`fused_frontier_step` pipeline with every id carried as an
+    ``(hi, lo)`` int32 word pair (``touched_aug`` is the ``[lo | hi |
+    gates]`` block of :func:`frontier_prologue_wide`; ``cand_lo`` /
+    ``cand_hi`` the previous launch's on-device wide miss compaction;
+    ``id_base`` the graph's global-id offset for the local-indexed
+    ``part_of`` / ``node_weights`` / ``loc`` gathers). Returns
+    ``(ids2_lo, ids2_hi, scores2, valid2, accessed3, weights2,
+    payload2, cand_next_lo, cand_next_hi, packed, counters)``."""
+    (
+        active_score,
+        do_replace,
+        active_probe,
+        sk_lo,
+        sk_hi,
+        _prev_lo,
+        _prev_hi,
+        _rem,
+        remote,
+    ) = frontier_prologue_wide(touched_aug, part_of, id_base=id_base)
+    queries_lo = jnp.where(remote, sk_lo, jnp.int32(-1))
+    queries_hi = jnp.where(remote, sk_hi, jnp.int32(-1))
+    cand_lo = cand_lo.astype(jnp.int32)
+    cand_hi = cand_hi.astype(jnp.int32)
+    cw = (
+        cand_weights_of_wide(cand_lo, cand_hi, node_weights, id_base=id_base)
+        if weights is not None
+        else None
+    )
+    (
+        ids2_lo,
+        ids2_hi,
+        s2,
+        valid2,
+        acc3,
+        w2,
+        hit,
+        hit_slot,
+        placed,
+        slot_pos,
+        n_place,
+        n_valid,
+    ) = _fused_step_impl(
+        ids_lo,
+        scores,
+        valid,
+        accessed,
+        in_capacity,
+        weights,
+        queries_lo,
+        cand_lo,
+        cw,
+        active_score,
+        do_replace,
+        active_probe,
+        ids_hi=ids_hi,
+        queries_hi=queries_hi,
+        cand_hi=cand_hi,
+        increment=increment,
+        decay=decay,
+        threshold=threshold,
+        score_cap=score_cap,
+        mode=mode,
+        initial_score=initial_score,
+    )
+    code = jnp.where(
+        remote, jnp.where(hit, hit_slot + 2, jnp.int32(1)), jnp.int32(0)
+    )
+    cand_next_lo, cand_next_hi, packed, counters, payload2 = frontier_pack_wide(
+        sk_lo,
+        sk_hi,
+        code,
+        placed,
+        slot_pos,
+        n_place,
+        n_valid,
+        ids2_lo,
+        ids2_hi,
+        payload,
+        table,
+        loc,
+        cand_cap=cand_cap,
+        id_base=id_base,
+    )
+    return (
+        ids2_lo,
+        ids2_hi,
+        s2,
+        valid2,
+        acc3,
+        w2,
+        payload2,
+        cand_next_lo,
+        cand_next_hi,
+        packed,
+        counters,
+    )
 
 
 def score_policy_update_batch(

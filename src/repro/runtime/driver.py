@@ -58,23 +58,30 @@ def run_vectorized(trainer) -> "RunResult":  # noqa: F821 — see lazy import
     streams, one fused kernel launch per step.
     """
     if getattr(trainer, "device", None):
-        if trainer.graph.num_nodes - 1 >= np.iinfo(np.int32).max:
-            # The device engine stores node ids as int32; rather than
-            # raising mid-run, run the staged pipeline (identical
-            # streams, no device residency). Counted (not just warned)
-            # so sweeps can report how many cells took the staged path;
-            # the warning itself fires once per trainer, not per run.
-            tel.count("device.fallback_int64")
-            if not getattr(trainer, "_warned_int64_fallback", False):
-                trainer._warned_int64_fallback = True
-                warnings.warn(
-                    "device=... requested but graph node ids exceed int32; "
-                    "falling back to the staged pipeline",
-                    RuntimeWarning,
-                    stacklevel=2,
-                )
-        else:
+        from ..kernels import ops
+
+        # Tri-state device eligibility on the graph's *global* id
+        # universe (id_base + local index): the narrow int32 megakernel
+        # serves id_base == 0 graphs up to INT32_ID_MAX; bigger ids —
+        # the int32 ceiling this used to fall back on — take the wide
+        # (hi, lo) word-pair path up to WIDE_ID_MAX (~2^61). Only
+        # beyond that does the run degrade to the staged pipeline
+        # (identical streams, no device residency). Counted (not just
+        # warned) so sweeps can report how many cells took the staged
+        # path; the warning itself fires once per trainer, not per run.
+        max_id = trainer.graph.id_base + trainer.graph.num_nodes - 1
+        if ops.wide_id_eligible(max_id):
             return run_device(trainer)
+        tel.count("device.fallback_int64")
+        if not getattr(trainer, "_warned_int64_fallback", False):
+            trainer._warned_int64_fallback = True
+            warnings.warn(
+                "device=... requested but graph node ids exceed int32 "
+                "and the wide-id bound; falling back to the staged "
+                "pipeline",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     # Deferred: repro.gnn.train imports the engine from this package.
     from ..gnn.sage import sage_accuracy, sage_grads
     from ..gnn.train import RunResult, TrainerLog

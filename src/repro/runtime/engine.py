@@ -91,9 +91,14 @@ class PrefetchEngine:
         ``rudder`` policy. Same contract as
         ``PersistentBuffer(policy=...)``.
     node_weights:
-        Optional per-node access weights indexed by node id (the
-        ``degree`` policy's input); resolved to per-slot weights at
-        insertion time.
+        Optional per-node access weights indexed by *local* node index
+        (the ``degree`` policy's input); resolved to per-slot weights at
+        insertion time. Buffer ids are global (``id_base`` + local), so
+        placement subtracts ``id_base`` before the gather.
+    id_base:
+        Global id of local node 0 (``Graph.id_base``). All ids entering
+        the engine (queries, candidates) are global; only per-node
+        weight lookups need the local offset.
     feature_dim:
         If > 0, a dense feature payload ``(P, C, feature_dim)`` float32
         rides alongside membership (the feature-store data plane:
@@ -108,6 +113,7 @@ class PrefetchEngine:
         policy: str | scoring.ScoringPolicy = "rudder",
         node_weights: np.ndarray | None = None,
         feature_dim: int = 0,
+        id_base: int = 0,
     ):
         self.capacity = np.asarray(capacities, dtype=np.int64)
         if (self.capacity < 0).any():
@@ -117,6 +123,7 @@ class PrefetchEngine:
         self.use_kernels = use_kernels
         self.policy = scoring.make_policy(policy)
         self._node_weights = node_weights
+        self.id_base = int(id_base)
         self.ids = np.full((P, C), -1, dtype=np.int64)
         self.scores = np.zeros((P, C), dtype=np.float32)
         self.weights = np.ones((P, C), dtype=np.float32)
@@ -340,7 +347,7 @@ class PrefetchEngine:
         self.ids[p, slots] = ids
         self.scores[p, slots] = np.float32(self.policy.initial_score)
         if self._node_weights is not None:
-            self.weights[p, slots] = self._node_weights[ids]
+            self.weights[p, slots] = self._node_weights[ids - self.id_base]
         self.valid[p, slots] = True
         self.accessed[p, slots] = False
         self.last_slots[p] = np.asarray(slots, dtype=np.int64)
@@ -425,9 +432,13 @@ class DeviceEngine:
     Semantics are bit-identical to the staged numpy pipeline
     (``lookup`` → ``end_round`` → ``replace_round``) — the parity
     contract of ``tests/test_fused_step.py`` and the golden traces.
-    Node ids must fit int32 (the device path stores ids as int32; a
-    graph with ids ≥ 2^31 raises at construction — the staged path has
-    no such limit).
+    Narrow mode stores ids as a single int32 plane and serves id
+    universes up to :data:`repro.kernels.ops.INT32_ID_MAX`; beyond that
+    (or whenever ``id_base`` is nonzero) the engine auto-upgrades to
+    **wide mode** — every id rides as an ``(hi, lo)`` int32 word pair
+    (``docs/KERNELS.md`` §"Wide-id encoding") up to
+    :data:`repro.kernels.ops.WIDE_ID_MAX` (~2^61). Ids beyond the wide
+    bound raise at construction; the staged path has no limit.
     """
 
     def __init__(
@@ -436,16 +447,32 @@ class DeviceEngine:
         backend: str = "jnp",
         interpret: bool = True,
         part_of: np.ndarray | None = None,
+        id_base: int | None = None,
     ):
         import jax.numpy as jnp
+
+        from ..kernels import ops
 
         if backend not in ("jnp", "pallas"):
             raise ValueError(
                 f"backend must be 'jnp' or 'pallas', got {backend!r}"
             )
-        if engine.ids.size and int(engine.ids.max()) >= np.iinfo(np.int32).max:
+        self.id_base = int(
+            engine.id_base if id_base is None else id_base
+        )
+        max_known = int(engine.ids.max()) if engine.ids.size else -1
+        # Any nonzero base puts the whole id universe at or above it.
+        max_known = max(max_known, self.id_base)
+        if part_of is not None:
+            # The id universe upper bound: every global id the run can
+            # produce is id_base + a local index into part_of.
+            max_known = max(max_known, self.id_base + len(part_of) - 1)
+        self.wide = bool(self.id_base) or not ops.int32_id_eligible(max_known)
+        if self.wide and not ops.wide_id_eligible(max_known):
             raise ValueError(
-                "device engine stores ids as int32; buffer holds ids >= 2^31"
+                "device engine ids exceed the wide-id bound "
+                f"(max id {max_known} > {ops.WIDE_ID_MAX}); "
+                "use the staged pipeline"
             )
         self._jnp = jnp
         self.engine = engine
@@ -458,7 +485,13 @@ class DeviceEngine:
         self.max_capacity = engine.max_capacity
         self.feature_dim = engine.feature_dim
         self._node_weights = engine._node_weights
-        self._ids = jnp.asarray(engine.ids.astype(np.int32))
+        if self.wide:
+            ids_hi, ids_lo = ops.split_ids(engine.ids)
+            self._ids = jnp.asarray(ids_lo)
+            self._ids_hi = jnp.asarray(ids_hi)
+        else:
+            self._ids = jnp.asarray(engine.ids.astype(np.int32))
+            self._ids_hi = None
         self._scores = jnp.asarray(engine.scores)
         self._valid = jnp.asarray(engine.valid)
         self._accessed = jnp.asarray(engine.accessed)
@@ -500,8 +533,12 @@ class DeviceEngine:
         self.cand_cap = 2 * self.max_capacity
         empty64 = np.array([], dtype=np.int64)
         self._cand_ready = jnp.full((P, 1), -1, dtype=jnp.int32)
+        self._cand_ready_hi = (
+            jnp.full((P, 1), -1, dtype=jnp.int32) if self.wide else None
+        )
         self._cand_ready_ids = [empty64 for _ in range(P)]
         self._cand_pending = None
+        self._cand_pending_hi = None
         self._cand_pending_ids = None
         # Host-boundary audit: one upload + one packed readback per step.
         self.transfers = {"h2d": 0, "h2d_bytes": 0, "d2h": 0, "d2h_bytes": 0}
@@ -553,10 +590,19 @@ class DeviceEngine:
             if clen.sum()
             else empty64
         )
-        i32max = np.iinfo(np.int32).max
-        if (allq.size and int(allq.max()) >= i32max) or (
-            allc.size and int(allc.max()) >= i32max
-        ):
+        from ..kernels import ops
+
+        max_in = max(
+            int(allq.max()) if allq.size else -1,
+            int(allc.max()) if allc.size else -1,
+        )
+        if self.wide:
+            if not ops.wide_id_eligible(max_in):
+                raise ValueError(
+                    "device engine ids exceed the wide-id bound "
+                    f"(max id {max_in} > {ops.WIDE_ID_MAX})"
+                )
+        elif not ops.int32_id_eligible(max_in):
             raise ValueError("device engine needs node ids < 2^31")
         M = _bucket(int(qlen.max(initial=0)))
         K = _bucket(int(clen.max(initial=0)))
@@ -564,46 +610,91 @@ class DeviceEngine:
         cmask = np.arange(K) < clen[:, None]
         q = np.full((P, M), -1, dtype=np.int32)
         c = np.full((P, K), -1, dtype=np.int32)
-        q[qmask] = allq
-        c[cmask] = allc
+        q_hi = c_hi = None
+        if self.wide:
+            q_hi = np.full((P, M), -1, dtype=np.int32)
+            c_hi = np.full((P, K), -1, dtype=np.int32)
+            qh, ql = ops.split_ids(allq)
+            ch, cl = ops.split_ids(allc)
+            q[qmask] = ql
+            q_hi[qmask] = qh
+            c[cmask] = cl
+            c_hi[cmask] = ch
+        else:
+            q[qmask] = allq
+            c[cmask] = allc
         cw = None
         if self._weights is not None:
             cw = np.ones((P, K), dtype=np.float32)
             if self._node_weights is not None and allc.size:
-                cw[cmask] = self._node_weights[allc]
+                cw[cmask] = self._node_weights[allc - self.id_base]
 
-        from ..kernels import ops
-
-        _launch_sp = tel.begin("device.launch", plane="device")
-        (
-            self._ids,
-            self._scores,
-            self._valid,
-            self._accessed,
-            w2,
-            hit_d,
-            hit_slot_d,
-            placed_d,
-            slot_pos_d,
-            _n_placed,
-            n_valid_d,
-        ) = ops.fused_step_batch(
-            self._ids,
-            self._scores,
-            self._valid,
-            self._accessed,
-            self._in_cap,
-            self._weights,
-            q,
-            c,
-            cw,
+        gates = (
             np.asarray(active_score, dtype=bool),
             np.asarray(do_replace, dtype=bool),
             np.asarray(active_probe, dtype=bool),
-            backend=self.backend,
-            interpret=self.interpret,
-            **self.policy.kernel_constants(),
         )
+        _launch_sp = tel.begin("device.launch", plane="device")
+        if self.wide:
+            (
+                self._ids,
+                self._ids_hi,
+                self._scores,
+                self._valid,
+                self._accessed,
+                w2,
+                hit_d,
+                hit_slot_d,
+                placed_d,
+                slot_pos_d,
+                _n_placed,
+                n_valid_d,
+            ) = ops.fused_step_wide_batch(
+                self._ids,
+                self._ids_hi,
+                self._scores,
+                self._valid,
+                self._accessed,
+                self._in_cap,
+                self._weights,
+                q,
+                q_hi,
+                c,
+                c_hi,
+                cw,
+                *gates,
+                backend=self.backend,
+                interpret=self.interpret,
+                **self.policy.kernel_constants(),
+            )
+        else:
+            (
+                self._ids,
+                self._scores,
+                self._valid,
+                self._accessed,
+                w2,
+                hit_d,
+                hit_slot_d,
+                placed_d,
+                slot_pos_d,
+                _n_placed,
+                n_valid_d,
+            ) = ops.fused_step_batch(
+                self._ids,
+                self._scores,
+                self._valid,
+                self._accessed,
+                self._in_cap,
+                self._weights,
+                q,
+                c,
+                cw,
+                *gates,
+                backend=self.backend,
+                interpret=self.interpret,
+                **self.policy.kernel_constants(),
+            )
         tel.end(_launch_sp)
         if w2 is not None:
             self._weights = w2
@@ -621,18 +712,19 @@ class DeviceEngine:
         placed_m = packed[:, 2 * M : 2 * M + K] != 0
         slot_pos = packed[:, 2 * M + K : 2 * M + K + C]
         n_valid = packed[:, -1].astype(np.int64)
-        self.transfers["h2d"] += 6 if cw is not None else 5
-        self.transfers["h2d_bytes"] += q.nbytes + c.nbytes + 3 * P + (
-            cw.nbytes if cw is not None else 0
+        h2d_bytes = (
+            q.nbytes + c.nbytes + 3 * P
+            + (cw.nbytes if cw is not None else 0)
+            + (q_hi.nbytes + c_hi.nbytes if self.wide else 0)
         )
+        self.transfers["h2d"] += (
+            (5 if cw is None else 6) + (2 if self.wide else 0)
+        )
+        self.transfers["h2d_bytes"] += h2d_bytes
         self.transfers["d2h"] += 1
         self.transfers["d2h_bytes"] += packed.nbytes
         if tel.enabled():
-            tel.count(
-                "device.h2d_bytes",
-                q.nbytes + c.nbytes + 3 * P
-                + (cw.nbytes if cw is not None else 0),
-            )
+            tel.count("device.h2d_bytes", h2d_bytes)
             tel.count("device.d2h_bytes", packed.nbytes)
 
         # --- probe bookkeeping (PrefetchEngine.lookup) ----------------- #
@@ -729,9 +821,17 @@ class DeviceEngine:
             raise ValueError(
                 f"touched must be (P, Mt) with P={P}, got {touched.shape}"
             )
-        if touched.size and int(touched.max()) >= np.iinfo(np.int32).max:
+        max_in = int(touched.max()) if touched.size else -1
+        if self.wide:
+            if not ops.wide_id_eligible(max_in):
+                raise ValueError(
+                    "device engine ids exceed the wide-id bound "
+                    f"(max id {max_in} > {ops.WIDE_ID_MAX})"
+                )
+        elif not ops.int32_id_eligible(max_in):
             raise ValueError("device engine needs node ids < 2^31")
-        touched = touched.astype(np.int32, copy=False)
+        if not self.wide:
+            touched = touched.astype(np.int32, copy=False)
         if touched.shape[1] == 0:
             # Final drained launch: keep the (P, Mt>=1) shape the sort
             # prologue needs; an all(-1) row dedups to zero queries.
@@ -742,7 +842,12 @@ class DeviceEngine:
             | (do_rep.astype(np.int32) << 1)
             | (np.asarray(active_probe, dtype=bool).astype(np.int32) << 2)
         )
-        aug = np.concatenate([touched, gates[:, None]], axis=1)
+        if self.wide:
+            # Wide ingest block: [lo | hi | gates], still one upload.
+            t_hi, t_lo = ops.split_ids(touched)
+            aug = np.concatenate([t_lo, t_hi, gates[:, None]], axis=1)
+        else:
+            aug = np.concatenate([touched, gates[:, None]], axis=1)
         self.transfers["h2d"] += 1
         self.transfers["h2d_bytes"] += aug.nbytes
         tel.count("device.h2d_bytes", aug.nbytes)
@@ -753,35 +858,72 @@ class DeviceEngine:
 
         Kc = self._cand_ready.shape[1]
         _launch_sp = tel.begin("device.launch", plane="device")
-        (
-            self._ids,
-            self._scores,
-            self._valid,
-            self._accessed,
-            w2,
-            payload2,
-            cand_next,
-            packed_d,
-            counters_d,
-        ) = ops.fused_frontier_step_batch(
-            self._ids,
-            self._scores,
-            self._valid,
-            self._accessed,
-            self._in_cap,
-            self._weights,
-            aug,
-            self._part_of_dev,
-            self._cand_ready,
-            self._node_w_dev,
-            self.payload,
-            table,
-            loc,
-            cand_cap=self.cand_cap,
-            backend=self.backend,
-            interpret=self.interpret,
-            **self.policy.kernel_constants(),
-        )
+        if self.wide:
+            (
+                self._ids,
+                self._ids_hi,
+                self._scores,
+                self._valid,
+                self._accessed,
+                w2,
+                payload2,
+                cand_next,
+                cand_next_hi,
+                packed_d,
+                counters_d,
+            ) = ops.fused_frontier_step_wide_batch(
+                self._ids,
+                self._ids_hi,
+                self._scores,
+                self._valid,
+                self._accessed,
+                self._in_cap,
+                self._weights,
+                aug,
+                self._part_of_dev,
+                self._cand_ready,
+                self._cand_ready_hi,
+                self._node_w_dev,
+                self.payload,
+                table,
+                loc,
+                cand_cap=self.cand_cap,
+                id_base=self.id_base,
+                backend=self.backend,
+                interpret=self.interpret,
+                **self.policy.kernel_constants(),
+            )
+        else:
+            cand_next_hi = None
+            (
+                self._ids,
+                self._scores,
+                self._valid,
+                self._accessed,
+                w2,
+                payload2,
+                cand_next,
+                packed_d,
+                counters_d,
+            ) = ops.fused_frontier_step_batch(
+                self._ids,
+                self._scores,
+                self._valid,
+                self._accessed,
+                self._in_cap,
+                self._weights,
+                aug,
+                self._part_of_dev,
+                self._cand_ready,
+                self._node_w_dev,
+                self.payload,
+                table,
+                loc,
+                cand_cap=self.cand_cap,
+                backend=self.backend,
+                interpret=self.interpret,
+                **self.policy.kernel_constants(),
+            )
         tel.end(_launch_sp)
         if w2 is not None:
             self._weights = w2
@@ -792,12 +934,11 @@ class DeviceEngine:
             # Rotate the device candidate buffers and hand back only the
             # (P, 4) counters, still on device; the host mirrors are not
             # maintained (no per-step bookkeeping on the cadence path).
-            self._cand_ready = (
-                self._cand_pending
-                if self._cand_pending is not None
-                else self._cand_ready
-            )
+            if self._cand_pending is not None:
+                self._cand_ready = self._cand_pending
+                self._cand_ready_hi = self._cand_pending_hi
             self._cand_pending = cand_next
+            self._cand_pending_hi = cand_next_hi
             return counters_d
 
         with tel.span("device.readback", plane="device"):
@@ -805,12 +946,20 @@ class DeviceEngine:
         self.transfers["d2h"] += 1
         self.transfers["d2h_bytes"] += packed.nbytes
         tel.count("device.d2h_bytes", packed.nbytes)
-        Mt = aug.shape[1] - 1
         C = self.max_capacity
-        sk = packed[:, :Mt]
-        code = packed[:, Mt : 2 * Mt]
-        placed_m = packed[:, 2 * Mt : 2 * Mt + Kc] != 0
-        slot_pos = packed[:, 2 * Mt + Kc : 2 * Mt + Kc + C]
+        if self.wide:
+            # Wide packed: [sk_hi | sk_lo | code | placed | slot_pos | n].
+            Mt = (aug.shape[1] - 1) // 2
+            sk = ops.join_ids(packed[:, :Mt], packed[:, Mt : 2 * Mt])
+            code = packed[:, 2 * Mt : 3 * Mt]
+            placed_m = packed[:, 3 * Mt : 3 * Mt + Kc] != 0
+            slot_pos = packed[:, 3 * Mt + Kc : 3 * Mt + Kc + C]
+        else:
+            Mt = aug.shape[1] - 1
+            sk = packed[:, :Mt]
+            code = packed[:, Mt : 2 * Mt]
+            placed_m = packed[:, 2 * Mt : 2 * Mt + Kc] != 0
+            slot_pos = packed[:, 2 * Mt + Kc : 2 * Mt + Kc + C]
         n_valid = packed[:, -1].astype(np.int64)
 
         # --- probe bookkeeping (lookup over the deduped remote sets) --- #
@@ -856,8 +1005,10 @@ class DeviceEngine:
         kc_next = cand_next.shape[1]
         if self._cand_pending is not None:
             self._cand_ready = self._cand_pending
+            self._cand_ready_hi = self._cand_pending_hi
             self._cand_ready_ids = self._cand_pending_ids
         self._cand_pending = cand_next
+        self._cand_pending_hi = cand_next_hi
         self._cand_pending_ids = [m[:kc_next] for m in missed]
 
         return FrontierStepOut(
@@ -941,7 +1092,14 @@ class DeviceEngine:
         """Write the device state back into the numpy twin (end of a
         device-mode run: snapshots, state-equality tests, reuse)."""
         eng = self.engine
-        eng.ids = np.asarray(self._ids).astype(np.int64)
+        if self.wide:
+            from ..kernels import ops
+
+            eng.ids = ops.join_ids(
+                np.asarray(self._ids_hi), np.asarray(self._ids)
+            )
+        else:
+            eng.ids = np.asarray(self._ids).astype(np.int64)
         eng.scores = np.asarray(self._scores)
         eng.valid = np.asarray(self._valid)
         eng.accessed = np.asarray(self._accessed)
@@ -953,7 +1111,9 @@ class DeviceEngine:
             # scoring); reconstruct it instead of tracking it on device.
             eng.weights = np.where(
                 eng.valid,
-                self._node_weights[np.maximum(eng.ids, 0)].astype(np.float32),
+                self._node_weights[
+                    np.maximum(eng.ids - self.id_base, 0)
+                ].astype(np.float32),
                 self._weights0,
             ).astype(np.float32)
         if self.payload is not None:

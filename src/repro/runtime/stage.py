@@ -158,11 +158,14 @@ class CommitResult:
 
 
 def _count_fetch(
-    missed, placed, part_of, num_pes, miss_comm, replaced, feature_dim, feature_bytes
+    missed, placed, part_of, num_pes, miss_comm, replaced, feature_dim,
+    feature_bytes, id_base=0,
 ):
     """Telemetry-on-only fetch accounting: per-PE node/byte counters and
     the per-(PE, home) byte matrix. Observational — reads the same
-    exact streams the time engine already priced, never alters them."""
+    exact streams the time engine already priced, never alters them.
+    ``missed``/``placed`` carry global node ids; ``part_of`` is
+    local-indexed, so ids are rebased by ``id_base`` before the lookup."""
     row_bytes = feature_dim * feature_bytes
     miss_comm = np.asarray(miss_comm, dtype=np.float64)
     replaced = np.asarray(replaced, dtype=np.float64)
@@ -174,7 +177,9 @@ def _count_fetch(
         for p in range(num_pes):
             ids = np.concatenate([missed[p], placed[p]])
             if len(ids):
-                by_home[p] = np.bincount(part_of[ids], minlength=num_pes)
+                by_home[p] = np.bincount(
+                    part_of[ids - id_base], minlength=num_pes
+                )
         tel.count("fetch.bytes_by_home", by_home * row_bytes)
 
 
@@ -303,6 +308,7 @@ class FetchStage:
             _count_fetch(
                 missed, engine.last_placed, self.part_of, engine.num_pes,
                 comm, replaced, self.feature_dim, self.feature_bytes,
+                id_base=engine.id_base,
             )
         t = self.time_engine.step(
             build_step_comm(
@@ -311,6 +317,7 @@ class FetchStage:
                 self.part_of,
                 engine.num_pes,
                 self.time_engine.needs_pairs,
+                id_base=engine.id_base,
             ),
             stalls,
         )
@@ -510,6 +517,7 @@ class FusedFetchStage:
             _count_fetch(
                 missed, dev.last_placed, self.part_of, dev.num_pes,
                 comm, out.replaced, self.feature_dim, self.feature_bytes,
+                id_base=dev.id_base,
             )
         t = self.time_engine.step(
             build_step_comm(
@@ -518,6 +526,7 @@ class FusedFetchStage:
                 self.part_of,
                 dev.num_pes,
                 self.time_engine.needs_pairs,
+                id_base=dev.id_base,
             ),
             stalls,
         )
@@ -576,6 +585,7 @@ class FusedFetchStage:
             _count_fetch(
                 missed, dev.last_placed, self.part_of, dev.num_pes,
                 comm, out.replaced, self.feature_dim, self.feature_bytes,
+                id_base=dev.id_base,
             )
         t = self.time_engine.step(
             build_step_comm(
@@ -584,6 +594,7 @@ class FusedFetchStage:
                 self.part_of,
                 dev.num_pes,
                 self.time_engine.needs_pairs,
+                id_base=dev.id_base,
             ),
             stalls,
         )

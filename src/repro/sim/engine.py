@@ -71,12 +71,15 @@ def build_step_comm(
     part_of: np.ndarray | None,
     num_parts: int,
     needs_pairs: bool,
+    id_base: int = 0,
 ) -> StepComm:
     """Assemble one step's :class:`StepComm` from per-PE node-id lists.
 
     ``missed[p]`` / ``placed[p]`` are the exact node ids PE p fetched on
     miss / admitted into its buffer this round. The per-home split is
     one flattened bincount per stream, keyed ``trainer_row * P + home``.
+    Node ids are global (``id_base`` + local index); ``part_of`` is
+    local-indexed, so ids are rebased before the home lookup.
     """
     P = num_parts
     miss = np.array([len(m) for m in missed], dtype=np.int64)
@@ -95,7 +98,7 @@ def build_step_comm(
             else np.array([], dtype=np.int64)
         )
         return np.bincount(
-            rows * P + part_of[nodes], minlength=P * P
+            rows * P + part_of[nodes - id_base], minlength=P * P
         ).reshape(P, P)
 
     return StepComm(miss, repl, pairs_of(missed), pairs_of(placed))

@@ -74,6 +74,11 @@ class FeatureStore:
     use_kernel:
         Serve gathers through ``repro.kernels.ops.gather_rows_batch``
         (per-home routing into the stacked shard view).
+    id_base:
+        Global-id offset of the graph: gather/lookup ids are global
+        (``id_base`` + local row), rebased to local before indexing
+        ``loc``. The device view stays local-indexed — wide-id kernels
+        rebase inside the launch with the same static ``id_base``.
     """
 
     def __init__(
@@ -83,6 +88,7 @@ class FeatureStore:
         num_parts: int | None = None,
         backend: str = "auto",
         use_kernel: bool = False,
+        id_base: int = 0,
     ):
         features = np.asarray(features, dtype=np.float32)
         if features.ndim != 2:
@@ -99,6 +105,7 @@ class FeatureStore:
             raise ValueError("part_of references a partition >= num_parts")
         self.num_parts = K
         self.num_nodes, self.feature_dim = features.shape
+        self.id_base = int(id_base)
         counts = np.bincount(part_of, minlength=K)
         self.shard_sizes = counts.astype(np.int64)
         self.n_max = int(counts.max(initial=0)) or 1
@@ -134,6 +141,7 @@ class FeatureStore:
     @classmethod
     def for_partitions(cls, parts, **kwargs) -> "FeatureStore":
         """Build from a :class:`repro.graph.partition.Partitioned`."""
+        kwargs.setdefault("id_base", int(parts.graph.id_base))
         return cls(
             parts.graph.features, parts.part_of, parts.num_parts, **kwargs
         )
@@ -149,7 +157,8 @@ class FeatureStore:
         return self._flat.reshape(self.num_parts, self.n_max, self.feature_dim)
 
     def home_of(self, ids) -> np.ndarray:
-        return self._loc[np.asarray(ids, dtype=np.int64)] // self.n_max
+        local = np.asarray(ids, dtype=np.int64) - self.id_base
+        return self._loc[local] // self.n_max
 
     def _device_table(self):
         """Flat table as a jax array, row-sharded over the data mesh
@@ -179,7 +188,9 @@ class FeatureStore:
         if self._dev_view is None:
             import jax.numpy as jnp
 
-            if self._flat.shape[0] >= np.iinfo(np.int32).max:
+            from ..kernels import ops
+
+            if not ops.int32_id_eligible(self._flat.shape[0] - 1):
                 raise ValueError(
                     "feature store flat table has >= 2^31 rows; "
                     "device view indexes rows as int32"
@@ -193,12 +204,15 @@ class FeatureStore:
     # ------------------------------------------------------------------ #
     def _rows_of(self, ids: np.ndarray) -> np.ndarray:
         flat = ids.reshape(-1).astype(np.int64, copy=False)
+        if self.id_base:
+            flat = flat - np.int64(self.id_base)
         if flat.size:
             lo, hi = int(flat.min()), int(flat.max())
             if lo < 0 or hi >= self.num_nodes:
                 raise IndexError(
-                    f"node id out of range [0, {self.num_nodes}): "
-                    f"min {lo}, max {hi}"
+                    f"node id out of range "
+                    f"[{self.id_base}, {self.id_base + self.num_nodes}): "
+                    f"min {lo + self.id_base}, max {hi + self.id_base}"
                 )
         return self._loc[flat]
 
@@ -309,7 +323,7 @@ class FeatureStore:
         """Fault injection: corrupt one shard row in place (the golden
         drift negative test — a poked store must surface in the trace's
         ``feat_sums`` stream at the first step that fetches the node)."""
-        row = self._loc[int(node_id)]
+        row = self._loc[int(node_id) - self.id_base]
         self._flat[row] += np.float32(delta)
         self._tables = None
         self._dev_view = None

@@ -13,11 +13,17 @@ stream" — the modeled clock anchored to measured reality.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 __all__ = ["Calibration", "fit_alpha_bw", "calibrate_from_trace", "calibrate_from_session"]
+
+# One process-wide warning when a fit degenerates (non-positive slope →
+# link_bw = inf); sweeps fitting hundreds of cells should not drown in
+# repeats. Reset is test-only: ``_warned_degenerate_fit = False``.
+_warned_degenerate_fit = False
 
 
 @dataclass
@@ -71,6 +77,16 @@ def fit_alpha_bw(nbytes, seconds) -> Calibration:
         )
     slope, intercept = np.polyfit(x, y, 1)
     if slope <= 0:
+        global _warned_degenerate_fit
+        if not _warned_degenerate_fit:
+            _warned_degenerate_fit = True
+            warnings.warn(
+                "calibration fit has a non-positive slope (measured "
+                "seconds do not grow with bytes); degenerating to "
+                "link_bw=inf with alpha=mean(seconds)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
         link_bw = float("inf")
         alpha = float(y.mean())
     else:

@@ -49,9 +49,11 @@ def controller_validity(controllers) -> tuple[np.ndarray, np.ndarray]:
     return valid, invalid
 
 
-def _pairs_of(node_lists, part_of: np.ndarray, P: int) -> np.ndarray:
+def _pairs_of(node_lists, part_of: np.ndarray, P: int, id_base: int = 0) -> np.ndarray:
     """(P, P) home-partition split of per-PE node-id lists (one bincount,
-    keyed ``trainer_row * P + home`` — mirrors ``sim.build_step_comm``)."""
+    keyed ``trainer_row * P + home`` — mirrors ``sim.build_step_comm``).
+    Ids are global; ``part_of`` is local-indexed, hence the ``id_base``
+    rebase before the home lookup."""
     lengths = [len(x) for x in node_lists]
     rows = np.repeat(np.arange(P, dtype=np.int64), lengths)
     nodes = (
@@ -59,7 +61,9 @@ def _pairs_of(node_lists, part_of: np.ndarray, P: int) -> np.ndarray:
         if sum(lengths)
         else np.array([], dtype=ID_DTYPE)
     )
-    return np.bincount(rows * P + part_of[nodes], minlength=P * P).reshape(P, P)
+    return np.bincount(
+        rows * P + part_of[nodes - id_base], minlength=P * P
+    ).reshape(P, P)
 
 
 class TraceRecorder:
@@ -77,9 +81,11 @@ class TraceRecorder:
         epochs: int = 0,
         mode: str = "async",
         variant: str = "",
+        id_base: int = 0,
     ):
         self.num_pes = int(num_pes)
         self.part_of = part_of
+        self.id_base = int(id_base)
         self.config = dict(config) if config else {}
         self.capacities = [int(c) for c in capacities] if capacities is not None else []
         self.feature_dim = int(feature_dim)
@@ -132,6 +138,7 @@ class TraceRecorder:
             epochs=trainer.epochs,
             mode=trainer.mode,
             variant=trainer.variant,
+            id_base=int(trainer.graph.id_base),
         )
 
     # ------------------------------------------------------------------ #
@@ -224,8 +231,8 @@ class TraceRecorder:
             if arr.shape != (P,):
                 raise ValueError(f"{name}: shape {arr.shape} != ({P},)")
         if self.part_of is not None:
-            row["miss_pairs"] = _pairs_of(missed, self.part_of, P)
-            row["repl_pairs"] = _pairs_of(placed, self.part_of, P)
+            row["miss_pairs"] = _pairs_of(missed, self.part_of, P, self.id_base)
+            row["repl_pairs"] = _pairs_of(placed, self.part_of, P, self.id_base)
         # Everything validated — mutate atomically.
         self._has_store = has_store
         for name, lists in ragged_in.items():

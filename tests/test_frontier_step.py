@@ -32,6 +32,7 @@ import pytest
 
 from repro.gnn import DistributedTrainer
 from repro.graph import generate, partition_graph
+from repro.kernels import ops
 from repro.runtime.engine import DeviceEngine, PrefetchEngine
 from repro.store import FeatureStore
 
@@ -282,6 +283,8 @@ def _log_digest(result):
 
 class TestTrainerIntegration:
     def test_int64_graph_falls_back_to_staged(self, parts, monkeypatch):
+        # ids past int32 now ride the wide (hi, lo) device path; only a
+        # universe beyond WIDE_ID_MAX (~2^61) still degrades to staged.
         t_ref = DistributedTrainer(parts, variant="fixed", **COMMON)
         r_ref = t_ref.run()
         t_dev = DistributedTrainer(
@@ -289,11 +292,35 @@ class TestTrainerIntegration:
         )
         monkeypatch.setattr(
             type(t_dev.graph), "num_nodes",
-            property(lambda self: 2**31 + 5),
+            property(lambda self: ops.WIDE_ID_MAX + 2),
         )
         with pytest.warns(RuntimeWarning, match="int32"):
             r_dev = t_dev.run()
         assert _log_digest(r_dev) == _log_digest(r_ref)
+
+    def test_int64_graph_now_runs_on_device(self, parts):
+        """The bug this PR fixes: a graph whose global ids cross 2^31
+        used to bounce device=... to the staged pipeline. It now runs
+        device-resident (wide mode) with bit-identical streams and no
+        fallback warning or counter."""
+        import warnings
+
+        t_ref = DistributedTrainer(parts, variant="fixed", **COMMON)
+        r_ref = t_ref.run()
+        g_big = parts.graph.rebase(2**31 + 13)
+        parts_big = partition_graph(g_big, parts.num_parts)
+        t_dev = DistributedTrainer(
+            parts_big, variant="fixed", device="jnp", telemetry=True,
+            **COMMON,
+        )
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            r_dev = t_dev.run()
+        assert _log_digest(r_dev) == _log_digest(r_ref)
+        assert (
+            "device.fallback_int64"
+            not in t_dev.last_telemetry.registry.names()
+        )
 
     @pytest.mark.parametrize("variant", ["distdgl", "fixed", "massivegnn"])
     def test_readback_cadence_parity(self, parts, variant):

@@ -317,11 +317,16 @@ class TestContract:
         assert not tel.enabled()  # deactivated after the run
 
     def test_int64_fallback_counts_and_warns_once(self, parts, monkeypatch):
+        from repro.kernels import ops
+
         t = DistributedTrainer(
             parts, device="jnp", telemetry=True, **COMMON
         )
+        # ids past 2^31 now run device-resident in wide mode; only a
+        # universe beyond WIDE_ID_MAX still takes the staged fallback.
         monkeypatch.setattr(
-            type(t.graph), "num_nodes", property(lambda self: 2**31 + 5)
+            type(t.graph), "num_nodes",
+            property(lambda self: ops.WIDE_ID_MAX + 2),
         )
         with pytest.warns(RuntimeWarning, match="int32"):
             t.run()
@@ -486,9 +491,39 @@ class TestCalibration:
 
     def test_noise_degenerates_gracefully(self):
         # Negative trend: slope <= 0 => infinite bandwidth, mean alpha
-        cal = fit_alpha_bw([100, 200, 300], [3e-3, 2e-3, 1e-3])
+        from repro.telemetry import calibrate as _cal_mod
+
+        _cal_mod._warned_degenerate_fit = False
+        with pytest.warns(RuntimeWarning, match="non-positive slope"):
+            cal = fit_alpha_bw([100, 200, 300], [3e-3, 2e-3, 1e-3])
         assert cal.link_bw == float("inf")
         assert cal.alpha == pytest.approx(2e-3)
+
+    def test_degenerate_fit_warns_once(self):
+        import warnings as _warnings
+
+        from repro.telemetry import calibrate as _cal_mod
+
+        _cal_mod._warned_degenerate_fit = False
+        with pytest.warns(RuntimeWarning, match="non-positive slope"):
+            fit_alpha_bw([100, 200, 300], [3e-3, 2e-3, 1e-3])
+        # second degenerate fit: same clamp, no repeat warning
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error", RuntimeWarning)
+            cal = fit_alpha_bw([100, 200, 300], [5e-3, 4e-3, 3e-3])
+        assert cal.link_bw == float("inf")
+        assert cal.alpha == pytest.approx(4e-3)
+
+    def test_healthy_fit_does_not_warn(self):
+        import warnings as _warnings
+
+        from repro.telemetry import calibrate as _cal_mod
+
+        _cal_mod._warned_degenerate_fit = False
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error", RuntimeWarning)
+            cal = fit_alpha_bw([100, 200, 300], [1e-3, 2e-3, 3e-3])
+        assert np.isfinite(cal.link_bw)
 
     def test_to_time_model(self):
         cal = Calibration(

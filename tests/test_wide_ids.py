@@ -1,0 +1,458 @@
+"""Wide (two-word) node-id encoding: the int32 ceiling lift.
+
+The device-resident hot path used to be gated on node ids fitting in
+int32 lanes — any graph whose id universe crossed 2^31 silently bounced
+``DistributedTrainer(device=...)`` back to the staged pipeline. These
+tests pin the lift:
+
+* **eligibility boundaries** — ``int32_id_eligible`` admits exactly
+  ``[0, 2^31 - 2]`` (the padding sentinel ``int32.max`` is *excluded*,
+  the off-by-one this PR's sentinel-collision fix closes) and
+  ``wide_id_eligible`` admits up to ``WIDE_ID_MAX`` (~2^61);
+* **word-pair codec** — ``split_ids`` / ``join_ids`` roundtrip the full
+  wide range, map negative sentinels to ``(v, v)`` pairs, and preserve
+  numeric order lexicographically;
+* **kernel parity** — the wide dispatchers reproduce the narrow kernels
+  under a base shift, bit-identically, on both backends (deterministic
+  + hypothesis-generated scenarios);
+* **end-to-end** — a trainer on a graph rebased above 2^31 runs
+  device-resident with streams bit-identical to the id_base=0 run, for
+  every controller x async/sync, and its captured trace (the synthetic
+  big-id golden) matches the narrow trace array-for-array.
+"""
+
+import copy
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.gnn import DistributedTrainer
+from repro.graph import generate, partition_graph
+from repro.kernels import ops
+from repro.runtime.engine import DeviceEngine, PrefetchEngine
+from repro.store import FeatureStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover — conftest fails CI first
+    st = None
+
+BASE = 2**31 + 1000  # smallest interesting wide base: just past int32
+BACKENDS = ("jnp", "pallas")
+
+
+# ---------------------------------------------------------------------- #
+# eligibility boundaries (sentinel-exclusive, satellite regression)
+# ---------------------------------------------------------------------- #
+class TestEligibility:
+    def test_int32_boundary(self):
+        assert ops.int32_id_eligible(2**31 - 2)
+        assert not ops.int32_id_eligible(2**31 - 1)  # == pad sentinel
+        assert not ops.int32_id_eligible(2**31)
+
+    def test_sentinel_is_excluded(self):
+        # int32.max is frontier_pack's padding value; a real node with
+        # that id would alias padding inside the kernels.
+        assert ops.INT32_ID_MAX == ops.INT32_SENTINEL - 1
+        assert not ops.int32_id_eligible(ops.INT32_SENTINEL)
+
+    def test_wide_boundary(self):
+        assert ops.wide_id_eligible(2**31)
+        assert ops.wide_id_eligible(ops.WIDE_ID_MAX)
+        assert not ops.wide_id_eligible(ops.WIDE_ID_MAX + 1)
+
+    def test_wide_contains_narrow(self):
+        for v in (0, 1, 2**31 - 2):
+            assert ops.int32_id_eligible(v) and ops.wide_id_eligible(v)
+
+
+# ---------------------------------------------------------------------- #
+# (hi, lo) codec
+# ---------------------------------------------------------------------- #
+class TestSplitJoin:
+    def test_roundtrip_spanning_values(self):
+        vals = np.array(
+            [0, 1, 2**30 - 1, 2**30, 2**31 - 2, 2**31 - 1, 2**31,
+             2**40 + 17, ops.WIDE_ID_MAX],
+            dtype=np.int64,
+        )
+        hi, lo = ops.split_ids(vals)
+        assert hi.dtype == np.int32 and lo.dtype == np.int32
+        np.testing.assert_array_equal(ops.join_ids(hi, lo), vals)
+
+    def test_negative_sentinels_map_to_pair(self):
+        hi, lo = ops.split_ids(np.array([-1, -2], dtype=np.int64))
+        np.testing.assert_array_equal(hi, [-1, -2])
+        np.testing.assert_array_equal(lo, [-1, -2])
+        np.testing.assert_array_equal(
+            ops.join_ids(hi, lo), np.array([-1, -2], dtype=np.int64)
+        )
+
+    def test_pair_order_is_numeric_order(self):
+        rng = np.random.default_rng(7)
+        vals = rng.integers(0, ops.WIDE_ID_MAX, 512, dtype=np.int64)
+        hi, lo = ops.split_ids(vals)
+        by_pair = np.lexsort((lo.astype(np.int64), hi.astype(np.int64)))
+        np.testing.assert_array_equal(
+            vals[by_pair], np.sort(vals, kind="stable")
+        )
+
+
+# ---------------------------------------------------------------------- #
+# wide dispatcher parity under a base shift
+# ---------------------------------------------------------------------- #
+def _shift_where_valid(arr, base):
+    out = np.asarray(arr, dtype=np.int64).copy()
+    out[out >= 0] += base
+    return out
+
+
+class TestWideKernelParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_fused_step_wide_matches_shifted_narrow(self, backend):
+        P, C, M = 3, 5, 4
+        rng = np.random.default_rng(1)
+        ids = rng.integers(0, 200, (P, C)).astype(np.int64)
+        valid = rng.random((P, C)) < 0.8
+        ids[~valid] = -1
+        scores = rng.random((P, C)).astype(np.float32)
+        accessed = rng.random((P, C)) < 0.3
+        in_cap = np.ones((P, C), bool)
+        q = rng.integers(0, 200, (P, M)).astype(np.int64)
+        c = rng.integers(0, 200, (P, M)).astype(np.int64)
+        gate = np.ones(P, bool)
+
+        narrow = ops.fused_step_batch(
+            ids, scores, valid, accessed, in_cap, None,
+            q, c, None, gate, gate, gate, backend=backend,
+        )
+        ids_hi, ids_lo = ops.split_ids(_shift_where_valid(ids, BASE))
+        q_hi, q_lo = ops.split_ids(_shift_where_valid(q, BASE))
+        c_hi, c_lo = ops.split_ids(_shift_where_valid(c, BASE))
+        wide = ops.fused_step_wide_batch(
+            ids_lo, ids_hi, scores, valid, accessed, in_cap, None,
+            q_lo, q_hi, c_lo, c_hi, None, gate, gate, gate,
+            backend=backend,
+        )
+        w_ids = ops.join_ids(np.asarray(wide[1]), np.asarray(wide[0]))
+        np.testing.assert_array_equal(
+            w_ids, _shift_where_valid(np.asarray(narrow[0]), BASE)
+        )
+        # every non-id output stream is base-shift invariant
+        for n_out, w_out in zip(narrow[1:], wide[2:]):
+            if n_out is None or w_out is None:
+                assert n_out is w_out
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(n_out), np.asarray(w_out)
+            )
+
+    def test_fused_step_batch_routes_big_ids_wide(self):
+        """The dispatcher's own int64 routing: ids past 2^31 produce
+        the same streams as the shifted narrow run, on both backends."""
+        P, C, M = 2, 4, 3
+        rng = np.random.default_rng(2)
+        ids = rng.integers(0, 100, (P, C)).astype(np.int64)
+        q = rng.integers(0, 100, (P, M)).astype(np.int64)
+        c = rng.integers(0, 100, (P, M)).astype(np.int64)
+        state = dict(
+            scores=np.ones((P, C), np.float32),
+            valid=np.ones((P, C), bool),
+            accessed=np.zeros((P, C), bool),
+            in_cap=np.ones((P, C), bool),
+        )
+        gate = np.ones(P, bool)
+
+        def run(i, qq, cc, backend):
+            return ops.fused_step_batch(
+                i, state["scores"], state["valid"], state["accessed"],
+                state["in_cap"], None, qq, cc, None, gate, gate, gate,
+                backend=backend,
+            )
+
+        for backend in BACKENDS:
+            narrow = run(ids, q, c, backend)
+            big = run(ids + BASE, q + BASE, c + BASE, backend)
+            np.testing.assert_array_equal(
+                np.asarray(big[0]),
+                np.asarray(narrow[0]).astype(np.int64) + BASE,
+            )
+            for n_out, b_out in zip(narrow[1:], big[1:]):
+                if n_out is None or b_out is None:
+                    assert n_out is b_out
+                    continue
+                np.testing.assert_array_equal(
+                    np.asarray(n_out), np.asarray(b_out)
+                )
+
+    def test_frontier_unique_routes_big_keys_wide(self):
+        P, M = 3, 8
+        rng = np.random.default_rng(3)
+        keys = np.sort(rng.integers(0, 40, (P, M)), axis=1).astype(np.int64)
+        remote = rng.random((P, M)) < 0.5
+        narrow = ops.frontier_unique_batch(keys, remote)
+        wide = ops.frontier_unique_batch(keys + BASE, remote)
+        for n_out, w_out in zip(narrow, wide):
+            np.testing.assert_array_equal(np.asarray(n_out), np.asarray(w_out))
+
+    def test_frontier_keys_beyond_wide_bound_raise(self):
+        keys = np.array([[ops.WIDE_ID_MAX + 1]], dtype=np.int64)
+        with pytest.raises(ValueError, match="wide-id"):
+            ops.frontier_unique_batch(keys, np.ones((1, 1), bool))
+
+
+if st is not None:
+
+    @st.composite
+    def wide_step_scenarios(draw):
+        P = draw(st.integers(min_value=1, max_value=3))
+        C = draw(st.integers(min_value=1, max_value=5))
+        M = draw(st.integers(min_value=1, max_value=5))
+        seed = draw(st.integers(min_value=0, max_value=2**16))
+        base = draw(
+            st.sampled_from([2**31, 2**31 + 1000, 2**40, 2**55 + 3])
+        )
+        backend = draw(st.sampled_from(BACKENDS))
+        return P, C, M, seed, base, backend
+
+    class TestWideHypothesis:
+        @settings(max_examples=25, deadline=None)
+        @given(wide_step_scenarios())
+        def test_base_shift_invariance(self, scenario):
+            P, C, M, seed, base, backend = scenario
+            rng = np.random.default_rng(seed)
+            ids = rng.integers(0, 50, (P, C)).astype(np.int64)
+            valid = rng.random((P, C)) < 0.7
+            ids[~valid] = -1
+            scores = (rng.random((P, C)) * 2).astype(np.float32)
+            accessed = rng.random((P, C)) < 0.4
+            in_cap = np.ones((P, C), bool)
+            q = rng.integers(0, 50, (P, M)).astype(np.int64)
+            c = rng.integers(0, 50, (P, M)).astype(np.int64)
+            gates = tuple(
+                (rng.random(P) < 0.8) for _ in range(3)
+            )
+
+            def run(i, qq, cc):
+                return ops.fused_step_batch(
+                    i, scores, valid, accessed, in_cap, None,
+                    qq, cc, None, *gates, backend=backend,
+                )
+
+            narrow = run(ids, q, c)
+            big = run(
+                _shift_where_valid(ids, base), q + base, c + base
+            )
+            np.testing.assert_array_equal(
+                np.asarray(big[0]),
+                _shift_where_valid(np.asarray(narrow[0]), base),
+            )
+            for n_out, b_out in zip(narrow[1:], big[1:]):
+                if n_out is None or b_out is None:
+                    assert n_out is b_out
+                    continue
+                np.testing.assert_array_equal(
+                    np.asarray(n_out), np.asarray(b_out)
+                )
+
+
+# ---------------------------------------------------------------------- #
+# DeviceEngine wide mode
+# ---------------------------------------------------------------------- #
+class TestDeviceEngineWide:
+    def _engines(self):
+        narrow_eng = PrefetchEngine([4, 4], policy="frequency")
+        wide_eng = PrefetchEngine([4, 4], policy="frequency", id_base=BASE)
+        return narrow_eng, wide_eng
+
+    def test_auto_upgrades_on_id_base(self):
+        _, wide_eng = self._engines()
+        dev = DeviceEngine(wide_eng, backend="jnp")
+        assert dev.wide
+        dev_n = DeviceEngine(PrefetchEngine([4, 4]), backend="jnp")
+        assert not dev_n.wide
+
+    def test_rejects_beyond_wide_bound(self):
+        eng = PrefetchEngine([4], id_base=ops.WIDE_ID_MAX + 1)
+        with pytest.raises(ValueError, match="wide-id"):
+            DeviceEngine(eng, backend="jnp")
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_fused_step_parity_with_narrow(self, backend):
+        narrow_eng, wide_eng = self._engines()
+        empty = np.array([], dtype=np.int64)
+        seed_n = np.array([3, 5, 9], dtype=np.int64)
+        for p in range(2):
+            narrow_eng.insert(p, seed_n)
+            wide_eng.insert(p, seed_n + BASE)
+        dev_n = DeviceEngine(copy.deepcopy(narrow_eng), backend=backend)
+        dev_w = DeviceEngine(copy.deepcopy(wide_eng), backend=backend)
+        on = np.ones(2, bool)
+        q = [np.array([3, 7], dtype=np.int64), empty]
+        c = [np.array([7, 11], dtype=np.int64), np.array([2], dtype=np.int64)]
+        qb = [x + BASE for x in q]
+        cb = [x + BASE for x in c]
+        out_n = dev_n.fused_step(q, c, on, on, on)
+        out_w = dev_w.fused_step(qb, cb, on, on, on)
+        for p in range(2):
+            np.testing.assert_array_equal(
+                out_w.missed[p], out_n.missed[p] + BASE
+            )
+            np.testing.assert_array_equal(
+                out_w.hit_masks[p], out_n.hit_masks[p]
+            )
+        np.testing.assert_array_equal(out_w.replaced, out_n.replaced)
+        host_n = dev_n.sync_to_engine()
+        host_w = dev_w.sync_to_engine()
+        shifted = host_n.ids.copy()
+        shifted[shifted >= 0] += BASE
+        np.testing.assert_array_equal(host_w.ids, shifted)
+        np.testing.assert_array_equal(host_w.valid, host_n.valid)
+        np.testing.assert_array_equal(host_w.scores, host_n.scores)
+
+
+# ---------------------------------------------------------------------- #
+# id_base plumbing: buffer weights + feature store
+# ---------------------------------------------------------------------- #
+class TestIdBasePlumbing:
+    def test_buffer_weights_rebase(self):
+        from repro.core.buffer import PersistentBuffer
+
+        w = np.linspace(1.0, 2.0, 10).astype(np.float32)
+        buf = PersistentBuffer(
+            capacity=4, policy="degree", node_weights=w, id_base=BASE
+        )
+        ids = np.array([BASE + 3, BASE + 7], dtype=np.int64)
+        buf.insert(ids)
+        for node, local in [(BASE + 3, 3), (BASE + 7, 7)]:
+            slot = buf._slot_of[node]
+            assert buf._weights[slot] == w[local]
+
+    def test_feature_store_global_ids(self):
+        rng = np.random.default_rng(0)
+        feats = rng.random((20, 4)).astype(np.float32)
+        part_of = np.arange(20) % 3
+        store = FeatureStore(feats, part_of, 3, backend="numpy", id_base=BASE)
+        ids = np.array([BASE, BASE + 7, BASE + 19], dtype=np.int64)
+        np.testing.assert_array_equal(
+            store.gather(ids), feats[[0, 7, 19]]
+        )
+        np.testing.assert_array_equal(
+            store.home_of(ids), part_of[[0, 7, 19]]
+        )
+        with pytest.raises(IndexError, match="out of range"):
+            store.gather(np.array([5], dtype=np.int64))  # un-based id
+
+    def test_graph_rebase(self):
+        g = generate("products", seed=0, scale=0.02)
+        gb = g.rebase(BASE)
+        assert gb.id_base == BASE and g.id_base == 0
+        assert gb.num_nodes == g.num_nodes
+        with pytest.raises(ValueError, match="id_base"):
+            g.rebase(-1)
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: trainer stream parity + big-id trace golden
+# ---------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_graph():
+    return generate("products", seed=0, scale=0.05)
+
+
+TRAIN_COMMON = dict(
+    epochs=1, batch_size=16, fanouts=(3, 5), train_model=False,
+    buffer_frac=0.25, interval=4,
+)
+
+
+def _digest(result):
+    return [
+        (
+            log.pct_hits, log.comm_volume, log.comm_missed, log.occupancy,
+            log.unique_remote, log.replaced, log.decisions, log.step_time,
+        )
+        for log in result.logs
+    ]
+
+
+class TestTrainerWideParity:
+    @pytest.mark.parametrize("variant", [
+        "distdgl", "fixed", "massivegnn", "rudder",
+    ])
+    @pytest.mark.parametrize("mode", ["async", "sync"])
+    def test_streams_bit_identical(self, small_graph, variant, mode):
+        kwargs = dict(variant=variant, mode=mode, **TRAIN_COMMON)
+        if variant == "rudder":
+            kwargs["deciders"] = ["gemma3-4b"]
+        r_narrow = DistributedTrainer(
+            partition_graph(small_graph, 2), device="jnp", **kwargs
+        ).run()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            r_wide = DistributedTrainer(
+                partition_graph(small_graph.rebase(BASE), 2),
+                device="jnp", **kwargs,
+            ).run()
+        assert _digest(r_wide) == _digest(r_narrow)
+
+    def test_wide_readback_cadence_parity(self, small_graph):
+        """K-step counter readback in wide mode reproduces the K=1 wide
+        run (the dual-plane candidate rotation under deferred sync)."""
+        parts_big = partition_graph(small_graph.rebase(BASE), 2)
+        kwargs = dict(variant="fixed", **TRAIN_COMMON)
+        r1 = DistributedTrainer(parts_big, device="jnp", **kwargs).run()
+        rk = DistributedTrainer(
+            parts_big, device="jnp", readback_every=4, **kwargs
+        ).run()
+        assert _digest(rk) == _digest(r1)
+
+    def test_degree_policy_weights_rebase_end_to_end(self, small_graph):
+        kwargs = dict(variant="fixed", policy="degree", **TRAIN_COMMON)
+        r_narrow = DistributedTrainer(
+            partition_graph(small_graph, 2), device="jnp", **kwargs
+        ).run()
+        r_wide = DistributedTrainer(
+            partition_graph(small_graph.rebase(BASE), 2),
+            device="jnp", **kwargs,
+        ).run()
+        assert _digest(r_wide) == _digest(r_narrow)
+
+    def test_staged_store_parity(self, small_graph):
+        kwargs = dict(variant="massivegnn", feature_store=True, **TRAIN_COMMON)
+        r_narrow = DistributedTrainer(
+            partition_graph(small_graph, 2), **kwargs
+        ).run()
+        r_wide = DistributedTrainer(
+            partition_graph(small_graph.rebase(BASE), 2), **kwargs
+        ).run()
+        assert _digest(r_wide) == _digest(r_narrow)
+        for la, lb in zip(r_narrow.logs, r_wide.logs):
+            assert la.feat_sums == lb.feat_sums
+            assert la.bytes_measured == lb.bytes_measured
+
+
+class TestBigIdTraceGolden:
+    def test_trace_arrays_match_narrow(self, small_graph):
+        """The synthetic big-id golden: a traced run above 2^31 must
+        reproduce the narrow trace array-for-array (including the
+        per-home pair matrices, which exercise the part_of rebase)."""
+        kwargs = dict(variant="massivegnn", trace=True, **TRAIN_COMMON)
+        r_narrow = DistributedTrainer(
+            partition_graph(small_graph, 2), **kwargs
+        ).run()
+        r_wide = DistributedTrainer(
+            partition_graph(small_graph.rebase(BASE), 2), **kwargs
+        ).run()
+        tn, tw = r_narrow.trace, r_wide.trace
+        assert set(tn.arrays) == set(tw.arrays)
+        # Prefetch-plane id streams are global: exactly BASE higher.
+        shifted = {"remote_flat", "miss_ids_flat", "placed_ids_flat"}
+        for name in tn.arrays:
+            a = np.asarray(tn.arrays[name])
+            b = np.asarray(tw.arrays[name])
+            if name in shifted:
+                np.testing.assert_array_equal(a + BASE, b, err_msg=name)
+            else:
+                np.testing.assert_array_equal(a, b, err_msg=name)
